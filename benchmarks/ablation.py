@@ -1,0 +1,67 @@
+"""Paper Fig. 10 + Tab. 6: span S and overlap O hyperparameter ablations.
+
+Fig. 10: PPL over (S, O) on language modeling — the paper finds S ~= L/4,
+O ~= S/2 best. Tab. 6: larger O helps global/synthetic tasks, hurts local QA
+— probed here via the retention proxy (global coverage vs local concentration).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import ladder
+from repro.serving.engine import Engine
+
+
+def ppl_for(cfg, params, span, overlap, budget=96, T=512):
+    c = common.with_policy(cfg, "lacache", budget, span=span, overlap=overlap)
+    eng = Engine(c, params, budget=budget)
+    co = common.corpus()
+    toks = np.stack([co.stream(T, seed=8000 + i) for i in range(3)])
+    return float(np.exp(eng.score_stream(toks).mean()))
+
+
+def main(quick: bool = False):
+    cfg, params = common.bench_model()
+    L = cfg.n_layers
+    t0 = time.perf_counter()
+    grid = {}
+    spans = [max(1, L // 8), L // 4, L // 2, L]
+    for S in spans:
+        for O in sorted({0, S // 4, S // 2}):
+            if O >= S and S > 1:
+                continue
+            grid[f"S={S},O={O}"] = ppl_for(cfg, params, S, O,
+                                           T=256 if quick else 512)
+    print("span/overlap PPL grid:")
+    for k, v in sorted(grid.items(), key=lambda kv: kv[1]):
+        print(f"  {k:12s} ppl={v:.3f}")
+
+    # Tab. 6 proxy: overlap widens union coverage (global) at the cost of
+    # per-layer span concentration (local)
+    cov = {}
+    for O in (0, L // 8, L // 4):
+        spec = ladder.LadderSpec(n_layers=L, span=L // 2, overlap=O, chunk=4,
+                                 n_sink=4, n_recent=16, budget=96)
+        sim = ladder.simulate_stream(spec, 800)
+        cov[f"O={O}"] = {
+            "union_span": sim.union_span(),
+            "mean_per_layer": float(np.mean(sim.coverage())),
+        }
+    print("overlap coverage proxy:", cov)
+    dt = time.perf_counter() - t0
+    with open(os.path.join(common.RESULTS, "ablation.json"), "w") as f:
+        json.dump({"ppl_grid": grid, "coverage": cov}, f, indent=1)
+
+    best = min(grid, key=grid.get)
+    common.emit("ablation_span_overlap", dt * 1e6 / max(1, len(grid)),
+                f"best={best};ppl={grid[best]:.3f}")
+    return grid
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Shared benchmark infrastructure: the evaluation model (trained once and
+checkpointed), timing and CSV helpers.
+
+All paper-table benchmarks run on ``bench_model()`` — a llama-family miniature
+(paper models are Llama2/3; absolute PPLs differ by construction, the claims
+validated are orderings/scalings — DESIGN.md §8)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.data.pipeline import CorpusConfig, SyntheticCorpus, lm_batches
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.train import trainer
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+VOCAB = 512
+SEQ = 256          # training context length; PPL explosion expected beyond
+BENCH_LAYERS = 8
+
+
+def bench_cfg(**kw) -> ModelConfig:
+    d = dict(
+        name="bench-llama-mini", arch_type="dense", n_layers=BENCH_LAYERS,
+        d_model=128, n_heads=8, n_kv_heads=4, head_dim=16, d_ff=384,
+        vocab_size=VOCAB, dtype="float32", rope_theta=1e4,
+        lacache=LaCacheConfig(budget=96, n_sink=4, n_recent=16, chunk=4))
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+def corpus() -> SyntheticCorpus:
+    # long-range-heavy mixture: frequent copy events reaching far beyond the
+    # LaCache budget give the eviction policies something real to disagree on
+    return SyntheticCorpus(CorpusConfig(
+        vocab_size=VOCAB, seed=7, p_copy=0.08, copy_len=(24, 96),
+        copy_back=(96, 1536), p_motif=0.3))
+
+
+def bench_model(steps: int = 500, force: bool = False
+                ) -> Tuple[ModelConfig, Dict]:
+    """Train (or load) the shared evaluation model."""
+    cfg = bench_cfg()
+    path = os.path.join(RESULTS, "bench_model.npz")
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    if os.path.exists(path) and not force:
+        return cfg, ckpt.load(path, params)
+    co = corpus()
+    params, hist = trainer.train(
+        cfg, params, lm_batches(co, 16, SEQ, steps),
+        AdamWConfig(lr=2e-3, warmup_steps=30, total_steps=steps),
+        log_every=50)
+    ckpt.save(path, params)
+    print(f"[bench_model] trained {steps} steps, "
+          f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
+    return cfg, params
+
+
+def with_policy(cfg: ModelConfig, policy: str, budget: int, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, lacache=dataclasses.replace(
+        cfg.lacache, policy=policy, budget=budget, **kw))
+
+
+def timer(fn, *args, reps: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps, r
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

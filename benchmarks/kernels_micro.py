@@ -1,0 +1,43 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness-path
+timing only) vs XLA reference implementations; documents the compaction cost
+amortization that makes iterative compaction cheap (1/(budget-keep) steps)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def main(quick: bool = False):
+    rng = np.random.default_rng(0)
+    b, s, kv, hd = 4, 1024, 8, 64
+    h = 32
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    length = jnp.asarray(s, jnp.int32)
+
+    f_dec = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l,
+                                                            impl="xla"))
+    us, _ = common.timer(f_dec, q, k, v, length, reps=10)
+    common.emit("decode_attention_xla_1k", us[0] * 1e6 if isinstance(us, tuple)
+                else us * 1e6, f"batch={b};slots={s}")
+
+    perm = jnp.asarray(rng.permutation(s), jnp.int32)
+    f_cmp = jax.jit(lambda x, p: ops.gather_compact(x, p, jnp.asarray(s // 2),
+                                                    impl="xla"))
+    us2, _ = common.timer(f_cmp, k, perm, reps=10)
+    # amortization: one compaction frees ~half the budget -> cost/step is
+    # compact_us / (s/2)
+    common.emit("ladder_compact_xla_1k", us2 * 1e6,
+                f"amortized_us_per_decode_step={us2*1e6/(s/2):.3f}")
+    return {"decode_us": us * 1e6, "compact_us": us2 * 1e6}
+
+
+if __name__ == "__main__":
+    main()

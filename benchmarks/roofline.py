@@ -1,0 +1,116 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline): three terms per
+(arch x shape x mesh) from the dry-run artifacts in results/dryrun/.
+
+  compute    = FLOPs / (chips x 197 TF/s bf16)
+  memory     = HBM bytes / (chips x 819 GB/s)
+  collective = per-device collective bytes / (2 links x 50 GB/s)
+
+FLOPs/bytes use the analytic models (launch/analytic.py) because XLA's
+HloCostAnalysis counts while bodies once (documented in §Dry-run); collective
+bytes come from the trip-count-weighted post-SPMD HLO parse
+(launch/hlo_analysis.py) and are already per-device quantities.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+LINKS = 2.0  # usable ICI links per chip for the dominant collective dim (v5e 2D torus per axis)
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    n = rec["n_devices"]
+    fl = rec["analytic_flops"]["total"] / n
+    hb = rec["analytic_hbm_bytes"]["total"] / n
+    coll = rec["collectives"]["total_bytes"]  # already per-device program
+    t_c = fl / PEAK_FLOPS_BF16
+    t_m = hb / HBM_BW
+    t_x = coll / (LINKS * ICI_BW)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    useful = rec["model_flops_global"] / max(rec["analytic_flops"]["total"], 1)
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "useful_flops_frac": useful,
+            "bound_s": max(t_c, t_m, t_x)}
+
+
+MOVES = {
+    ("compute", "train"): "more TP on d_ff / larger per-chip batch won't help — already MXU-bound; next lever is remat policy (drop recompute)",
+    ("compute", "prefill"): "attention is the quadratic term: block-sparse or sliding-window prefill, or LaCache streaming-prefill to cut ctx",
+    ("compute", "decode"): "decode should not be compute-bound — check per-chip batch; shrink TP degree",
+    ("memory", "decode"): "weights+cache streaming bound: LaCache budget directly cuts cache bytes; weight-quantization or larger batch amortizes weights",
+    ("memory", "train"): "activation traffic: tighter remat policy / fused attention keeps working set in VMEM",
+    ("memory", "prefill"): "KV write + activation traffic: fuse attention, bf16 cache",
+    ("collective", "train"): "grad all-reduce dominates: reduce-scatter+bf16 grads, overlap with backprop",
+    ("collective", "decode"): "per-step activation all-reduces: shrink TP for small models, or batch more tokens per step",
+    ("collective", "prefill"): "all-gather of FSDP weights: prefetch/overlap or switch FSDP->pure TP for prefill",
+}
+
+
+def mode_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def main(quick: bool = False):
+    recs = [r for r in load_records() if r["mesh"] == "16x16"]
+    if not recs:
+        print("no dry-run records found; run repro.launch.dryrun --all first")
+        return {}
+    rows = []
+    for r in recs:
+        t = roofline_terms(r)
+        rows.append((r, t))
+    rows.sort(key=lambda rt: (rt[0]["shape"], -rt[1]["bound_s"]))
+    print(f"{'arch':24s}{'shape':13s}{'compute_s':>11s}{'memory_s':>11s}"
+          f"{'collect_s':>11s} {'dominant':>10s} {'useful':>7s}")
+    for r, t in rows:
+        print(f"{r['arch']:24s}{r['shape']:13s}{t['compute_s']:>11.4g}"
+              f"{t['memory_s']:>11.4g}{t['collective_s']:>11.4g}"
+              f" {t['dominant']:>10s} {t['useful_flops_frac']:>7.2f}")
+    out = {f"{r['arch']}|{r['shape']}|{r['policy']}": t for r, t in rows}
+    with open(os.path.join(DRYRUN_DIR, "..", "roofline.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+    worst = min(rows, key=lambda rt: rt[1]["useful_flops_frac"])
+    most_coll = max(rows, key=lambda rt: rt[1]["collective_s"]
+                    / max(rt[1]["bound_s"], 1e-12))
+    from benchmarks.common import emit
+    emit("roofline", 0.0,
+         f"n_pairs={len(rows)};worst_useful={worst[0]['arch']}/"
+         f"{worst[0]['shape']};most_collective={most_coll[0]['arch']}/"
+         f"{most_coll[0]['shape']}")
+    return out
+
+
+def markdown_table() -> str:
+    recs = [r for r in load_records() if r["mesh"] == "16x16"]
+    lines = ["| arch | shape | policy | compute (s) | memory (s) | collective (s) "
+             "| dominant | MODEL/HLO useful | next lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["shape"], x["arch"])):
+        t = roofline_terms(r)
+        lever = MOVES[(t["dominant"], mode_of(r["shape"]))]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']} "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+            f"| {t['collective_s']:.4g} | **{t['dominant']}** "
+            f"| {t['useful_flops_frac']:.2f} | {lever} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark driver — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (plus each module's own
+human-readable tables above its CSV line).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep sizes (CI mode)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (ablation, kernels_micro, needle, pattern_pareto,
+                            pg19_stream, roofline, throughput, wikitext_ppl)
+    from benchmarks import common
+
+    suites = {
+        "wikitext_ppl": wikitext_ppl.main,      # paper Tab. 1 + Tab. 2
+        "pg19_stream": pg19_stream.main,        # paper Fig. 5 / Fig. 6
+        "pattern_pareto": pattern_pareto.main,  # paper Fig. 3
+        "needle": needle.main,                  # paper Fig. 8 / Fig. 9
+        "ablation": ablation.main,              # paper Fig. 10 + Tab. 6
+        "throughput": throughput.main,          # paper Fig. 7
+        "kernels_micro": kernels_micro.main,    # TPU-kernel substrate
+        "roofline": roofline.main,              # EXPERIMENTS.md §Roofline
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    # ensure the shared eval model exists (trains once, ~minutes on CPU)
+    common.bench_model(steps=120 if args.quick else 300)
+
+    failures = 0
+    for name, fn in suites.items():
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn(quick=args.quick)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {name}")
+            traceback.print_exc()
+        print(f"----- {name} done in {time.perf_counter()-t0:.1f}s -----",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Fig. 7: accuracy-throughput trade-off across eviction policies.
+
+LaCache/StreamingLLM are attention-score-free and run the fused decode path;
+H2O and TOVA must materialize attention probabilities
+(FlashAttention-incompatible) and pay the probability materialization plus
+score bookkeeping — the throughput axis of Fig. 7. Quality axis: PPL on the
+shared eval stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+
+def decode_throughput(cfg, params, policy, budget, batch=8, steps=40):
+    c = common.with_policy(cfg, policy, budget)
+    eng = Engine(c, params, budget=budget)
+    state = eng.new_state(batch)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    # fill the cache first so compaction costs are included
+    for _ in range(budget + 8):
+        _, state = eng._decode(eng.params, state=state, tokens=tok)
+    jax.block_until_ready(state["pos"])
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        logits, state = eng._decode(eng.params, state=state, tokens=tok)
+    jax.block_until_ready(logits)
+    dt = (time.perf_counter() - t0) / steps
+    return dt * 1e6, batch / dt  # us/step, tok/s
+
+
+def main(quick: bool = False):
+    cfg, params = common.bench_model()
+    budget = 96
+    T = 256 if quick else 512
+    co = common.corpus()
+    toks = np.stack([co.stream(T, seed=600 + i) for i in range(2)])
+    out = {}
+    t0 = time.perf_counter()
+    for policy in ("lacache", "streaming", "h2o", "tova", "full"):
+        b = T if policy == "full" else budget
+        us, tps = decode_throughput(cfg, params, policy, b,
+                                    steps=20 if quick else 40)
+        c = common.with_policy(cfg, policy, b)
+        eng = Engine(c, params, budget=b)
+        ppl = float(np.exp(eng.score_stream(toks).mean()))
+        out[policy] = {"us_per_step": us, "tok_per_s": tps, "ppl": ppl,
+                       "budget": b}
+        print(f"{policy:10s} budget={b:4d} {us:9.1f} us/step "
+              f"{tps:9.1f} tok/s  ppl={ppl:.3f}")
+    dt = time.perf_counter() - t0
+    with open(os.path.join(common.RESULTS, "throughput.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    speedup = out["h2o"]["us_per_step"] / out["lacache"]["us_per_step"]
+    common.emit("throughput", out["lacache"]["us_per_step"],
+                f"lacache_vs_h2o_speedup={speedup:.2f};"
+                f"ppl_lacache={out['lacache']['ppl']:.3f};"
+                f"ppl_h2o={out['h2o']['ppl']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""The paper's Sec 3.3 claim, live: generate indefinitely through a
+fixed-size cache, printing the cache occupancy as iterative compaction
+fires (ladder pattern re-applied whenever a layer's budget fills).
+
+  PYTHONPATH=src python examples/infinite_generation.py [--tokens 512]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, corpus, with_policy
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--budget", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg, params = bench_model()
+    c = with_policy(cfg, "lacache", args.budget)
+    eng = Engine(c, params, budget=args.budget)
+    co = corpus()
+    prompt = np.stack([co.stream(64, seed=5)])
+    logits, state = eng.prefill(jnp.asarray(prompt))
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    lengths_trace = []
+    for i in range(args.tokens):
+        logits, state = eng._decode(eng.params, state=state, tokens=tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        if (i + 1) % 64 == 0:
+            # per-layer occupied slots (post-compaction lengths differ by rung)
+            lens = np.asarray(jax.tree.leaves(
+                {k: v.length for k, v in state["blocks"].items()})[0])
+            lengths_trace.append((i + 1, int(state["pos"]), lens.tolist()))
+            print(f"step {i+1:5d} abs-pos {int(state['pos']):6d} "
+                  f"per-layer cache lengths {lens.tolist()} "
+                  f"(budget {args.budget})")
+    final = lengths_trace[-1][2]
+    assert max(final) <= args.budget
+    print(f"\ndecoded {args.tokens} tokens; cache never exceeded "
+          f"{args.budget} slots/layer. Memory is O(1) in output length.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: train a tiny llama-family model on the synthetic corpus, then
+serve it with LaCache and watch the cache stay constant-size while decoding
+far past the budget.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.data.pipeline import CorpusConfig, SyntheticCorpus, lm_batches
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import Engine
+from repro.train import trainer
+
+
+def main():
+    cfg = ModelConfig(
+        name="quickstart", arch_type="dense", n_layers=4, d_model=128,
+        n_heads=8, n_kv_heads=4, head_dim=16, d_ff=384, vocab_size=512,
+        dtype="float32",
+        lacache=LaCacheConfig(budget=96, n_sink=4, n_recent=16, chunk=4))
+
+    print("== 1. init + train 80 steps ==")
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=512))
+    params, hist = trainer.train(
+        cfg, params, lm_batches(corpus, 8, 128, 80),
+        AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=80), log_every=20)
+
+    print("\n== 2. serve with LaCache (budget 96 slots/layer) ==")
+    eng = Engine(cfg, params, budget=96)
+    prompt = np.stack([corpus.stream(300, seed=1)])  # 3x over budget
+    out = eng.generate(prompt, 32)
+    print("generated 32 tokens:", out[0].tolist())
+
+    print("\n== 3. O(1) memory check ==")
+    state = eng.new_state(1)
+    print(f"cache bytes (independent of sequence length): "
+          f"{eng.cache_bytes(state)/1e6:.2f} MB")
+    nll = eng.score_stream(np.stack([corpus.stream(600, seed=2)]))
+    print(f"streamed 600 tokens through a 96-slot cache; "
+          f"mean NLL {nll.mean():.3f} (finite => continuous generation works)")
+
+
+if __name__ == "__main__":
+    main()

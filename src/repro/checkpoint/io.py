@@ -1,0 +1,56 @@
+"""Flat-npz pytree checkpointing (no orbax offline).
+
+Pytree structure is encoded in the key paths; restores exactly for
+dict/list/tuple/NamedTuple nests of arrays.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}[{i}]"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}.{k}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (treedef donor)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k), f"{prefix}.{k}")
+                                for k in tree._fields))
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}[{i}]")
+                              for i, v in enumerate(tree))
+        if tree is None:
+            return None
+        return jax.numpy.asarray(data[prefix])
+
+    return rebuild(like)

@@ -1,0 +1,34 @@
+"""Architecture config registry (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, LaCacheConfig, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "grok-1-314b": "grok_1_314b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-small": "whisper_small",
+    "llama3.2-1b": "llama3_2_1b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "gemma3-27b": "gemma3_27b",
+    "granite-20b": "granite_20b",
+    "llama2-7b": "llama2_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "llama2-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: get_config(k) for k in _MODULES}

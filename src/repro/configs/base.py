@@ -1,0 +1,240 @@
+"""Config dataclasses for the repro framework.
+
+Every architecture in ``repro/configs/<id>.py`` instantiates :class:`ModelConfig`.
+Configs are immutable; use :func:`dataclasses.replace` to derive variants
+(e.g. the reduced smoke-test variants via :func:`ModelConfig.reduced`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class LaCacheConfig:
+    """Configuration of the paper's technique (LaCache, ICML 2025).
+
+    ``span``/``overlap`` default to the paper's language-modeling settings
+    (S = L_attn/4, O = S/2) when left as None; they are resolved against the
+    number of *cache-bearing* (attention) layers, not physical layers.
+    """
+
+    budget: int = 1024          # per-layer KV slot budget B
+    n_sink: int = 4             # pinned attention-sink slots
+    n_recent: int = 128         # always-kept most-recent slots
+    span: Optional[int] = None  # S: layers retaining the same token chunk
+    overlap: Optional[int] = None  # O: band overlap between consecutive rungs
+    chunk: int = 16             # C: tokens per ladder rung chunk
+    rope_mode: str = "cache"    # "cache" (slot-relative) | "original"
+    policy: str = "lacache"     # lacache | streaming | h2o | full
+    fused_compaction: bool = True  # compaction inside serve_step (lax.cond)
+
+    def resolve(self, n_attn_layers: int) -> "LaCacheConfig":
+        span = self.span
+        if span is None:
+            span = max(1, n_attn_layers // 4)
+        span = min(span, n_attn_layers)
+        overlap = self.overlap
+        if overlap is None:
+            overlap = span // 2
+        overlap = min(overlap, span - 1) if span > 1 else 0
+        return dataclasses.replace(self, span=span, overlap=overlap)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """Resolved per-layer structure."""
+
+    kind: str            # "attn" | "mamba"
+    attn: Optional[str] = None   # "global" | "local" (sliding window)
+    moe: bool = False
+    cache_ord: int = -1  # ordinal among cache-bearing attention layers (-1: none)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str              # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # --- attention ---
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e4
+    pos_emb: str = "rope"       # "rope" | "abs" (whisper)
+    sliding_window: int = 0     # window size for "local" layers
+    local_global_pattern: int = 0  # N -> N local : 1 global; 0 = all global
+    mrope: bool = False         # Qwen2-VL M-RoPE (temporal/height/width sections)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1          # MoE on layers with i % moe_every == moe_every-1
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024  # GShard dispatch group S; dispatch FLOPs
+                                # scale as cf*k*S per token (§Perf iter 3)
+    router_aux_weight: float = 0.01
+    # --- SSM / hybrid ---
+    attn_every: int = 0         # 0: all attention; -1: no attention (pure SSM);
+                                # k>1: attention on layers with i % k == k//2
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    n_audio_frames: int = 1500
+    # --- VLM stub ---
+    n_patches: int = 0          # prefix patch-embedding slots fed by the stub
+    # --- misc ---
+    norm_eps: float = 1.0e-5
+    tie_embeddings: bool = False
+    act: str = "silu"
+    mlp_gated: bool = True
+    max_position: int = 131072
+    bf16_boundary_accum: bool = False  # accumulate the TP-boundary matmuls
+                                       # (wo/w_down) in bf16 so SPMD partial-
+                                       # sum all-reduces move bf16 not f32
+                                       # (§Perf iter 2d; small numeric cost)
+    dtype: str = "bfloat16"
+    lacache: LaCacheConfig = field(default_factory=LaCacheConfig)
+    source: str = ""            # provenance citation
+
+    # ------------------------------------------------------------------ #
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 for TP sharding (Megatron-style).
+        Loss/targets use the logical ``vocab_size``; only the embedding and
+        lm_head tensors are padded."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else max(1, math.ceil(self.d_model / 16))
+
+    def layer_specs(self) -> List[LayerSpec]:
+        specs: List[LayerSpec] = []
+        ord_ = 0
+        for i in range(self.n_layers):
+            if self.attn_every == -1:
+                kind = "mamba"
+            elif self.attn_every in (0, 1):
+                kind = "attn"
+            else:
+                kind = "attn" if i % self.attn_every == self.attn_every // 2 else "mamba"
+            attn = None
+            if kind == "attn":
+                if self.local_global_pattern > 0:
+                    p = self.local_global_pattern + 1
+                    attn = "global" if i % p == p - 1 else "local"
+                else:
+                    attn = "global"
+            moe = self.n_experts > 0 and (i % self.moe_every == self.moe_every - 1)
+            cache_ord = -1
+            if kind == "attn" and attn == "global":
+                cache_ord = ord_
+                ord_ += 1
+            specs.append(LayerSpec(kind=kind, attn=attn, moe=moe, cache_ord=cache_ord))
+        return specs
+
+    @property
+    def n_cache_layers(self) -> int:
+        """Number of global-attention (budgeted-cache-bearing) layers."""
+        return sum(1 for s in self.layer_specs() if s.cache_ord >= 0)
+
+    @property
+    def n_local_layers(self) -> int:
+        return sum(1 for s in self.layer_specs() if s.attn == "local")
+
+    @property
+    def n_mamba_layers(self) -> int:
+        return sum(1 for s in self.layer_specs() if s.kind == "mamba")
+
+    def scan_period(self) -> int:
+        """Length of the repeating layer pattern (for lax.scan over periods)."""
+        p = 1
+        if self.attn_every > 1:
+            p = _lcm(p, self.attn_every)
+        if self.local_global_pattern > 0:
+            p = _lcm(p, self.local_global_pattern + 1)
+        if self.n_experts > 0 and self.moe_every > 1:
+            p = _lcm(p, self.moe_every)
+        return p
+
+    def resolved_lacache(self) -> LaCacheConfig:
+        return self.lacache.resolve(max(1, self.n_cache_layers))
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Reduced smoke-test variant of the same family (CPU-runnable)."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        # preserve GQA/MQA character
+        if self.n_kv_heads == 1:
+            n_kv = 1
+        elif self.n_kv_heads < self.n_heads:
+            n_kv = max(1, n_heads // 2)
+        else:
+            n_kv = n_heads
+        period = self.scan_period()
+        n_layers = max(2, period)  # keep one full pattern period
+        kw = dict(
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=64,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            n_audio_frames=16 if self.encoder_layers else self.n_audio_frames,
+            n_patches=8 if self.n_patches else 0,
+            max_position=8192,
+            dtype="float32",
+            lacache=dataclasses.replace(
+                self.lacache, budget=64, n_sink=2, n_recent=8, chunk=2,
+                span=None, overlap=None),
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else 0,
+            mrope_sections=(8, 12, 12),  # sums to head_dim(64)/2
+        )
+        kw.update(overrides)
+        return dataclasses.replace(self, **kw)
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned (input-shape) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

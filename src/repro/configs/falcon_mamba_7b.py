@@ -1,0 +1,16 @@
+"""falcon-mamba-7b [ssm] — mamba1, attention-free. [arXiv:2410.05355]
+
+KV-free: the paper's technique is inapplicable by construction
+(DESIGN.md §5) — O(1) recurrent state is the native contrast to LaCache's
+O(1) compacted cache.
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", arch_type="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1, head_dim=64,
+    d_ff=0, vocab_size=65024, attn_every=-1,
+    d_state=16, d_conv=4, expand=2,
+    lacache=LaCacheConfig(),
+    source="arXiv:2410.05355",
+)

@@ -1,0 +1,16 @@
+"""gemma3-27b [dense] — 5:1 local:global sliding window, 128k context.
+[hf:google/gemma-3-1b-pt (family card)]
+
+Local layers use their native 1024-token sliding window (already O(1));
+the LaCache ladder applies to the 1-in-6 global layers (DESIGN.md §5).
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b", arch_type="dense",
+    n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=21504, vocab_size=262144,
+    local_global_pattern=5, sliding_window=1024, rope_theta=1.0e6,
+    act="gelu", lacache=LaCacheConfig(),
+    source="hf:google/gemma-3-1b-pt",
+)

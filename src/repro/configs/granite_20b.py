@@ -1,0 +1,14 @@
+"""granite-20b [dense] — llama-arch code model, MQA (kv=1). [arXiv:2405.04324]
+
+With kv_heads=1 < |model| the cache shards over the slot axis instead of
+heads (DESIGN.md §4) — the partial-softmax all-reduce case.
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b", arch_type="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+    d_ff=24576, vocab_size=49152,
+    lacache=LaCacheConfig(),
+    source="arXiv:2405.04324",
+)

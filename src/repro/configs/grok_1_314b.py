@@ -1,0 +1,11 @@
+"""grok-1-314b [moe] — 8 experts top-2. [hf:xai-org/grok-1]"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", arch_type="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072, n_experts=8, top_k=2,
+    rope_theta=1.0e4, act="gelu", mlp_gated=True,
+    lacache=LaCacheConfig(),
+    source="hf:xai-org/grok-1",
+)

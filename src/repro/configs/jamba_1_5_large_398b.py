@@ -1,0 +1,17 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887]
+
+Ladder span is computed over the 9 attention layers only (DESIGN.md §5);
+Mamba layers carry recurrent state.
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", arch_type="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=65536,
+    attn_every=8, n_experts=16, top_k=2, moe_every=2,
+    d_state=16, d_conv=4, expand=2,
+    lacache=LaCacheConfig(),
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,11 @@
+"""llama2-7b — the paper's own primary evaluation model (Tab. 1).
+[hf:meta-llama/Llama-2-7b]"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab_size=32000, rope_theta=1.0e4,
+    lacache=LaCacheConfig(budget=512, n_sink=4, n_recent=128),
+    source="hf:meta-llama/Llama-2-7b (paper Tab. 1)",
+)

@@ -1,0 +1,10 @@
+"""llama3.2-1b [dense] — small llama3. [hf:meta-llama/Llama-3.2-1B]"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b", arch_type="dense",
+    n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab_size=128256, rope_theta=5.0e5, tie_embeddings=True,
+    lacache=LaCacheConfig(),
+    source="hf:meta-llama/Llama-3.2-1B",
+)

@@ -1,0 +1,11 @@
+"""qwen1.5-110b [dense] — QKV bias. [hf:Qwen/Qwen1.5-0.5B (family card)]"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", arch_type="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=49152, vocab_size=152064, qkv_bias=True,
+    rope_theta=1.0e6,
+    lacache=LaCacheConfig(),
+    source="hf:Qwen/Qwen1.5-0.5B",
+)

@@ -1,0 +1,18 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution (vision stub). [arXiv:2409.12191]
+
+The ViT/projector frontend is stubbed per assignment: ``input_specs`` feeds
+precomputed patch embeddings; this config is the LM decoder backbone.
+M-RoPE forces rope_mode="original" (patch 2D positions live in the cache keys;
+text decode rotates with plain RoPE, exactly equivalent for equal components).
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", arch_type="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, head_dim=128,
+    d_ff=8960, vocab_size=151936,
+    mrope=True, mrope_sections=(16, 24, 24), n_patches=1024,
+    rope_theta=1.0e6, qkv_bias=True,
+    lacache=LaCacheConfig(rope_mode="original"),
+    source="arXiv:2409.12191",
+)

@@ -1,0 +1,17 @@
+"""whisper-small [audio] — enc-dec; conv/mel frontend stubbed to frame
+embeddings per assignment. [arXiv:2212.04356]
+
+Decoder self-attention gets the LaCache budgeted cache; cross-attention KV
+(1500 encoder frames) is static and never evicted (DESIGN.md §5).
+"""
+from repro.configs.base import LaCacheConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", arch_type="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab_size=51865,
+    encoder_layers=12, cross_attention=True, n_audio_frames=1500,
+    pos_emb="abs", act="gelu", mlp_gated=False,
+    lacache=LaCacheConfig(),
+    source="arXiv:2212.04356",
+)

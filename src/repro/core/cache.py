@@ -1,0 +1,255 @@
+"""Functional, fixed-shape KV cache with LaCache iterative compaction.
+
+All state is a pytree of fixed-shape arrays (SPMD/jit friendly — DESIGN.md §4):
+
+* ``k``/``v``: ``[batch, n_slots, kv_heads, head_dim]`` slot buffers,
+* ``pos``:    ``[n_slots]`` original token position per slot (-1 = empty);
+  batch-uniform because the engine decodes lockstep batches,
+* ``length``: scalar int32 — occupied prefix (survivors are left-compacted,
+  so slot order == age order, the invariant iterative compaction relies on),
+* ``scores``: ``[n_slots]`` accumulated attention mass (H2O policy only).
+
+This module is per-layer; the model stacks layer caches as scan xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ladder
+from repro.core.ladder import LadderSpec
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+    length: jnp.ndarray
+    scores: Optional[jnp.ndarray] = None
+
+    @property
+    def n_slots(self) -> int:
+        return self.k.shape[1]
+
+    def valid_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.n_slots) < self.length
+
+
+class CrossKVCache(NamedTuple):
+    """Static (never-evicted) cross-attention cache (whisper)."""
+
+    k: jnp.ndarray  # [batch, n_frames, kv_heads, head_dim]
+    v: jnp.ndarray
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # [batch, d_conv - 1, d_inner]
+    ssm: jnp.ndarray   # [batch, d_inner, d_state]
+
+
+def init_cache(batch: int, n_slots: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16, with_scores: bool = False) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, n_slots, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, n_slots, kv_heads, head_dim), dtype),
+        pos=jnp.full((n_slots,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+        scores=jnp.zeros((n_slots,), jnp.float32) if with_scores else None,
+    )
+
+
+def append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+           pos_new: jnp.ndarray) -> KVCache:
+    """Append ``T_new`` tokens at the occupied prefix end.
+
+    Caller must guarantee ``length + T_new <= n_slots`` (via compaction).
+    k_new/v_new: [batch, T_new, kv_heads, head_dim]; pos_new: [T_new] int32.
+    """
+    t_new = k_new.shape[1]
+    at = cache.length
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, at, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, at, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache.pos, pos_new.astype(jnp.int32), (at,))
+    return cache._replace(k=k, v=v, pos=pos, length=cache.length + t_new)
+
+
+# --------------------------------------------------------------------------- #
+# Policies: which slots survive a compaction pass
+# --------------------------------------------------------------------------- #
+def keep_mask(policy: str, spec: LadderSpec, cache: KVCache, layer) -> jnp.ndarray:
+    n_slots = cache.n_slots
+    if policy == "lacache":
+        return ladder.ladder_keep_mask(spec, n_slots, cache.length, layer)
+    if policy == "streaming":
+        return ladder.streaming_keep_mask(spec, n_slots, cache.length, layer)
+    if policy in ("h2o", "tova"):
+        return _h2o_keep_mask(spec, cache)   # TOVA: same top-scored rule,
+                                             # scores are last-step not summed
+    if policy == "full":
+        return cache.valid_mask()
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def _h2o_keep_mask(spec: LadderSpec, cache: KVCache) -> jnp.ndarray:
+    """H2O (Zhang et al., 2024): retain heavy hitters by accumulated attention.
+
+    Keeps sinks + recent window + the top-scored half of the middle region.
+    Requires ``cache.scores`` (attention probabilities — the XLA attention
+    path only; this is the paper's FlashAttention-incompatibility argument).
+    """
+    assert cache.scores is not None, "h2o policy requires attention scores"
+    n_slots = cache.n_slots
+    slot = jnp.arange(n_slots)
+    occupied = slot < cache.length
+    is_sink = slot < spec.n_sink
+    is_recent = slot >= (cache.length - spec.n_recent)
+    middle = occupied & ~is_sink & ~is_recent
+    n_middle = jnp.sum(middle)
+    n_keep = n_middle // 2
+    neg = jnp.finfo(jnp.float32).min
+    sc = jnp.where(middle, cache.scores, neg)
+    # threshold at the n_keep-th largest middle score
+    order = jnp.argsort(-sc)                      # descending
+    rank = jnp.argsort(order)                     # rank of each slot
+    top = middle & (rank < n_keep)
+    return (is_sink | is_recent | top) & occupied
+
+
+def compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
+            gather_fn=None, rope_theta=None) -> KVCache:
+    """One compaction pass: drop non-kept slots, left-compact survivors.
+
+    ``rope_theta``: when keys are stored rotated by their *slot* index
+    (cache-relative RoPE, §Perf iter 1c), compaction must re-rotate moved
+    keys by the slot delta. R(a)R(b) = R(a+b), so applying RoPE with
+    position (new_slot - old_slot) is exact — O(budget) work only on the
+    rare compaction step instead of O(budget) re-rotation every step."""
+    keep = keep_mask(policy, spec, cache, layer)
+    perm, new_len = ladder.compaction_perm(keep)
+    if gather_fn is None:
+        from repro.kernels import ops as kops
+        gather_fn = kops.gather_compact
+    slot = jnp.arange(cache.n_slots)
+    live = slot < new_len
+    k = gather_fn(cache.k, perm, new_len)
+    if rope_theta is not None:
+        from repro.models.common import apply_rope
+        delta = jnp.where(live, slot - perm, 0)
+        k = apply_rope(k, delta[None], rope_theta)
+    v = gather_fn(cache.v, perm, new_len)
+    pos = jnp.where(live, cache.pos[perm], -1)
+    scores = None
+    if cache.scores is not None:
+        scores = jnp.where(live, cache.scores[perm], 0.0)
+    return KVCache(k=k, v=v, pos=pos, length=new_len, scores=scores)
+
+
+def _force_evict(cache: KVCache, spec: LadderSpec, n_free: int,
+                 rope_theta=None) -> KVCache:
+    """Recency-truncation fallback: guarantee >= n_free free slots (degenerate
+    geometries where a ladder pass frees nothing, e.g. span == n_layers)."""
+    slot = jnp.arange(cache.n_slots)
+    target = cache.n_slots - n_free
+    keep = ((slot < spec.n_sink)
+            | (slot >= cache.length - (target - spec.n_sink))) \
+        & (slot < cache.length)
+    perm, new_len = ladder.compaction_perm(keep)
+    live = slot < new_len
+    from repro.kernels import ops as kops
+    k = kops.gather_compact(cache.k, perm, new_len)
+    if rope_theta is not None:
+        from repro.models.common import apply_rope
+        k = apply_rope(k, jnp.where(live, slot - perm, 0)[None], rope_theta)
+    return KVCache(
+        k=k, v=kops.gather_compact(cache.v, perm, new_len),
+        pos=jnp.where(live, cache.pos[perm], -1), length=new_len,
+        scores=None if cache.scores is None
+        else jnp.where(live, cache.scores[perm], 0.0))
+
+
+def maybe_compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
+                  n_incoming: int = 1, rope_theta=None) -> KVCache:
+    """Compact iff the incoming tokens would overflow the buffer (lax.cond).
+    A second forced recency pass guarantees space even when the policy pass
+    frees nothing."""
+    if policy == "full":
+        return cache
+    need = cache.length + n_incoming > cache.n_slots
+
+    def do(c):
+        c = compact(c, spec, layer, policy, rope_theta=rope_theta)
+        still = c.length + n_incoming > c.n_slots
+        return jax.lax.cond(
+            still,
+            lambda cc: _force_evict(cc, spec, n_incoming, rope_theta),
+            lambda cc: cc, c)
+
+    return jax.lax.cond(need, do, lambda c: c, cache)
+
+
+def compact_to_budget(cache: KVCache, spec: LadderSpec, layer, policy: str,
+                      target: int, max_passes: int = 8,
+                      rope_theta=None) -> KVCache:
+    """Iterated compaction until ``length <= target`` (dense-prefill path).
+
+    A final recency-truncation pass guarantees termination (needed only in
+    degenerate geometries where the ladder fixed point exceeds the target).
+    """
+    def cond(state):
+        c, i = state
+        return (c.length > target) & (i < max_passes)
+
+    def body(state):
+        c, i = state
+        return compact(c, spec, layer, policy, rope_theta=rope_theta), i + 1
+
+    cache, _ = jax.lax.while_loop(cond, body, (cache, jnp.zeros((), jnp.int32)))
+
+    # hard guarantee: keep sinks + newest (target - n_sink)
+    def truncate(c):
+        slot = jnp.arange(c.n_slots)
+        keep = ((slot < spec.n_sink) | (slot >= c.length - (target - spec.n_sink))) \
+            & (slot < c.length)
+        perm, new_len = ladder.compaction_perm(keep)
+        live = slot < new_len
+        from repro.kernels import ops as kops
+        k = kops.gather_compact(c.k, perm, new_len)
+        if rope_theta is not None:
+            from repro.models.common import apply_rope
+            k = apply_rope(k, jnp.where(live, slot - perm, 0)[None], rope_theta)
+        return KVCache(
+            k=k,
+            v=kops.gather_compact(c.v, perm, new_len),
+            pos=jnp.where(live, c.pos[perm], -1),
+            length=new_len,
+            scores=None if c.scores is None else jnp.where(live, c.scores[perm], 0.0),
+        )
+
+    return jax.lax.cond(cache.length > target, truncate, lambda c: c, cache)
+
+
+def crop(cache: KVCache, n_slots: int) -> KVCache:
+    """Static crop of the slot buffer (prefill buffer -> decode budget)."""
+    return KVCache(
+        k=cache.k[:, :n_slots], v=cache.v[:, :n_slots], pos=cache.pos[:n_slots],
+        length=jnp.minimum(cache.length, n_slots),
+        scores=None if cache.scores is None else cache.scores[:n_slots])
+
+
+def add_scores(cache: KVCache, probs: jnp.ndarray) -> KVCache:
+    """Accumulate attention mass for H2O. probs: [batch, heads, q, n_slots]."""
+    if cache.scores is None:
+        return cache
+    s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
+    return cache._replace(scores=cache.scores + s)
+
+
+def set_scores(cache: KVCache, probs: jnp.ndarray) -> KVCache:
+    """TOVA (Oren et al., 2024): importance = the LAST query's attention."""
+    if cache.scores is None:
+        return cache
+    s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
+    return cache._replace(scores=s)

@@ -1,0 +1,215 @@
+"""Ladder-shaped KV cache pattern math (LaCache, ICML 2025, Sec. 3.2-3.3).
+
+Geometry
+--------
+Let ``L`` be the number of cache-bearing layers, ``S`` the *span* (layers that
+retain the KV of the same token chunk), ``O`` the *overlap* between consecutive
+bands, ``C`` the chunk width in tokens.  Band stride ``D = S - O >= 1``.
+Rungs per ladder ``K = ceil(L / D)``; ladder token width ``W = K * C``.
+
+A middle-region slot ``t`` (sinks and the recent window excluded) belongs to
+chunk ``j = t // C`` and rung ``r = j mod K``; it is **kept at layer l iff
+l in [r*D, r*D + S)`` — with the last rung's band extended to ``L-1`` (the
+paper's footnote 1, "avoid bubbles").
+
+*Iterative compaction* re-applies the same mask over **slot** indices of the
+already-compacted cache, which geometrically thins old tokens (Fig. 4).
+
+Two implementations live here:
+  * jnp functions (traced; used inside jitted serve/prefill steps),
+  * numpy simulation (:func:`simulate_stream`) used by analysis benchmarks
+    (pattern Pareto, retention heatmaps) and property tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LaCacheConfig
+
+
+class LadderSpec(NamedTuple):
+    """Resolved static ladder geometry for one model."""
+
+    n_layers: int   # number of cache-bearing layers L
+    span: int       # S
+    overlap: int    # O
+    chunk: int      # C
+    n_sink: int
+    n_recent: int
+    budget: int     # per-layer slot budget B
+
+    @property
+    def stride(self) -> int:
+        return max(1, self.span - self.overlap)
+
+    @property
+    def n_rungs(self) -> int:
+        return max(1, math.ceil(self.n_layers / self.stride))
+
+    @property
+    def ladder_width(self) -> int:
+        return self.n_rungs * self.chunk
+
+
+def make_spec(cfg: LaCacheConfig, n_layers: int) -> LadderSpec:
+    r = cfg.resolve(n_layers)
+    return LadderSpec(
+        n_layers=n_layers, span=r.span, overlap=r.overlap, chunk=r.chunk,
+        n_sink=r.n_sink, n_recent=r.n_recent, budget=r.budget)
+
+
+# --------------------------------------------------------------------------- #
+# Band membership
+# --------------------------------------------------------------------------- #
+def band_bounds(spec: LadderSpec, rung) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[lo, hi) layer band of a rung, last band extended to L (footnote 1)."""
+    lo = rung * spec.stride
+    hi = jnp.minimum(lo + spec.span, spec.n_layers)
+    hi = jnp.where(rung == spec.n_rungs - 1, spec.n_layers, hi)
+    return lo, hi
+
+
+def rung_kept_at_layer(spec: LadderSpec, rung, layer) -> jnp.ndarray:
+    lo, hi = band_bounds(spec, rung)
+    return (layer >= lo) & (layer < hi)
+
+
+# --------------------------------------------------------------------------- #
+# Keep masks (jnp, traced)
+# --------------------------------------------------------------------------- #
+def ladder_keep_mask(spec: LadderSpec, n_slots: int, length, layer) -> jnp.ndarray:
+    """Keep mask of one compaction pass at ``layer`` over a cache of ``length``
+    occupied slots (out of ``n_slots``).  bool[n_slots].
+
+    kept = sinks  |  recent window  |  ladder band membership.
+    Empty slots (>= length) are never kept.
+    """
+    slot = jnp.arange(n_slots)
+    occupied = slot < length
+    is_sink = slot < spec.n_sink
+    is_recent = slot >= (length - spec.n_recent)
+    m = slot - spec.n_sink                    # middle-region offset
+    rung = (m // spec.chunk) % spec.n_rungs
+    in_band = rung_kept_at_layer(spec, rung, layer)
+    keep = is_sink | is_recent | in_band
+    return keep & occupied
+
+
+def streaming_keep_mask(spec: LadderSpec, n_slots: int, length, layer,
+                        keep_middle_frac: float = 0.5) -> jnp.ndarray:
+    """StreamingLLM-as-block-eviction: keep sinks + newest fraction of middle.
+
+    Classic StreamingLLM evicts one oldest slot per step; to share the
+    amortized-compaction machinery we evict a block at a time (keeping the
+    newest ``keep_middle_frac`` of the middle region), which preserves the
+    sink+recency semantics exactly between compactions.
+    """
+    del layer
+    slot = jnp.arange(n_slots)
+    occupied = slot < length
+    is_sink = slot < spec.n_sink
+    middle = length - spec.n_sink
+    n_keep = (middle.astype(jnp.float32) * keep_middle_frac).astype(jnp.int32)
+    n_keep = jnp.maximum(n_keep, spec.n_recent)
+    is_recent = slot >= (length - n_keep)
+    return (is_sink | is_recent) & occupied
+
+
+def compaction_perm(keep: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable permutation moving kept slots to the front.
+
+    Returns (perm[n_slots], new_length). jnp.argsort is stable, so survivor
+    order (= age order) is preserved — the invariant iterative compaction
+    relies on.
+    """
+    perm = jnp.argsort(~keep)  # False(=0, kept) sorts first; stable
+    new_length = jnp.sum(keep).astype(jnp.int32)
+    return perm, new_length
+
+
+# --------------------------------------------------------------------------- #
+# Static / numpy analysis utilities
+# --------------------------------------------------------------------------- #
+def ladder_keep_mask_np(spec: LadderSpec, length: int, layer: int) -> np.ndarray:
+    slot = np.arange(length)
+    is_sink = slot < spec.n_sink
+    is_recent = slot >= (length - spec.n_recent)
+    m = slot - spec.n_sink
+    rung = (m // spec.chunk) % spec.n_rungs
+    lo = rung * spec.stride
+    hi = np.minimum(lo + spec.span, spec.n_layers)
+    hi = np.where(rung == spec.n_rungs - 1, spec.n_layers, hi)
+    in_band = (layer >= lo) & (layer < hi)
+    return is_sink | is_recent | in_band
+
+
+def simulate_stream(spec: LadderSpec, n_tokens: int,
+                    policy: str = "lacache") -> "StreamSim":
+    """Simulate iterative compaction over a token stream.
+
+    Returns per-layer lists of retained original token positions after
+    ingesting ``n_tokens`` tokens one at a time with budget ``spec.budget``.
+    Pure-python/numpy; used by analysis benchmarks and property tests.
+    """
+    L = spec.n_layers
+    kept = [list(range(0)) for _ in range(L)]
+    compactions = [0] * L
+    for t in range(n_tokens):
+        for l in range(L):
+            if len(kept[l]) >= spec.budget:
+                length = len(kept[l])
+                if policy == "lacache":
+                    mask = ladder_keep_mask_np(spec, length, l)
+                elif policy == "streaming":
+                    slot = np.arange(length)
+                    middle = length - spec.n_sink
+                    n_keep = max(int(middle * 0.5), spec.n_recent)
+                    mask = (slot < spec.n_sink) | (slot >= length - n_keep)
+                else:
+                    raise ValueError(policy)
+                kept[l] = [p for p, k in zip(kept[l], mask) if k]
+                compactions[l] += 1
+            kept[l].append(t)
+    return StreamSim(kept=kept, compactions=compactions)
+
+
+class StreamSim(NamedTuple):
+    kept: list       # per-layer list of retained original positions
+    compactions: list
+
+    def coverage(self) -> np.ndarray:
+        """Per-layer retained counts."""
+        return np.array([len(k) for k in self.kept])
+
+    def union_span(self) -> int:
+        """Number of distinct original positions retained in >=1 layer."""
+        u = set()
+        for k in self.kept:
+            u.update(k)
+        return len(u)
+
+    def retention_of(self, pos: int) -> float:
+        """Fraction of layers still holding original position ``pos``."""
+        return float(np.mean([pos in set(k) for k in self.kept]))
+
+
+def random_pattern_keep_mask_np(rng: np.random.Generator, n_layers: int,
+                                length: int, keep_per_layer: int,
+                                n_sink: int, n_recent: int) -> np.ndarray:
+    """A random (layer x slot) keep pattern with the same per-layer budget —
+    the Fig. 3 baseline population."""
+    mask = np.zeros((n_layers, length), dtype=bool)
+    mask[:, :n_sink] = True
+    mask[:, length - n_recent:] = True
+    middle = np.arange(n_sink, length - n_recent)
+    n_extra = max(0, keep_per_layer - n_sink - n_recent)
+    for l in range(n_layers):
+        if len(middle) and n_extra:
+            sel = rng.choice(middle, size=min(n_extra, len(middle)), replace=False)
+            mask[l, sel] = True
+    return mask

@@ -1,0 +1,121 @@
+"""Synthetic long-range corpus + input pipeline.
+
+No datasets ship offline, so paper-table benchmarks train small models on a
+synthetic corpus engineered to contain the statistical structure the paper's
+evaluations probe:
+
+* local structure — a sparse random bigram process (gives PPL headroom),
+* mid-range structure — a Zipf-reused bank of multi-token motifs ("phrases"),
+* long-range structure — copy events: a span seen earlier recurs verbatim
+  after a long delay (what recency-window eviction forgets and ladder
+  retention can keep), and
+* needles — key->value fact pairs injected early and queried much later
+  (the Needle-In-A-Haystack readout).
+
+The stream is deterministic per seed. ``lm_batches`` yields next-token
+training batches; ``needle_episode`` builds retrieval episodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+# reserved control tokens
+BOS, KEY_TOK, VAL_TOK, QUERY_TOK = 0, 1, 2, 3
+N_RESERVED = 8
+
+
+@dataclasses.dataclass
+class CorpusConfig:
+    vocab_size: int = 512
+    n_motifs: int = 256
+    motif_len: Tuple[int, int] = (6, 24)
+    p_motif: float = 0.25
+    p_copy: float = 0.03
+    copy_len: Tuple[int, int] = (16, 64)
+    copy_back: Tuple[int, int] = (128, 2048)
+    bigram_fanout: int = 24
+    seed: int = 0
+
+
+class SyntheticCorpus:
+    def __init__(self, cfg: CorpusConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        lo = N_RESERVED
+        # sparse bigram transitions over the non-reserved vocab
+        self.next_tokens = rng.integers(lo, v, size=(v, cfg.bigram_fanout))
+        # Zipf-weighted motif bank
+        self.motifs = [
+            rng.integers(lo, v, size=rng.integers(*cfg.motif_len))
+            for _ in range(cfg.n_motifs)]
+        w = 1.0 / np.arange(1, cfg.n_motifs + 1)
+        self.motif_p = w / w.sum()
+
+    def stream(self, n_tokens: int, seed: int = 0) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, seed))
+        out = np.empty(n_tokens + 64, dtype=np.int32)
+        out[0] = BOS
+        i = 1
+        cur = int(rng.integers(N_RESERVED, cfg.vocab_size))
+        while i < n_tokens:
+            u = rng.random()
+            if u < cfg.p_copy and i > cfg.copy_back[0] + cfg.copy_len[1]:
+                ln = int(rng.integers(*cfg.copy_len))
+                back = int(rng.integers(cfg.copy_back[0],
+                                        min(cfg.copy_back[1], i - ln)))
+                start = i - back
+                seg = out[start:start + ln]
+                n = min(ln, n_tokens + 64 - i)
+                out[i:i + n] = seg[:n]
+                i += n
+            elif u < cfg.p_copy + cfg.p_motif:
+                m = self.motifs[int(rng.choice(len(self.motifs), p=self.motif_p))]
+                n = min(len(m), n_tokens + 64 - i)
+                out[i:i + n] = m[:n]
+                i += n
+            else:
+                cur = int(self.next_tokens[cur, int(rng.integers(cfg.bigram_fanout))])
+                out[i] = cur
+                i += 1
+        return out[:n_tokens]
+
+
+def lm_batches(corpus: SyntheticCorpus, batch: int, seq_len: int,
+               n_steps: int, seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields {"tokens": [b, seq_len+1]} next-token batches."""
+    need = batch * (seq_len + 1)
+    for step in range(n_steps):
+        rows = [corpus.stream(seq_len + 1, seed=seed * 100003 + step * batch + r)
+                for r in range(batch)]
+        yield {"tokens": np.stack(rows).astype(np.int32)}
+
+
+def needle_episode(corpus: SyntheticCorpus, context_len: int, depth: float,
+                   seed: int = 0, needle_len: int = 8
+                   ) -> Dict[str, np.ndarray]:
+    """A haystack with one needle (KEY k -> VAL payload) inserted at
+    fractional ``depth``; the query asks for the payload at the end.
+
+    Returns {"tokens": [context_len], "answer": [needle_len],
+             "needle_span": (start, end)} — answer tokens follow the final
+    QUERY_TOK + key marker.
+    """
+    rng = np.random.default_rng((corpus.cfg.seed, seed, 7))
+    hay = corpus.stream(context_len, seed=seed + 99991)
+    key = rng.integers(N_RESERVED, corpus.cfg.vocab_size, size=2)
+    payload = rng.integers(N_RESERVED, corpus.cfg.vocab_size, size=needle_len)
+    needle = np.concatenate([[KEY_TOK], key, [VAL_TOK], payload]).astype(np.int32)
+    pos = int(depth * (context_len - len(needle) - needle_len - 8))
+    pos = max(1, pos)
+    tokens = hay.copy()
+    tokens[pos:pos + len(needle)] = needle
+    query = np.concatenate([[QUERY_TOK], key, [VAL_TOK]]).astype(np.int32)
+    qpos = context_len - len(query)
+    tokens[qpos:] = query
+    return {"tokens": tokens, "answer": payload.astype(np.int32),
+            "needle_span": (pos, pos + len(needle))}

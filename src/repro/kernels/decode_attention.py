@@ -1,0 +1,104 @@
+"""Flash-decode attention over a budgeted slot cache (Pallas TPU kernel).
+
+One new query token attends to a fixed-size KV slot buffer with a valid
+prefix of ``length`` slots (LaCache's compacted cache). GQA groups are folded
+into query rows so one (kv_head x slot_block) K/V tile in VMEM serves the
+whole group on the MXU. Online softmax over the slot-block grid dimension.
+
+This is the kernel that realizes the paper's "attention-score-free eviction
+composes with FlashAttention" claim on TPU: the policy only needs the slot
+validity prefix, never attention probabilities.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   sm_scale: float, block_s: int, n_s_blocks: int):
+    """Grid: (batch * kv_heads, n_slot_blocks).
+
+    q_ref: [group, d]; k_ref/v_ref: [block_s, d]; o_ref: [group, d].
+    """
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale          # [g, d]
+    k = k_ref[...].astype(jnp.float32)                     # [bs, d]
+    s = q @ k.T                                            # [g, bs]
+    slot = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = slot < length_ref[0]
+    s = jnp.where(mask, s, NEG_INF)
+
+    s = jnp.where(jnp.isnan(s), NEG_INF, s)  # OOB grid padding (NaN fill)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    col_valid = (si * block_s +
+                 jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)
+                 ) < length_ref[0]
+    vv = jnp.where(col_valid, v_ref[...].astype(jnp.float32), 0.0)
+    acc_scr[...] = acc_scr[...] * alpha + p @ vv
+    m_scr[...] = m_new
+
+    @pl.when(si == n_s_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray, *,
+                     sm_scale: Optional[float] = None,
+                     block_s: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """q: [b, h, d]; k/v: [b, s, kv, d]; length: scalar -> [b, h, d]."""
+    b, h, d = q.shape
+    s_slots, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    block_s = min(block_s, s_slots)
+    n_sb = pl.cdiv(s_slots, block_s)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    qr = q.reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, s_slots, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, s_slots, d)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=sm_scale,
+                          block_s=block_s, n_s_blocks=n_sb),
+        grid=(b * kvh, n_sb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, g, d), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((None, block_s, d), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((None, block_s, d), lambda bh, si: (bh, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, g, d), lambda bh, si: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qr, kr, vr)
+    return out.reshape(b, kvh, g, d).reshape(b, h, d)

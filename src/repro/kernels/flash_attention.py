@@ -1,0 +1,140 @@
+"""Blockwise causal flash attention (prefill path) as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §4): HBM->VMEM tiles of (block_q x head_dim) /
+(block_k x head_dim) feed the MXU; the online-softmax running max/sum live in
+VMEM scratch across the kv-block grid dimension (innermost, sequential on TPU).
+Supports GQA (q heads grouped per kv head), causal masking, sliding windows,
+chunked-prefill q offsets and slot-validity masking (budgeted caches).
+
+Validated on CPU via interpret=True against ``ref.mha_reference``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window: int,
+                  q_offset: int, block_q: int, block_k: int,
+                  n_kv_blocks: int, group: int):
+    """Grid: (batch * kv_heads, n_q_blocks, n_kv_blocks); kv innermost.
+
+    Block shapes (leading grid-mapped dims squeezed by BlockSpec):
+      q_ref:   [block_q * group, head_dim]   (GQA group folded into rows)
+      k_ref:   [block_k, head_dim]
+      v_ref:   [block_k, head_dim]
+      o_ref:   [block_q * group, head_dim]
+    """
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    k = k_ref[...].astype(jnp.float32)
+    s = q @ k.T                                            # [bq*g, bk]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+    q_pos = qi * block_q + rows + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < length_ref[0]
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    s = jnp.where(jnp.isnan(s), NEG_INF, s)  # OOB grid padding (NaN fill)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    # zero padded value rows: 0 * NaN would poison the accumulator
+    col_valid = (ki * block_k +
+                 jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)
+                 ) < length_ref[0]
+    vv = jnp.where(col_valid, v_ref[...].astype(jnp.float32), 0.0)
+    acc_scr[...] = acc_scr[...] * alpha + p @ vv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    sm_scale: Optional[float] = None,
+                    kv_length: Optional[jnp.ndarray] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [b, tq, h, d]; k/v: [b, tk, kv, d] -> [b, tq, h, d].
+
+    ``kv_length``: scalar int32, number of valid kv slots (default tk).
+    """
+    b, tq, h, d = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    n_qb = pl.cdiv(tq, block_q)
+    n_kb = pl.cdiv(tk, block_k)
+    if kv_length is None:
+        kv_length = jnp.array(tk, jnp.int32)
+    length = jnp.asarray(kv_length, jnp.int32).reshape(1)
+
+    # layout: fold (kv_head, group) into rows: q -> [b*kvh, tq*g, d]
+    qr = (q.transpose(0, 2, 1, 3)
+           .reshape(b, kvh, g, tq, d)
+           .transpose(0, 1, 3, 2, 4)
+           .reshape(b * kvh, tq * g, d))
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, tk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, tk, d)
+
+    grid = (b * kvh, n_qb, n_kb)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+            q_offset=q_offset, block_q=block_q, block_k=block_k,
+            n_kv_blocks=n_kb, group=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv length scalar
+            pl.BlockSpec((None, block_q * g, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q * g, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, tq * g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q * g, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q * g, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(length, qr, kr, vr)
+
+    out = (out.reshape(b, kvh, tq, g, d)
+              .transpose(0, 2, 1, 3, 4)
+              .reshape(b, tq, h, d))
+    return out

@@ -1,0 +1,63 @@
+"""Fused KV-slot gather-compaction (Pallas TPU kernel) — LaCache's Sec. 3.3
+iterative compaction realized as a stable-partition gather.
+
+The survivor permutation (an argsort of the ladder keep mask, computed outside
+the kernel — O(B) and tiny) drives a slot-axis gather of the K/V buffers.
+On TPU the feature dim (kv_heads*head_dim, flattened) is tiled into
+lane-aligned VMEM blocks; each grid step loads the full slot extent of one
+feature tile plus the SMEM permutation, emits rows in permuted order, and
+zeroes slots past ``new_length``. This keeps the gather entirely HBM->VMEM->HBM
+with unit-stride lanes (vs. the HF python-list surgery the paper's artifact
+uses — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact_kernel(perm_ref, newlen_ref, x_ref, o_ref):
+    """Grid: (batch, n_feature_blocks).
+
+    perm_ref: SMEM [s]; newlen_ref: SMEM [1];
+    x_ref/o_ref: VMEM [s, f_block] (full slot extent of one feature tile).
+    """
+    s = x_ref.shape[0]
+    perm = perm_ref[...]                                   # [s] int32
+    x = x_ref[...]
+    g = jnp.take(x, perm, axis=0)
+    live = jax.lax.broadcasted_iota(jnp.int32, g.shape, 0) < newlen_ref[0]
+    o_ref[...] = jnp.where(live, g, jnp.zeros((), x.dtype))
+
+
+def gather_compact(x: jnp.ndarray, perm: jnp.ndarray, new_length: jnp.ndarray,
+                   *, block_f: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """x: [b, s, ...feature...]; perm: [s]; new_length: scalar -> like x."""
+    b, s = x.shape[:2]
+    feat_shape = x.shape[2:]
+    f = 1
+    for d in feat_shape:
+        f *= d
+    xr = x.reshape(b, s, f)
+    block_f = min(block_f, f)
+    n_fb = pl.cdiv(f, block_f)
+    perm = jnp.asarray(perm, jnp.int32)
+    newlen = jnp.asarray(new_length, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        _compact_kernel,
+        grid=(b, n_fb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, s, block_f), lambda bi, fi: (bi, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((None, s, block_f), lambda bi, fi: (bi, 0, fi)),
+        out_shape=jax.ShapeDtypeStruct((b, s, f), x.dtype),
+        interpret=interpret,
+    )(perm, newlen, xr)
+    return out.reshape(x.shape)

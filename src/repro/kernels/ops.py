@@ -1,0 +1,168 @@
+"""Public kernel ops with implementation dispatch.
+
+``impl="pallas"`` -> the Pallas TPU kernels (interpret=True on CPU);
+``impl="xla"``    -> SPMD-partitionable pure-JAX implementations (memory-safe
+                     for long sequences: kv-block-scanned online softmax).
+
+The distributed jit paths (dry-run, train) use the XLA implementations so
+GSPMD can partition them; on-device execution flips to Pallas inside
+shard_map (DESIGN.md §7). Semantics of both paths are identical and
+cross-checked in tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+NEG_INF = -1.0e30
+
+
+def default_impl() -> str:
+    return os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention (prefill / train)
+# --------------------------------------------------------------------------- #
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    sm_scale=None, kv_length=None, impl: Optional[str] = None,
+                    block_q: int = 128, block_k: int = 128):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            sm_scale=sm_scale, kv_length=kv_length,
+            block_q=block_q, block_k=block_k, interpret=_interpret())
+    return _xla_flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        sm_scale=sm_scale, kv_length=kv_length, block_k=max(block_k, 512))
+
+
+def _xla_flash_attention(q, k, v, *, causal, window, q_offset, sm_scale,
+                         kv_length, block_k: int):
+    """kv-block-scanned online softmax; O(tq * block_k) live memory."""
+    b, tq, h, d = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    if kv_length is None:
+        kv_length = jnp.array(tk, jnp.int32)
+    if tk <= block_k:
+        valid = jnp.arange(tk) < kv_length
+        return _ref.mha_reference(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, sm_scale=sm_scale,
+                                  kv_valid=valid)
+    n_blocks = tk // block_k
+    rem = tk - n_blocks * block_k
+    qf = q.astype(jnp.float32) * sm_scale
+    qf = qf.reshape(b, tq, kvh, g, d)
+    qpos = jnp.arange(tq) + q_offset
+
+    def block(carry, inp):
+        m, l, acc = carry
+        kb, vb, k0 = inp                     # [b, bk, kvh, d], [b, bk, kvh, d], scalar
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        kpos = k0 + jnp.arange(kb.shape[1])
+        mask = kpos[None, :] < kv_length
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window and window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    kb = k[:, :n_blocks * block_k].reshape(b, n_blocks, block_k, kvh, d)
+    vb = v[:, :n_blocks * block_k].reshape(b, n_blocks, block_k, kvh, d)
+    offs = jnp.arange(n_blocks) * block_k
+    init = (jnp.full((b, kvh, g, tq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, tq), jnp.float32),
+            jnp.zeros((b, kvh, g, tq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        block, init, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), offs))
+    if rem:
+        (m, l, acc), _ = block((m, l, acc),
+                               (k[:, -rem:], v[:, -rem:],
+                                jnp.array(n_blocks * block_k)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = acc / l[..., None]                   # [b, kvh, g, tq, d]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Decode attention (single-token, budgeted cache)
+# --------------------------------------------------------------------------- #
+def decode_attention(q, k, v, length, *, sm_scale=None,
+                     impl: Optional[str] = None, return_probs: bool = False,
+                     block_s: int = 256):
+    if return_probs:  # H2O path: needs probabilities -> XLA only (paper's point)
+        return _ref.decode_attention_reference(
+            q, k, v, length, sm_scale=sm_scale, return_probs=True)
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(q, k, v, length, sm_scale=sm_scale,
+                                   block_s=block_s, interpret=_interpret())
+    return _xla_decode_attention(q, k, v, length, sm_scale=sm_scale)
+
+
+def _xla_decode_attention(q, k, v, length, *, sm_scale=None):
+    """Grouped-GQA decode attention without materializing repeated KV heads.
+
+    Keeping the kv-head axis intact (no jnp.repeat) lets GSPMD partition the
+    slot-sharded cache with partial-softmax all-reduces instead of
+    all-gathering the cache (§Perf iter 1c)."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    q4 = (q.reshape(b, kvh, g, d).astype(jnp.float32)) * sm_scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
+    valid = (jnp.arange(s) < length)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m)
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Gather-compaction (LaCache iterative compaction)
+# --------------------------------------------------------------------------- #
+def gather_compact(x, perm, new_length, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import ladder_compact as lc
+        return lc.gather_compact(x, perm, new_length, interpret=_interpret())
+    return _ref.gather_compact_reference(x, perm, new_length)
+
+
+# --------------------------------------------------------------------------- #
+# Selective scan (Mamba)
+# --------------------------------------------------------------------------- #
+def ssm_scan(x, dt, A, B, C, D, h0=None, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import ssm_scan as ss
+        return ss.ssm_scan(x, dt, A, B, C, D, h0, interpret=_interpret())
+    return _ref.ssm_scan_reference(x, dt, A, B, C, D, h0)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (small-scale exact references).
+
+These are the semantics contract: each kernel in this package must match its
+oracle to float tolerance across shape/dtype sweeps (tests/test_kernels_*).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def mha_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: int = 0, sm_scale: Optional[float] = None,
+                  kv_valid: Optional[jnp.ndarray] = None,
+                  return_probs: bool = False):
+    """Plain softmax attention with GQA broadcast.
+
+    q: [b, tq, h, d]; k/v: [b, tk, kv, d]. ``q_offset``: absolute position of
+    q[0] relative to k[0] (for chunked prefill). ``window`` > 0 restricts each
+    query to keys within the last ``window`` positions (sliding window).
+    ``kv_valid``: bool[b, tk] or [tk] slot-validity mask.
+    """
+    b, tq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * sm_scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # broadcast kv heads to q heads
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = jnp.arange(tq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((tq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    if kv_valid is not None:
+        kvm = kv_valid if kv_valid.ndim == 2 else kv_valid[None, :]
+        mask = mask[None, None] & kvm[:, None, None, :]
+    else:
+        mask = mask[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (shouldn't happen with causal) -> zeros
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    if return_probs:
+        return o.astype(q.dtype), p
+    return o.astype(q.dtype)
+
+
+def decode_attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               length: jnp.ndarray, *,
+                               sm_scale: Optional[float] = None,
+                               return_probs: bool = False):
+    """Single-token decode attention over a budgeted slot cache.
+
+    q: [b, h, d]; k/v: [b, s, kv, d]; length: scalar int32 (valid prefix).
+    """
+    valid = jnp.arange(k.shape[1]) < length
+    out = mha_reference(q[:, None], k, v, causal=False, kv_valid=valid,
+                        sm_scale=sm_scale, return_probs=return_probs)
+    if return_probs:
+        o, p = out
+        return o[:, 0], p
+    return out[:, 0]
+
+
+def gather_compact_reference(x: jnp.ndarray, perm: jnp.ndarray,
+                             new_length: jnp.ndarray) -> jnp.ndarray:
+    """Permute slots (axis 1) by ``perm`` and zero slots >= new_length.
+
+    x: [b, s, ...]; perm: [s] int32; new_length: scalar.
+    """
+    g = jnp.take(x, perm, axis=1)
+    live = jnp.arange(x.shape[1]) < new_length
+    shape = (1, -1) + (1,) * (x.ndim - 2)
+    return jnp.where(live.reshape(shape), g, jnp.zeros((), x.dtype))
+
+
+def ssm_scan_reference(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                       B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                       h0: Optional[jnp.ndarray] = None):
+    """Mamba-1 selective scan oracle.
+
+    x, dt: [b, t, d]; A: [d, n]; B, C: [b, t, n]; D: [d];
+    h0: [b, d, n] initial state. Returns (y [b, t, d], h_T [b, d, n]).
+    Recurrence: h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t; y = C_t.h + D*x.
+    """
+    b, t, d = x.shape
+    n = A.shape[1]
+    xf, dtf, Bf, Cf = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp          # [b,d], [b,d], [b,n], [b,n]
+        dA = jnp.exp(dtt[:, :, None] * Af[None])          # [b,d,n]
+        dBx = dtt[:, :, None] * Bt[:, None, :] * xt[:, :, None]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + xf * D.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), hT

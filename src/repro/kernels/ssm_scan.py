@@ -1,0 +1,106 @@
+"""Mamba-1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §4): the recurrence is sequential in time but fully
+parallel over channels, so the grid tiles (batch x d_inner blocks) and each
+kernel instance walks the time axis with the state ``h [d_block, n]`` resident
+in VMEM scratch (never touching HBM between steps). Channel blocks are
+lane-aligned (multiples of 128); the time loop is a ``fori_loop`` over rows of
+the VMEM-resident x/dt/B/C tiles. For long sequences the wrapper chunks time
+and threads the state between chunks (grid-major time, state carried in the
+scratch across grid steps).
+
+Oracle: ``ref.ssm_scan_reference``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, h0_ref,
+                y_ref, hT_ref, h_scr, *, n_t_chunks: int):
+    """Grid: (batch, n_d_blocks, n_t_chunks); time chunks innermost.
+
+    x_ref/dt_ref: [t_chunk, d_block]; A_ref: [d_block, n];
+    B_ref/C_ref: [t_chunk, n]; h0_ref/hT_ref: [d_block, n];
+    y_ref: [t_chunk, d_block]; h_scr: VMEM [d_block, n].
+    """
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    t_chunk = x_ref.shape[0]
+    A = A_ref[...].astype(jnp.float32)                     # [d, n]
+
+    def _clean(a):
+        # OOB grid padding is NaN-filled; treat padded steps as no-ops
+        return jnp.where(jnp.isnan(a), 0.0, a)
+
+    def step(t, _):
+        xt = _clean(x_ref[t, :].astype(jnp.float32))       # [d]
+        dtt = _clean(dt_ref[t, :].astype(jnp.float32))     # [d]
+        Bt = _clean(B_ref[t, :].astype(jnp.float32))       # [n]
+        Ct = _clean(C_ref[t, :].astype(jnp.float32))       # [n]
+        h = h_scr[...]
+        dA = jnp.exp(dtt[:, None] * A)                     # [d, n]
+        h = h * dA + (dtt * xt)[:, None] * Bt[None, :]
+        h_scr[...] = h
+        y_ref[t, :] = (h @ Ct).astype(y_ref.dtype)         # [d]
+        return 0
+
+    jax.lax.fori_loop(0, t_chunk, step, 0)
+
+    @pl.when(ti == n_t_chunks - 1)
+    def _emit_state():
+        hT_ref[...] = h_scr[...].astype(hT_ref.dtype)
+
+
+def ssm_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+             h0: Optional[jnp.ndarray] = None, *,
+             block_d: int = 256, t_chunk: int = 256,
+             interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt: [b, t, d]; A: [d, n]; B, C: [b, t, n]; D: [d].
+
+    Returns (y [b, t, d], h_T [b, d, n] float32).
+    """
+    b, t, d = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+    block_d = min(block_d, d)
+    t_chunk = min(t_chunk, t)
+    n_db = pl.cdiv(d, block_d)
+    n_tc = pl.cdiv(t, t_chunk)
+
+    y, hT = pl.pallas_call(
+        functools.partial(_ssm_kernel, n_t_chunks=n_tc),
+        grid=(b, n_db, n_tc),
+        in_specs=[
+            pl.BlockSpec((None, t_chunk, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((None, t_chunk, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((block_d, n), lambda bi, di, ti: (di, 0)),
+            pl.BlockSpec((None, t_chunk, n), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((None, t_chunk, n), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((None, block_d, n), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, t_chunk, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((None, block_d, n), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, d), x.dtype),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, h0)
+    y = y + (x.astype(jnp.float32) * D.astype(jnp.float32)[None, None]).astype(y.dtype)
+    return y, hT

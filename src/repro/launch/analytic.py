@@ -1,0 +1,100 @@
+"""Analytic FLOP / HBM-byte models per (arch x shape) for the roofline.
+
+Why analytic: XLA's HloCostAnalysis counts while bodies once (see
+hlo_analysis.py), so scanned models report ~1/n_layers of true FLOPs. These
+closed forms are the standard MFU accounting (6ND + attention quadratic term;
+MaxText-style), extended for local windows, MoE dispatch and SSM scans.
+All quantities are GLOBAL (whole step, all devices); divide by chip count
+for per-device terms.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def attention_context(cfg: ModelConfig, shape: ShapeConfig, policy: str,
+                      budget: int) -> Dict[str, float]:
+    """Average attended context per query token, per layer kind."""
+    t = shape.seq_len
+    if shape.mode == "decode":
+        ctx_global = budget if policy != "full" else t
+        ctx_local = min(cfg.sliding_window or 0, t)
+        return {"global": ctx_global, "local": ctx_local, "queries": 1}
+    # train/prefill: causal average t/2; local: window
+    return {"global": t / 2,
+            "local": min(cfg.sliding_window or t, t),
+            "queries": t}
+
+
+def flops(cfg: ModelConfig, shape: ShapeConfig, policy: str, budget: int,
+          params_active: int) -> Dict[str, float]:
+    b = shape.global_batch
+    ctx = attention_context(cfg, shape, policy, budget)
+    tq = ctx["queries"]
+    tokens = b * tq
+    h, hd = cfg.n_heads, cfg.head_dim_
+    n_global = cfg.n_cache_layers + (cfg.encoder_layers if shape.mode != "decode" else 0)
+    n_local = cfg.n_local_layers
+
+    # parameter matmuls: 2 FLOPs per param per token (fwd)
+    f_param = 2.0 * params_active * tokens
+    # attention score+value matmuls: 4 * tokens * ctx * h * hd per layer
+    f_attn = 4.0 * tokens * h * hd * (
+        n_global * ctx["global"] + n_local * ctx["local"])
+    if cfg.cross_attention:
+        f_attn += 4.0 * tokens * h * hd * cfg.n_layers * cfg.n_audio_frames
+    # mamba scan: ~9 flops per (channel, state) per token
+    f_ssm = 9.0 * tokens * cfg.n_mamba_layers * cfg.d_inner * cfg.d_state
+    # MoE gshard dispatch/combine einsums: 4 * tokens * E*C * d, E*C ~= cf*k*S
+    f_moe_disp = 0.0
+    if cfg.n_experts:
+        gs = cfg.moe_group_size
+        s = gs if (tq >= gs and tq % gs == 0) else max(int(tq), 1) or max(b, 1)
+        if tq < gs:
+            s = max(int(tq), 1)
+        ec = cfg.capacity_factor * cfg.top_k * s
+        n_moe = sum(1 for sp in cfg.layer_specs() if sp.moe)
+        f_moe_disp = 4.0 * tokens * ec * cfg.d_model * n_moe
+
+    fwd = f_param + f_attn + f_ssm + f_moe_disp
+    total = 3.0 * fwd if shape.mode == "train" else fwd
+    return {"fwd": fwd, "total": total, "attn": f_attn, "param": f_param,
+            "ssm": f_ssm, "moe_dispatch": f_moe_disp}
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, policy: str, budget: int,
+              params_total: int) -> Dict[str, float]:
+    """Global HBM traffic model for one step."""
+    b = shape.seq_len and shape.global_batch
+    t = shape.seq_len
+    dt = _dtype_bytes(cfg)
+    kv_b = 2 * cfg.n_kv_heads * cfg.head_dim_ * dt  # K+V bytes per tok/layer
+    p_bytes = params_total * dt
+
+    if shape.mode == "decode":
+        ctx = budget if policy != "full" else t
+        cache_read = (cfg.n_cache_layers * ctx
+                      + cfg.n_local_layers * min(cfg.sliding_window or 0, ctx)
+                      ) * b * kv_b
+        ssm_state = cfg.n_mamba_layers * b * cfg.d_inner * (cfg.d_state * 4 + dt * cfg.d_conv)
+        act = 40.0 * cfg.n_layers * b * cfg.d_model * dt
+        return {"params": p_bytes, "cache": cache_read + ssm_state,
+                "act": act, "total": p_bytes + cache_read + ssm_state + act}
+    # train / prefill: weights (+grad/opt traffic for train), activations, kv
+    tokens = b * t
+    act_per_layer = 14.0 * tokens * cfg.d_model * dt     # coarse live-tensor traffic
+    act = act_per_layer * cfg.n_layers
+    kv_write = cfg.n_cache_layers * tokens * kv_b
+    if shape.mode == "train":
+        opt = params_total * (4 * 2 + 4 + dt)            # m,v rw + grad + weight
+        total = p_bytes + opt + 2.0 * act                # fwd + bwd(recompute) traffic
+        return {"params": p_bytes, "opt": float(opt), "act": 2 * act,
+                "total": total + kv_write, "cache": kv_write}
+    return {"params": p_bytes, "act": act, "cache": kv_write,
+            "total": p_bytes + act + kv_write}

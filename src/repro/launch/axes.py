@@ -1,0 +1,141 @@
+"""Logical-axis sharding registry (MaxText-style logical->mesh axis rules).
+
+Model code annotates activations with ``shard(x, "batch", None, "heads", ...)``
+and parameter initializers attach logical axis tuples per leaf. The launcher
+installs concrete rules (e.g. ``{"batch": ("pod", "data"), "heads": "model"}``)
+before tracing; outside a mesh context everything is a no-op, so the same
+model code runs on 1 CPU device and on the 512-chip mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+# Default production rules (DESIGN.md §6). "fsdp" is the parameter-sharding
+# axis group; "batch" the activation batch axes.
+SINGLE_POD_RULES: Dict[str, AxisRule] = {
+    "batch": "data",
+    "fsdp": "data",
+    "model": "model",
+    "seq": None,
+    "experts": "model",
+    "moe_dm": "data",   # expert weights: FSDP d_model dim in training
+    "moe_ff": None,
+    "res_seq": "model",  # Megatron-SP: residual stream sharded along seq
+    "slots": None,
+}
+
+
+def multi_pod_rules() -> Dict[str, AxisRule]:
+    return {
+        "batch": ("pod", "data"),
+        "fsdp": ("pod", "data"),
+        "model": "model",
+        "seq": None,
+        "experts": "model",
+        "moe_dm": ("pod", "data"),
+        "moe_ff": None,
+        "res_seq": "model",
+        "slots": None,
+    }
+
+
+def serving_rules(multi_pod: bool = False) -> Dict[str, AxisRule]:
+    """Weight-resident 2D tensor-parallel serving sharding (§Perf iter 1).
+
+    Decode must not all-gather FSDP weight shards per token. Instead, weights
+    stay sharded over BOTH mesh axes (row-parallel d_model over "data",
+    col-parallel heads/d_ff over "model") and the per-layer collectives are
+    tiny activation partial-sum all-reduces. Batch is replicated within a pod
+    (decode activations are KBs); the KV cache shards its *slot* axis over
+    both axes. Multi-pod: each pod serves half the batch (data-parallel
+    replicas at the pod level).
+    """
+    return {
+        "batch": "pod" if multi_pod else None,
+        "fsdp": "data",            # row-parallel: contraction-dim resident
+        "model": "model",
+        "seq": None,
+        "experts": "model",
+        "residual": "data",        # activations sharded on d_model: row-
+                                   # parallel matmuls do partial-sum
+                                   # all-reduces instead of weight gathers
+        "moe_dm": None,            # serving: shard expert d_ff over data
+        "moe_ff": "data",          # instead -> tiny (e_loc,C,d) reduce
+        "cache_kv": None,          # kv heads usually < |model| here
+        "cache_slots": ("data", "model"),
+        "cache_dinner": "model",   # match mamba activation sharding (no
+                                   # di resharding between state and z-gate)
+    }
+
+
+def current_rules() -> Optional[Dict[str, AxisRule]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Dict[str, AxisRule], mesh: Mesh):
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def to_partition_spec(logical: Sequence[Optional[str]],
+                      rules: Optional[Dict[str, AxisRule]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    spec, used = [], set()
+    for name in logical:
+        r = rules.get(name) if name else None
+        if r is None:
+            spec.append(None)
+            continue
+        axes = (r,) if isinstance(r, str) else tuple(r)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*spec)
+
+
+def _mesh_axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active rules).
+
+    Axes whose size is not divisible by the mapped mesh extent are left
+    unconstrained (e.g. 12 attention heads on a 16-way model axis)."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    spec = list(to_partition_spec(logical, rules))
+    for i, entry in enumerate(spec):
+        if entry is not None and x.shape[i] % _mesh_axis_size(mesh, entry):
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,304 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on the production mesh and record memory/cost/collective
+analyses for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+# The next two lines MUST run before any other import (jax locks the device
+# count on first init): 512 placeholder host devices for the production mesh.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import axes as axlib
+from repro.launch import shapes as shapeslib
+from repro.launch import sharding as shardlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import trainer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|"
+                      r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum result bytes of every collective op in post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLL_KINDS:
+            # count plain and -start forms; skip -done (same tensor twice)
+            tok = rhs.find(kind)
+            if tok < 0:
+                continue
+            after = rhs[tok + len(kind):]
+            if after.startswith("-done"):
+                continue
+            if not (after.startswith("(") or after.startswith("-start(")):
+                continue
+            type_part = rhs[:tok]
+            b = _shape_bytes(type_part)
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += b
+            break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def count_params(params_sds, top_k: int, n_experts: int):
+    """(total, active) parameter counts; expert tensors scale by k/E."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_sds)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in keys and any(k in ("w_up", "w_gate", "w_down")
+                                 for k in keys):
+            active += n * top_k // max(1, n_experts)
+        else:
+            active += n
+    return total, active
+
+
+# --------------------------------------------------------------------------- #
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  policy: str, sharding_mode: str = "fsdp",
+                  microbatches: int = 1, bf16_boundary: bool = False):
+    cfg = get_config(arch)
+    if bf16_boundary:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, bf16_boundary_accum=True)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if sharding_mode == "serving":
+        rules = axlib.serving_rules(multi_pod)
+    else:
+        rules = axlib.multi_pod_rules() if multi_pod else axlib.SINGLE_POD_RULES
+
+    with axlib.logical_axis_rules(rules, mesh):
+        params_sds, axes = shapeslib.abstract_params(cfg)
+        pshard = shardlib.param_shardings(mesh, rules, axes, params_sds)
+        spec = shapeslib.input_specs(cfg, shape, policy, params_sds)
+        run_cfg = spec["cfg"]
+
+        if shape.mode == "train":
+            ocfg = adamw.AdamWConfig()
+            step = trainer.make_train_step(run_cfg, ocfg,
+                                           microbatches=microbatches)
+            opt_sds = jax.eval_shape(adamw.init, params_sds)
+            oshard = shardlib.opt_state_shardings(mesh, rules, axes, opt_sds)
+            bshard = shardlib.train_batch_shardings(mesh, rules, spec["batch"])
+            jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard))
+            lowered = jitted.lower(params_sds, opt_sds, spec["batch"])
+        elif shape.mode == "prefill":
+            n_slots = spec["n_slots"]
+
+            def pf(params, tokens, patches=None, frames=None):
+                return M.prefill(params, run_cfg, tokens, n_slots=n_slots,
+                                 patches=patches, frames=frames)
+
+            args = [params_sds, spec["tokens"]]
+            shards = [pshard,
+                      shardlib.train_batch_shardings(mesh, rules,
+                                                     spec["tokens"])]
+            kw = {}
+            for name in ("patches", "frames"):
+                if name in spec:
+                    kw[name] = spec[name]
+            if kw:
+                # fold kwargs into positionals for sharding control
+                names = sorted(kw)
+
+                def pf2(params, tokens, *extra):
+                    return pf(params, tokens, **dict(zip(names, extra)))
+
+                for n in names:
+                    args.append(kw[n])
+                    shards.append(shardlib.train_batch_shardings(
+                        mesh, rules, kw[n]))
+                lowered = jax.jit(pf2, in_shardings=tuple(shards)).lower(*args)
+            else:
+                lowered = jax.jit(pf, in_shardings=tuple(shards)).lower(*args)
+        else:  # decode
+            def step(params, state, tokens):
+                return M.decode_step(params, run_cfg, state, tokens)
+
+            sshard = shardlib.decode_state_shardings(mesh, rules, run_cfg,
+                                                     spec["state"])
+            tshard = shardlib.train_batch_shardings(mesh, rules,
+                                                    spec["tokens"])
+            lowered = jax.jit(step, in_shardings=(pshard, sshard, tshard)) \
+                .lower(params_sds, spec["state"], spec["tokens"])
+    return lowered, params_sds, cfg, shape, mesh
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, policy: str,
+            outdir: str, verbose: bool = True,
+            sharding_mode: str = "fsdp", tag: str = "",
+            microbatches: int = 1, bf16_boundary: bool = False) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    lowered, params_sds, cfg, shape, mesh = build_lowered(
+        arch, shape_name, multi_pod, policy, sharding_mode, microbatches,
+        bf16_boundary)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        } if mem is not None else None
+    except Exception:
+        mem_d = None
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    from repro.launch import analytic, hlo_analysis
+    coll_weighted = hlo_analysis.analyze_collectives(hlo)
+    n_dev = mesh.devices.size
+    total_p, active_p = count_params(params_sds, cfg.top_k, cfg.n_experts)
+    from repro.launch.shapes import decode_budget
+    budget = decode_budget(cfg, shape, policy)
+    fl = analytic.flops(cfg, shape, policy, budget, active_p)
+    hb = analytic.hbm_bytes(cfg, shape, policy, budget, total_p)
+
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * active_p * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * active_p * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * active_p * tokens
+
+    # analytic per-device bytes of the resident state (params [+cache])
+    def tree_bytes(t):
+        return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy, "n_devices": int(n_dev),
+        "status": "ok",
+        "per_device_flops": cost.get("flops"),
+        "per_device_bytes_accessed": cost.get("bytes accessed"),
+        "cost_analysis_keys": sorted(cost)[:40],
+        "memory_analysis": mem_d,
+        "collectives_flat": coll,
+        "collectives": coll_weighted,
+        "analytic_flops": fl,
+        "analytic_hbm_bytes": hb,
+        "budget": budget,
+        "params_total": int(total_p), "params_active": int(active_p),
+        "params_bytes_global": tree_bytes(params_sds),
+        "model_flops_global": float(model_flops),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_bytes": len(hlo),
+        "sharding_mode": sharding_mode,
+    }
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fn = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}_{policy}{suffix}.json"
+    with open(os.path.join(outdir, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[ok] {arch} {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} "
+              f"policy={policy} flops/dev={cost.get('flops', 0):.3e} "
+              f"coll={coll['total_bytes']:.3e}B lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--policy", default=None,
+                    help="default: lacache for decode/prefill, n/a for train")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "serving"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--bf16-boundary", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            policy = args.policy or ("lacache" if
+                                     INPUT_SHAPES[shape_name].mode != "train"
+                                     else "full")
+            for mp in pods:
+                try:
+                    run_one(arch, shape_name, mp, policy, args.out,
+                            sharding_mode=args.sharding, tag=args.tag,
+                            microbatches=args.microbatch,
+                            bf16_boundary=args.bf16_boundary)
+                except Exception as e:
+                    failures.append((arch, shape_name, mp, repr(e)))
+                    print(f"[FAIL] {arch} {shape_name} mp={mp}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+                jax.clear_caches()
+    if failures:
+        print(f"{len(failures)} failures")
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

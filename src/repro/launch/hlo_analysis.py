@@ -1,0 +1,192 @@
+"""While-loop-aware post-SPMD HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, not
+x trip-count — for scan-over-layers models that undercounts FLOPs, bytes and
+collectives by ~n_layers (verified against analytic 6ND; EXPERIMENTS.md
+§Dry-run). This module parses the HLO text into computations, extracts each
+while's static trip count (largest integer constant in its condition
+computation — XLA canonicalizes counted loops to ``iter < K``), and sums
+collective result-bytes with multipliers along the call graph.
+
+``conditional`` branches (LaCache's lax.cond compaction) are counted at full
+multiplicity on every branch — an upper bound; the compaction branch actually
+runs ~1/(chunk) of steps, noted in the roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_TYPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|f8e4m3fn|f8e5m2|f8e4m3)"
+    r"\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_CALL_REF = re.compile(r"(?:body|condition|branch_computations|to_apply|called_computations)="
+                       r"(?:{([^}]*)}|%?([\w.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    entry_name = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+    comps["__entry__"] = [entry_name]  # type: ignore
+    return comps
+
+
+def _line_collective(line: str) -> Optional[Tuple[str, int]]:
+    eq = line.find(" = ")
+    if eq < 0:
+        return None
+    rhs = line[eq + 3:]
+    for kind in COLL_KINDS:
+        tok = rhs.find(kind)
+        if tok < 0:
+            continue
+        after = rhs[tok + len(kind):]
+        if after.startswith("-done"):
+            return None
+        if not (after.startswith("(") or after.startswith("-start(")):
+            continue
+        return kind, _shape_bytes(rhs[:tok])
+    return None
+
+
+def _callees(line: str) -> List[str]:
+    out = []
+    for m in _CALL_REF.finditer(line):
+        if m.group(1) is not None:
+            for part in m.group(1).split(","):
+                out.append(part.strip().lstrip("%"))
+        else:
+            out.append(m.group(2))
+    return out
+
+
+def _while_parts(line: str) -> Optional[Tuple[str, str]]:
+    if re.search(r"\bwhile\(", line) is None:
+        return None
+    body = re.search(r"body=%?([\w.\-]+)", line)
+    cond = re.search(r"condition=%?([\w.\-]+)", line)
+    if body and cond:
+        return body.group(1), cond.group(1)
+    return None
+
+
+def _trip_count(comps: Dict[str, List[str]], cond_name: str) -> int:
+    """Largest small-integer constant in the condition computation."""
+    best = 1
+    for line in comps.get(cond_name, []):
+        for m in _CONST_RE.finditer(line):
+            v = int(m.group(1))
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyze_collectives(hlo: str) -> Dict[str, Any]:
+    """Trip-count-weighted collective result-bytes by kind."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__")[0]
+    totals = {k: {"count": 0.0, "bytes": 0.0} for k in COLL_KINDS}
+    seen_guard = [0]
+
+    def walk(name: str, mult: float, depth: int):
+        if depth > 12 or seen_guard[0] > 200000:
+            return
+        for line in comps.get(name, []):
+            seen_guard[0] += 1
+            wp = _while_parts(line)
+            if wp:
+                body, cond = wp
+                trip = _trip_count(comps, cond)
+                walk(body, mult * trip, depth + 1)
+                continue
+            col = _line_collective(line)
+            if col:
+                kind, b = col
+                totals[kind]["count"] += mult
+                totals[kind]["bytes"] += mult * b
+            for callee in _callees(line):
+                if callee in comps and "while" not in line:
+                    walk(callee, mult, depth + 1)
+
+    if entry:
+        walk(entry, 1.0, 0)
+    out: Dict[str, Any] = {k: {"count": round(v["count"], 1),
+                               "bytes": float(v["bytes"])}
+                           for k, v in totals.items()}
+    out["total_bytes"] = float(sum(v["bytes"] for v in totals.values()))
+    # while trip counts found (for sanity display)
+    trips = []
+    for name, lines in comps.items():
+        for line in lines:
+            wp = _while_parts(line)
+            if wp:
+                trips.append(_trip_count(comps, wp[1]))
+    out["while_trip_counts"] = sorted(trips, reverse=True)[:8]
+    return out
+
+
+def top_collectives(hlo: str, n: int = 12):
+    """Largest trip-weighted collectives with their op_name metadata."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__")[0]
+    found = []
+
+    def walk(name: str, mult: float, depth: int):
+        if depth > 12:
+            return
+        for line in comps.get(name, []):
+            wp = _while_parts(line)
+            if wp:
+                walk(wp[0], mult * _trip_count(comps, wp[1]), depth + 1)
+                continue
+            col = _line_collective(line)
+            if col:
+                kind, b = col
+                m = re.search(r'op_name="([^"]*)"', line)
+                shape = line.split(" = ", 1)[1][:60] if " = " in line else ""
+                found.append((mult * b, kind, mult, shape,
+                              m.group(1)[-110:] if m else ""))
+            for callee in _callees(line):
+                if callee in comps and "while" not in line:
+                    walk(callee, mult, depth + 1)
+
+    if entry:
+        walk(entry, 1.0, 0)
+    found.sort(reverse=True)
+    return found[:n]

@@ -1,0 +1,24 @@
+"""Production mesh construction (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: 16x16 = 256 chips/pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D (data,) mesh — smoke tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# v5e hardware constants for the roofline (DESIGN.md §6)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per-direction)

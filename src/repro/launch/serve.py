@@ -1,0 +1,63 @@
+"""Serving launcher: batched generation / streaming scoring with LaCache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --policy lacache --budget 128 --prompt-len 256 --max-new 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs import get_config
+from repro.data.pipeline import CorpusConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--policy", default="lacache",
+                    choices=["lacache", "streaming", "h2o", "full"])
+    ap.add_argument("--budget", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, lacache=dataclasses.replace(
+        cfg.lacache, policy=args.policy, budget=args.budget))
+    params, _ = M.init(cfg, jax.random.PRNGKey(args.seed))
+    if args.ckpt:
+        params = ckpt.load(args.ckpt, params)
+
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    prompts = np.stack([corpus.stream(args.prompt_len, seed=i)
+                        for i in range(args.batch)])
+    eng = Engine(cfg, params, budget=args.budget)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, args.max_new)
+    dt = time.perf_counter() - t0
+    state = eng.new_state(args.batch)
+    print(f"policy={args.policy} budget={args.budget} "
+          f"prompt={args.prompt_len} new={args.max_new}")
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch*args.max_new/dt:.1f} tok/s incl. compile)")
+    print(f"cache bytes/layer-state: {eng.cache_bytes(state)/1e6:.2f} MB "
+          f"(constant in sequence length — the paper's O(1) claim)")
+    print("sample:", out[0, :32].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) workload.
+
+``input_specs`` returns abstract inputs (no allocation) for the three step
+kinds; decode shapes build the decode-state structure via ``jax.eval_shape``.
+Decode cache budgets (DESIGN.md §5):
+  * decode_32k  — full-cache baseline n_slots = 32768, LaCache variant 4096,
+  * long_500k   — LaCache budget 16384 (O(1) memory is what makes this shape
+                  feasible at all for attention archs — the paper's claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as M
+
+DECODE_LACACHE_BUDGET = 4096
+LONG_BUDGET = 16384
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def decode_budget(cfg: ModelConfig, shape: ShapeConfig, policy: str) -> int:
+    if shape.name == "long_500k":
+        return LONG_BUDGET
+    if policy == "full":
+        return shape.seq_len
+    return DECODE_LACACHE_BUDGET
+
+
+def cfg_for_run(cfg: ModelConfig, shape: ShapeConfig, policy: str) -> ModelConfig:
+    lc = dataclasses.replace(
+        cfg.lacache, policy=policy,
+        budget=decode_budget(cfg, shape, policy))
+    return dataclasses.replace(cfg, lacache=lc)
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(param ShapeDtypeStructs, logical axes) without allocating."""
+    from repro.models.common import abstract_init
+    with abstract_init():
+        shapes, axes = M.init(cfg, jax.random.PRNGKey(0))
+    return shapes, axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, policy: str,
+                params_sds=None) -> Dict[str, Any]:
+    """Abstract step inputs. For decode, includes the decode-state SDS."""
+    b, t = shape.global_batch, shape.seq_len
+    run_cfg = cfg_for_run(cfg, shape, policy)
+    extras: Dict[str, Any] = {}
+    text_t = t
+    if cfg.n_patches > 0:
+        text_t = t - cfg.n_patches
+        extras["patches"] = sds((b, cfg.n_patches, M.PATCH_DIM), "float32")
+    if cfg.encoder_layers > 0:
+        extras["frames"] = sds((b, cfg.n_audio_frames, M.FRAME_DIM), "float32")
+
+    if shape.mode == "train":
+        return {"cfg": run_cfg,
+                "batch": dict(tokens=sds((b, text_t + 1), "int32"), **extras)}
+    if shape.mode == "prefill":
+        return {"cfg": run_cfg,
+                "tokens": sds((b, text_t), "int32"), **extras,
+                "n_slots": DECODE_LACACHE_BUDGET}
+    # decode
+    n_slots = decode_budget(cfg, shape, policy)
+    assert params_sds is not None
+
+    def build_state(params):
+        frames = None
+        if cfg.encoder_layers > 0:
+            frames = jnp.zeros((b, cfg.n_audio_frames, M.FRAME_DIM), jnp.float32)
+        st = M.init_decode_state(params, run_cfg, b, n_slots, frames=frames)
+        return st
+
+    state_sds = jax.eval_shape(build_state, params_sds)
+    return {"cfg": run_cfg, "state": state_sds,
+            "tokens": sds((b, 1), "int32")}

@@ -1,0 +1,136 @@
+"""Concrete sharding construction: logical axes -> NamedSharding pytrees for
+params, optimizer state, step inputs and decode state (DESIGN.md §6).
+
+KV cache rule: shard kv-head axis over ``model`` when it divides evenly;
+otherwise shard the *slot* axis over ``model`` (MQA/GQA-small case — XLA SPMD
+inserts the partial-softmax all-reduce)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.launch import axes as axlib
+from repro.models.layers import RingKVCache
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _safe(mesh: Mesh, spec, shape) -> P:
+    """Drop partition entries whose mesh extent doesn't divide the dim
+    (e.g. batch=1 long-context decode, 12-head models on 16-way TP)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is not None and (i >= len(shape)
+                                  or shape[i] % _axis_size(mesh, entry)):
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, rules: Dict[str, Any], logical_axes,
+                    params_sds):
+    """Map the per-leaf logical axis tuples from model.init to shardings."""
+    def one(axes_tuple, sds):
+        spec = axlib.to_partition_spec(axes_tuple, rules)
+        return _ns(mesh, _safe(mesh, spec, sds.shape))
+    is_axes = lambda x: isinstance(x, tuple) and \
+        all(a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(one, logical_axes, params_sds, is_leaf=is_axes)
+
+
+def opt_state_shardings(mesh, rules, logical_axes, opt_state_sds):
+    """AdamW state: step replicated; m/v shadow the param shardings."""
+    pshard = param_shardings(mesh, rules, logical_axes, opt_state_sds.m)
+    return type(opt_state_sds)(
+        step=_ns(mesh, P()), m=pshard,
+        v=jax.tree.map(lambda s: s, pshard))
+
+
+def batch_axes(rules) -> P:
+    return axlib.to_partition_spec(("batch",), rules)
+
+
+def _kv_cache_sharding(mesh, rules, cfg: ModelConfig, leading: int):
+    """Sharding for KVCache leaves with ``leading`` stacked scan dims."""
+    model_size = mesh.shape.get("model", 1)
+    bspec = axlib.to_partition_spec(("batch",), rules)[0]
+    lead = (None,) * leading
+    if cfg.n_kv_heads % model_size == 0:
+        kv_spec = P(*lead, bspec, None, "model", None)
+    else:
+        kv_spec = P(*lead, bspec, "model", None, None)   # shard slots
+    return kv_spec
+
+
+def decode_state_shardings(mesh, rules, cfg: ModelConfig, state_sds):
+    """Pytree of NamedShardings matching an init_decode_state structure.
+
+    Cache axes consult the rules: "cache_kv" (kv-head axis; default "model"
+    when divisible), "cache_slots" (slot axis; default picks "model" when kv
+    heads don't divide), "cache_dinner" (Mamba d_inner; default "model")."""
+    bspec = axlib.to_partition_spec(("batch",), rules)[0]
+    model_size = mesh.shape.get("model", 1)
+    kv_rule = rules.get("cache_kv", "model")
+    kv_ok = kv_rule is not None and cfg.n_kv_heads % _axis_size(mesh, kv_rule) == 0
+    slots_rule = rules.get("cache_slots",
+                           None if kv_ok else "model")
+    dinner_rule = rules.get("cache_dinner", "model")
+
+    def for_leaf(path, leaf):
+        # path: tuple of keys; leading dim is the scan-stacked period dim
+        # inside state["blocks"], absent in tail.
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        in_blocks = "blocks" in keys and "cross_blocks" not in keys
+        lead = 1 if (in_blocks or "cross_blocks" in keys) else 0
+        nd = leaf.ndim
+        spec = [None] * nd
+        if nd >= 2 + lead:
+            spec[lead] = bspec  # batch dim right after stacking dim
+        if nd == 4 + lead:      # [.., b, slots, kv, hd] KV or ring
+            if kv_ok:
+                spec[lead + 2] = kv_rule
+            spec[lead + 1] = slots_rule
+        elif nd == 3 + lead:    # mamba ssm [.., b, di, n] / conv [.., b, dc-1, di]
+            if leaf.shape[-1] == cfg.d_state:
+                spec[lead + 1] = dinner_rule
+            else:
+                spec[lead + 2] = dinner_rule
+        elif nd <= 1 + lead:    # pos [slots] / length scalars
+            spec = [None] * nd
+        return _ns(mesh, _safe(mesh, P(*spec), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(for_leaf, state_sds)
+
+
+def train_batch_shardings(mesh, rules, batch_sds):
+    bspec = axlib.to_partition_spec(("batch",), rules)[0]
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1:
+            spec[0] = bspec
+        return _ns(mesh, _safe(mesh, P(*spec), leaf.shape))
+
+    return jax.tree.map(one, batch_sds)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh, P()), tree)

@@ -1,0 +1,136 @@
+"""Shared model components: norms, rotary embeddings (RoPE / M-RoPE / abs),
+parameter initialization with attached logical sharding axes."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Param = Tuple[jnp.ndarray, Tuple[Optional[str], ...]]  # (value, logical axes)
+
+
+def is_param(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[1], tuple)
+            and all(a is None or isinstance(a, str) for a in x[1]))
+
+
+def split_params(tree):
+    """Split a {(value, axes)} tree into (values, axes) trees."""
+    values = jax.tree.map(lambda p: p[0], tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p[1], tree, is_leaf=is_param)
+    return values, axes
+
+
+import contextlib as _contextlib
+
+_ABSTRACT = [False]
+
+
+@_contextlib.contextmanager
+def abstract_init():
+    """Make param initializers emit ShapeDtypeStructs (dry-run: no alloc)."""
+    _ABSTRACT.append(True)
+    try:
+        yield
+    finally:
+        _ABSTRACT.pop()
+
+
+def _make(fn, shape, dtype):
+    if _ABSTRACT[-1]:
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return fn()
+
+
+def normal(key, shape, axes, scale=0.02, dtype=jnp.float32) -> Param:
+    return (_make(lambda: scale * jax.random.normal(key, shape, dtype),
+                  shape, dtype), axes)
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return (_make(lambda: jnp.zeros(shape, dtype), shape, dtype), axes)
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Param:
+    return (_make(lambda: jnp.ones(shape, dtype), shape, dtype), axes)
+
+
+def const(fn, shape, axes, dtype=jnp.float32) -> Param:
+    """Computed-constant parameter (e.g. Mamba A_log) — abstract-safe."""
+    return (_make(lambda: fn().astype(dtype), shape, dtype), axes)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., t, heads, head_dim]; positions: broadcastable to [..., t]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [d/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., t, d/2]
+    cos = jnp.cos(angles)[..., None, :]                     # [..., t, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Sequence[int]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the d/2 frequency slots are split into (temporal,
+    height, width) sections, each rotated by its own position component.
+
+    x: [b, t, h, d]; positions3: [b, t, 3] (text tokens: all components equal).
+    """
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [d/2]
+    assert sum(sections) == d // 2, (sections, d)
+    comp = []
+    for i, s in enumerate(sections):
+        comp += [i] * s
+    comp = jnp.array(comp)                                  # [d/2] -> component id
+    idx = jnp.broadcast_to(
+        comp[None, None, :], (positions3.shape[0], positions3.shape[1], d // 2))
+    pos = jnp.take_along_axis(positions3.astype(jnp.float32), idx, axis=-1)
+    angles = pos * freqs[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position embeddings."""
+    log_timescale = math.log(10000.0) / max(1, d_model // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(d_model // 2, dtype=jnp.float32))
+    scaled = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

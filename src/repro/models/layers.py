@@ -1,0 +1,537 @@
+"""Transformer sub-layers: GQA/MQA attention (train / prefill / decode with
+budgeted LaCache slots), sliding-window ring caches, SwiGLU MLP, top-k MoE
+(GShard-style capacity dispatch), Mamba-1 mixer, cross-attention (whisper)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cachelib
+from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.core.ladder import LadderSpec
+from repro.kernels import ops as kops
+from repro.launch.axes import shard
+from repro.models import common
+from repro.models.common import activation, normal, ones, rms_norm, zeros
+
+
+# =========================================================================== #
+# Ring cache for sliding-window (local) attention layers
+# =========================================================================== #
+class RingKVCache(NamedTuple):
+    k: jnp.ndarray          # [b, window, kv, hd]
+    v: jnp.ndarray
+    pos: jnp.ndarray        # [window] int32, -1 empty
+    next_pos: jnp.ndarray   # scalar int32: global position of next token
+
+
+def init_ring_cache(batch, window, kv_heads, head_dim, dtype) -> RingKVCache:
+    return RingKVCache(
+        k=jnp.zeros((batch, window, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, window, kv_heads, head_dim), dtype),
+        pos=jnp.full((window,), -1, jnp.int32),
+        next_pos=jnp.zeros((), jnp.int32))
+
+
+def ring_append(c: RingKVCache, k_new, v_new) -> RingKVCache:
+    """Append one token at slot ``next_pos % window``."""
+    w = c.k.shape[1]
+    slot = c.next_pos % w
+    k = jax.lax.dynamic_update_slice(c.k, k_new.astype(c.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(c.v, v_new.astype(c.v.dtype), (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(c.pos, c.next_pos[None], (slot,))
+    return RingKVCache(k, v, pos, c.next_pos + 1)
+
+
+# =========================================================================== #
+# Attention
+# =========================================================================== #
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "wq": normal(ks[0], (d, h * hd), ("fsdp", "model"), sc, dtype),
+        "wk": normal(ks[1], (d, kv * hd), ("fsdp", "model"), sc, dtype),
+        "wv": normal(ks[2], (d, kv * hd), ("fsdp", "model"), sc, dtype),
+        "wo": normal(ks[3], (h * hd, d), ("model", "fsdp"), sc / math.sqrt(2 * cfg.n_layers), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((h * hd,), ("model",), dtype)
+        p["bk"] = zeros((kv * hd,), ("model",), dtype)
+        p["bv"] = zeros((kv * hd,), ("model",), dtype)
+    return p
+
+
+def _boundary_matmul(cfg: ModelConfig, x, w):
+    """TP-boundary projection; optionally bf16-accumulated so the SPMD
+    partial-sum collective moves bf16 instead of f32 (§Perf iter 2d)."""
+    if cfg.bf16_boundary_accum and x.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.bfloat16)
+    return x @ w
+
+
+def _qkv(w, cfg: ModelConfig, x):
+    b, t, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+    q = shard(q.reshape(b, t, h, hd), "batch", "seq", "model", None)
+    k = shard(k.reshape(b, t, kv, hd), "batch", "seq", "kv", None)
+    v = shard(v.reshape(b, t, kv, hd), "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def _rope_q(cfg: ModelConfig, q, positions, positions3=None):
+    if cfg.pos_emb != "rope":
+        return q
+    if cfg.mrope and positions3 is not None:
+        return common.apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+    return common.apply_rope(q, positions, cfg.rope_theta)
+
+
+def attention_train(w, cfg: ModelConfig, x, positions, *, window: int = 0,
+                    positions3=None, impl: Optional[str] = None):
+    """Full-sequence causal attention (train / dense prefill). Returns (y, (k, v))."""
+    b, t, _ = x.shape
+    q, k, v = _qkv(w, cfg, x)
+    q = _rope_q(cfg, q, positions, positions3)
+    k_rot = _rope_q(cfg, k, positions, positions3)
+    o = kops.flash_attention(q, k_rot, v, causal=True, window=window, impl=impl)
+    o = shard(o, "batch", "seq", "model", None)
+    y = _boundary_matmul(cfg, o.reshape(b, t, -1), w["wo"])
+    # saved across remat: backward must not re-run the TP all-reduce (§Perf 2)
+    y = checkpoint_name(y, "tp_out")
+    return shard(y, "batch", "res_seq", "residual"), (k, k_rot, v)
+
+
+def attention_decode(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
+                     spec: LadderSpec, layer_ord, policy: str,
+                     true_pos, impl: Optional[str] = None
+                     ) -> Tuple[jnp.ndarray, KVCache]:
+    """Single-token decode against a budgeted (LaCache) slot cache.
+
+    rope_mode "cache": K stored rotated by its *slot* index; compaction
+    re-rotates moved keys by the slot delta (cache.compact rope_theta) —
+    cache-relative positions (stable beyond the pre-training window) without
+    the O(budget) re-rotation every step (§Perf iter 1c).
+    rope_mode "original": K stored rotated by true positions.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    rope_mode = cfg.lacache.rope_mode
+    cache_rope = (cfg.pos_emb == "rope" and rope_mode == "cache"
+                  and not cfg.mrope)
+    q, k_new, v_new = _qkv(w, cfg, x)           # t == 1
+
+    kv_cache = cachelib.maybe_compact(
+        kv_cache, spec, layer_ord, policy, 1,
+        rope_theta=cfg.rope_theta if cache_rope else None)
+    if cfg.pos_emb == "rope":
+        if cache_rope:
+            slot = kv_cache.length               # append target slot
+            k_store = common.apply_rope(k_new, slot[None, None], cfg.rope_theta)
+            qq = common.apply_rope(q, slot[None, None], cfg.rope_theta)
+        else:
+            k_store = _rope_q(cfg, k_new, jnp.asarray(true_pos)[None, None])
+            qq = _rope_q(cfg, q, jnp.asarray(true_pos)[None, None])
+    else:
+        k_store, qq = k_new, q
+    kv_cache = cachelib.append(kv_cache, k_store, v_new,
+                               jnp.asarray(true_pos, jnp.int32)[None])
+    keys = kv_cache.k
+
+    if policy in ("h2o", "tova"):
+        o, probs = kops.decode_attention(qq[:, 0], keys, kv_cache.v,
+                                         kv_cache.length, return_probs=True)
+        kv_cache = (cachelib.add_scores(kv_cache, probs) if policy == "h2o"
+                    else cachelib.set_scores(kv_cache, probs))
+    else:
+        o = kops.decode_attention(qq[:, 0], keys, kv_cache.v, kv_cache.length,
+                                  impl=impl)
+    y = o.reshape(b, 1, h * hd) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), kv_cache
+
+
+def attention_decode_ring(w, cfg: ModelConfig, x, ring: RingKVCache, *,
+                          window: int, impl: Optional[str] = None
+                          ) -> Tuple[jnp.ndarray, RingKVCache]:
+    """Single-token decode for sliding-window (local) layers: ring buffer."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim_
+    q, k_new, v_new = _qkv(w, cfg, x)
+    true_pos = ring.next_pos
+    k_rot = common.apply_rope(k_new, true_pos[None, None], cfg.rope_theta) \
+        if cfg.pos_emb == "rope" else k_new
+    ring = ring_append(ring, k_rot, v_new)
+    qq = common.apply_rope(q, true_pos[None, None], cfg.rope_theta) \
+        if cfg.pos_emb == "rope" else q
+    # validity: stored position within the window and occupied
+    valid = (ring.pos >= 0) & (ring.pos > ring.next_pos - 1 - window) \
+        & (ring.pos <= ring.next_pos - 1)
+    from repro.kernels import ref as kref
+    o = kref.mha_reference(qq, ring.k, ring.v, causal=False, kv_valid=valid)
+    y = o.reshape(b, 1, h * hd) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), ring
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(w, cfg: ModelConfig, x, cross: CrossKVCache,
+                    impl: Optional[str] = None):
+    """Decoder cross-attention over static encoder KV (whisper)."""
+    b, t, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    q = (x @ w["wq"] + (w["bq"] if cfg.qkv_bias else 0.0)).reshape(b, t, h, hd)
+    o = kops.flash_attention(q, cross.k, cross.v, causal=False, impl=impl)
+    y = o.reshape(b, t, h * hd) @ w["wo"]
+    return shard(y, "batch", "seq", "residual")
+
+
+def encode_cross_kv(w, cfg: ModelConfig, enc_out) -> CrossKVCache:
+    b, t, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    k = (enc_out @ w["wk"] + (w["bk"] if cfg.qkv_bias else 0.0)).reshape(b, t, kv, hd)
+    v = (enc_out @ w["wv"] + (w["bv"] if cfg.qkv_bias else 0.0)).reshape(b, t, kv, hd)
+    return CrossKVCache(k=k, v=v)
+
+
+# =========================================================================== #
+# MLP / MoE
+# =========================================================================== #
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc = 1.0 / math.sqrt(d)
+    p = {"w_up": normal(ks[0], (d, f), ("fsdp", "model"), sc, dtype),
+         "w_down": normal(ks[1], (f, d), ("model", "fsdp"),
+                          sc / math.sqrt(2 * cfg.n_layers), dtype)}
+    if cfg.mlp_gated:
+        p["w_gate"] = normal(ks[2], (d, f), ("fsdp", "model"), sc, dtype)
+    return p
+
+
+def mlp(w, cfg: ModelConfig, x):
+    act = activation(cfg.act)
+    h = x @ w["w_up"]
+    if cfg.mlp_gated:
+        h = act(x @ w["w_gate"]) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", "seq", "model")
+    y = checkpoint_name(_boundary_matmul(cfg, h, w["w_down"]), "tp_out")
+    return shard(y, "batch", "res_seq", "residual")
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    # expert-parallel when E >= 16, else tensor-parallel inside experts.
+    # "moe_dm"/"moe_ff" are mode-dependent logical axes: training shards the
+    # d_model dim FSDP-style; serving shards d_ff instead so the row-parallel
+    # partial-sum lands on the small (e_loc, C, d) tensor (§Perf iter 1e).
+    ep = e >= 16
+    ax_e = "experts" if ep else None
+    ax_f = "moe_ff" if ep else "model"
+    return {
+        "router": normal(ks[0], (d, e), ("fsdp", None), sc, jnp.float32),
+        "w_up": normal(ks[1], (e, d, f), (ax_e, "moe_dm", ax_f), sc, dtype),
+        "w_gate": normal(ks[2], (e, d, f), (ax_e, "moe_dm", ax_f), sc, dtype),
+        "w_down": normal(ks[3], (e, f, d), (ax_e, ax_f, "moe_dm"),
+                         sc / math.sqrt(2 * cfg.n_layers), dtype),
+    }
+
+
+def moe_ffn(w, cfg: ModelConfig, x, *, group_size: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with GShard-style grouped capacity dispatch.
+
+    Tokens are folded into groups of ``group_size``; within each group, each
+    expert processes at most C = ceil(cf * k * S / E) tokens (overflow drops —
+    standard GShard semantics). Returns (y, aux_loss).
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    act = activation(cfg.act)
+    group_size = group_size or cfg.moe_group_size
+    if t >= group_size and t % group_size == 0:
+        s = group_size
+    else:
+        s = t
+    g = (b * t) // s
+    xg = x.reshape(g, s, d)
+    xg = shard(xg, "batch", None, None)
+
+    logits = (xg.astype(jnp.float32) @ w["router"])          # [g, s, e]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # [g, s, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    cap = int(math.ceil(cfg.capacity_factor * k * s / e))
+    cap = min(cap, s)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # [g, s, k, e]
+    # position of each (token, choice) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(g, s * k, e), axis=1).reshape(g, s, k, e)
+    pos = pos * onehot - 1.0
+    keep = (pos >= 0) & (pos < cap)
+    onehot = onehot * keep
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) \
+        * onehot[..., None]                                  # [g, s, k, e, c]
+    dispatch = pos_oh.sum(axis=2)                            # [g, s, e, c]
+    combine = (pos_oh * gate[..., None, None]).sum(axis=2)   # [g, s, e, c]
+
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    xin = shard(xin, "batch", "experts", None, None)
+    hg = jnp.einsum("gecd,edf->gecf", xin, w["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", xin, w["w_up"])
+    h = act(hg) * hu
+    out = jnp.einsum("gecf,efd->gecd", h, w["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(xg.dtype), out)
+
+    # switch-style load balance loss
+    me = probs.mean(axis=1)                                  # [g, e]
+    ce = onehot.sum(axis=2).mean(axis=1)                     # [g, e] frac routed
+    aux = (me * ce).sum(axis=-1).mean() * e
+    return y.reshape(b, t, d), aux
+
+
+def moe_ffn_dense(w, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference all-experts dispatch (exact, E/k x FLOPs) — tests only."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    act = activation(cfg.act)
+    xf = x.reshape(b * t, d)
+    logits = xf.astype(jnp.float32) @ w["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    weights = jax.vmap(lambda i, g: jnp.zeros((e,), jnp.float32).at[i].set(g))(
+        idx, gate)
+    h = jnp.einsum("td,edf->tef", xf, w["w_gate"])
+    u = jnp.einsum("td,edf->tef", xf, w["w_up"])
+    o = jnp.einsum("tef,efd->ted", act(h) * u, w["w_down"])
+    y = jnp.einsum("te,ted->td", weights.astype(x.dtype), o)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=1)
+    aux = (probs.mean(axis=0) * onehot.mean(axis=0)).sum() * e
+    return y.reshape(b, t, d), aux
+
+
+# =========================================================================== #
+# Mamba-1 mixer
+# =========================================================================== #
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d, di, n, r, dc = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank_,
+                       cfg.d_conv)
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+
+    def _a_log():
+        return jnp.log(jnp.tile(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1)))
+
+    def _dt_bias():
+        return jnp.log(jnp.expm1(jnp.clip(
+            jnp.exp(jax.random.uniform(ks[5], (di,)) *
+                    (math.log(0.1) - math.log(0.001)) + math.log(0.001)),
+            1e-4)))
+
+    return {
+        "in_proj": normal(ks[0], (d, 2 * di), ("fsdp", "model"), sc, dtype),
+        "conv_w": normal(ks[1], (dc, di), (None, "model"), 0.5, dtype),
+        "conv_b": zeros((di,), ("model",), dtype),
+        "x_proj": normal(ks[2], (di, r + 2 * n), ("model", None), 1.0 / math.sqrt(di), dtype),
+        "dt_proj": normal(ks[3], (r, di), (None, "model"), 1.0 / math.sqrt(r), dtype),
+        "dt_bias": common.const(_dt_bias, (di,), ("model",), dtype),
+        "A_log": common.const(_a_log, (di, n), ("model", None)),
+        "D": ones((di,), ("model",), jnp.float32),
+        "out_proj": normal(ks[4], (di, d), ("model", "fsdp"),
+                           1.0 / math.sqrt(di) / math.sqrt(2 * cfg.n_layers), dtype),
+    }
+
+
+def _mamba_split(w, cfg, x):
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    xz = x @ w["in_proj"]                                    # [b, t, 2*di]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    return xi, z
+
+
+def _mamba_ssm_inputs(w, cfg, xi):
+    n, r = cfg.d_state, cfg.dt_rank_
+    dbc = xi @ w["x_proj"]                                   # [b, t, r+2n]
+    dt_r = dbc[..., :r]
+    B = dbc[..., r:r + n].astype(jnp.float32)
+    C = dbc[..., r + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r @ w["dt_proj"] + w["dt_bias"])  # [b, t, di]
+    return dt, B, C
+
+
+def mamba_train(w, cfg: ModelConfig, x, *, impl: Optional[str] = None):
+    """Full-sequence Mamba-1 mixer. Returns (y, final MambaState)."""
+    b, t, _ = x.shape
+    di, dc = cfg.d_inner, cfg.d_conv
+    xi, z = _mamba_split(w, cfg, x)
+    xi = shard(xi, "batch", "seq", "model")
+    # depthwise causal conv1d
+    pad = jnp.zeros((b, dc - 1, di), xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)
+    conv = sum(xp[:, i:i + t] * w["conv_w"][i][None, None] for i in range(dc))
+    conv_state = xp[:, -(dc - 1):] if dc > 1 else jnp.zeros((b, 0, di), xi.dtype)
+    xc = jax.nn.silu(conv + w["conv_b"])
+    dt, B, C = _mamba_ssm_inputs(w, cfg, xc)
+    A = -jnp.exp(w["A_log"])
+    y, hT = kops.ssm_scan(xc, dt, A, B, C, w["D"], impl=impl)
+    y = y * jax.nn.silu(z)
+    out = y @ w["out_proj"]
+    return shard(out, "batch", "res_seq", "residual"), MambaState(
+        conv=conv_state.astype(x.dtype), ssm=hT)
+
+
+def mamba_decode(w, cfg: ModelConfig, x, state: MambaState
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token recurrent Mamba step (O(1) state — the KV-free contrast)."""
+    b = x.shape[0]
+    di, dc, n = cfg.d_inner, cfg.d_conv, cfg.d_state
+    xi, z = _mamba_split(w, cfg, x)                          # [b, 1, di]
+    xi = shard(xi, "batch", "seq", "model")                  # keep di sharded
+    z = shard(z, "batch", "seq", "model")
+    window = jnp.concatenate([state.conv, xi], axis=1)       # [b, dc, di]
+    conv = (window * w["conv_w"][None]).sum(axis=1) + w["conv_b"]
+    xc = jax.nn.silu(conv)[:, None]                          # [b, 1, di]
+    xc = shard(xc, "batch", "seq", "model")
+    dt, B, C = _mamba_ssm_inputs(w, cfg, xc)
+    A = -jnp.exp(w["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])                # [b, di, n]
+    h = state.ssm * dA + (dt[:, 0] * xc[:, 0])[:, :, None] * B[:, 0][:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0]) + xc[:, 0] * w["D"]
+    y = y[:, None] * jax.nn.silu(z)
+    out = y.astype(x.dtype) @ w["out_proj"]
+    return shard(out, "batch", "seq", "residual"), MambaState(
+        conv=window[:, 1:].astype(x.dtype), ssm=h)
+
+
+# =========================================================================== #
+# Chunked decode (streaming prefill): T>1 tokens against the budgeted cache
+# =========================================================================== #
+def attention_decode_chunk(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
+                           spec: LadderSpec, layer_ord, policy: str,
+                           start_pos) -> Tuple[jnp.ndarray, KVCache]:
+    """Process a chunk of T tokens against the compacted cache (paper's
+    PG19 sliding-window evaluation; O(budget * T) instead of O(T^2)).
+
+    The chunk is appended to the cache first; attention then runs causally
+    over the slot buffer with q_offset = first chunk slot, so each chunk
+    token sees [whole compacted past || chunk prefix]."""
+    b, tc, _ = x.shape
+    h = cfg.n_heads
+    rope_mode = cfg.lacache.rope_mode
+    cache_rope = (cfg.pos_emb == "rope" and rope_mode == "cache"
+                  and not cfg.mrope)
+    q, k_new, v_new = _qkv(w, cfg, x)
+
+    kv_cache = cachelib.maybe_compact(
+        kv_cache, spec, layer_ord, policy, tc,
+        rope_theta=cfg.rope_theta if cache_rope else None)
+    if cfg.pos_emb == "rope":
+        if cache_rope:
+            slots = kv_cache.length + jnp.arange(tc)
+            k_store = common.apply_rope(k_new, slots[None], cfg.rope_theta)
+            qq = common.apply_rope(q, slots[None], cfg.rope_theta)
+        else:
+            pos = start_pos + jnp.arange(tc)
+            k_store = _rope_q(cfg, k_new, pos[None])
+            qq = _rope_q(cfg, q, pos[None])
+    else:
+        k_store, qq = k_new, q
+    q_off = kv_cache.length  # first chunk slot
+    kv_cache = cachelib.append(
+        kv_cache, k_store, v_new,
+        (start_pos + jnp.arange(tc)).astype(jnp.int32))
+
+    from repro.kernels import ref as kref
+    valid = jnp.arange(kv_cache.n_slots) < kv_cache.length
+    o = kref.mha_reference(qq, kv_cache.k, kv_cache.v, causal=True,
+                           q_offset=q_off, kv_valid=valid)
+    y = o.reshape(b, tc, h * cfg.head_dim_) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), kv_cache
+
+
+def mamba_chunk(w, cfg: ModelConfig, x, state: MambaState
+                ) -> Tuple[jnp.ndarray, MambaState]:
+    """Chunk of T tokens through the recurrence, threading conv+ssm state."""
+    b, tc, _ = x.shape
+    di, dc = cfg.d_inner, cfg.d_conv
+    xi, z = _mamba_split(w, cfg, x)
+    xi = shard(xi, "batch", "seq", "model")
+    xp = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    conv = sum(xp[:, i:i + tc] * w["conv_w"][i][None, None] for i in range(dc))
+    conv_state = xp[:, -(dc - 1):] if dc > 1 else jnp.zeros((b, 0, di), xi.dtype)
+    xc = jax.nn.silu(conv + w["conv_b"])
+    dt, B, C = _mamba_ssm_inputs(w, cfg, xc)
+    A = -jnp.exp(w["A_log"])
+    y, hT = kops.ssm_scan(xc, dt, A, B, C, w["D"], h0=state.ssm)
+    y = y * jax.nn.silu(z)
+    out = y @ w["out_proj"]
+    return shard(out, "batch", "res_seq", "residual"), MambaState(
+        conv=conv_state.astype(x.dtype), ssm=hT)
+
+
+def ring_chunk(w, cfg: ModelConfig, x, ring: RingKVCache, *, window: int
+               ) -> Tuple[jnp.ndarray, RingKVCache]:
+    """Chunk decode for sliding-window layers: attend to [ring || chunk]
+    with the window mask, then rebuild the ring from the newest positions
+    (gather by residue class — duplicate-free by the ring invariant
+    slot == pos % window)."""
+    b, tc, _ = x.shape
+    h, hd, kvh = cfg.n_heads, cfg.head_dim_, cfg.n_kv_heads
+    wsz = ring.k.shape[1]
+    start = ring.next_pos
+    pos_c = start + jnp.arange(tc)
+    q, k_new, v_new = _qkv(w, cfg, x)
+    if cfg.pos_emb == "rope":
+        qq = common.apply_rope(q, pos_c[None], cfg.rope_theta)
+        k_rot = common.apply_rope(k_new, pos_c[None], cfg.rope_theta)
+    else:
+        qq, k_rot = q, k_new
+    keys = jnp.concatenate([ring.k, k_rot.astype(ring.k.dtype)], axis=1)
+    vals = jnp.concatenate([ring.v, v_new.astype(ring.v.dtype)], axis=1)
+    kpos = jnp.concatenate([ring.pos, pos_c.astype(jnp.int32)])
+
+    # window-causal attention with per-query masks (inline reference)
+    mask = (kpos[None, :] >= 0) & (kpos[None, :] <= pos_c[:, None]) \
+        & (kpos[None, :] > pos_c[:, None] - window)
+    qf = qq.astype(jnp.float32) / (hd ** 0.5)
+    kf = jnp.repeat(keys.astype(jnp.float32), h // kvh, axis=2)
+    vf = jnp.repeat(vals.astype(jnp.float32), h // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(x.dtype)
+    y = o.reshape(b, tc, h * hd) @ w["wo"]
+
+    # rebuild ring: slot j holds the newest position p_j with p_j % wsz == j
+    last = start + tc - 1
+    j = jnp.arange(wsz)
+    p_j = last - ((last - j) % wsz)
+    src = jnp.where(p_j >= start, wsz + (p_j - start), j)
+    live = p_j >= 0
+    gk = jnp.take(keys, src, axis=1)
+    gv = jnp.take(vals, src, axis=1)
+    kk = jnp.where(live[None, :, None, None], gk, jnp.zeros((), gk.dtype))
+    vv = jnp.where(live[None, :, None, None], gv, jnp.zeros((), gv.dtype))
+    pp = jnp.where(live, p_j, -1).astype(jnp.int32)
+    return shard(y, "batch", "seq", "residual"), RingKVCache(
+        k=kk, v=vv, pos=pp, next_pos=start + tc)

@@ -1,0 +1,718 @@
+"""Composable transformer LM covering all assigned architecture families.
+
+One stack definition serves dense GQA/MQA, MoE, Mamba (pure SSM), hybrid
+(Jamba-style interleave), local/global sliding-window (Gemma-3), M-RoPE VLM
+backbones (Qwen2-VL) and encoder-decoder audio backbones (Whisper).
+
+Deep stacks are compiled as ``lax.scan`` over the repeating layer *period*
+(DESIGN.md §4) with stacked parameters and remat; the remainder layers are
+unrolled ("tail"). Three entry points:
+
+  * :func:`forward_train`  — full-sequence teacher forcing (no cache),
+  * :func:`prefill`        — dense prefill -> LaCache-compacted decode state,
+  * :func:`decode_step`    — one token against the budgeted caches
+                             (the paper's serve path, iterative compaction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core import cache as cachelib
+from repro.core import ladder
+from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.launch.axes import shard
+from repro.models import common, layers
+from repro.models.common import normal, ones, rms_norm, split_params, zeros
+
+FRAME_DIM = 128   # stub audio-frame embedding dim (conv frontend carve-out)
+PATCH_DIM = 128   # stub vision-patch embedding dim (ViT carve-out)
+
+
+# =========================================================================== #
+# Structure helpers
+# =========================================================================== #
+def _periodization(cfg: ModelConfig) -> Tuple[int, int, list]:
+    specs = cfg.layer_specs()
+    period = cfg.scan_period()
+    n_full = cfg.n_layers // period
+    return period, n_full, specs
+
+
+def cache_positions(cfg: ModelConfig) -> Dict[str, Any]:
+    """Static layout: which period positions carry which state kind."""
+    period, n_full, specs = _periodization(cfg)
+    pspecs = specs[:period]
+    gpp = sum(1 for s in pspecs if s.attn == "global")
+    layout = {
+        "period": period, "n_full": n_full, "specs": specs, "pspecs": pspecs,
+        "gpp": gpp,
+        "tail_specs": specs[n_full * period:],
+    }
+    return layout
+
+
+def ladder_spec(cfg: ModelConfig, budget: Optional[int] = None) -> ladder.LadderSpec:
+    lc = cfg.resolved_lacache()
+    spec = ladder.make_spec(lc, max(1, cfg.n_cache_layers))
+    if budget is not None:
+        spec = spec._replace(budget=budget)
+    return spec
+
+
+# =========================================================================== #
+# Init
+# =========================================================================== #
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    p: Dict[str, Any] = {}
+    ks = jax.random.split(key, 6)
+    if spec.kind == "attn":
+        p["norm"] = ones((cfg.d_model,), (None,), jnp.float32)
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype)
+        if cfg.cross_attention:
+            p["cross_norm"] = ones((cfg.d_model,), (None,), jnp.float32)
+            p["cross"] = layers.init_cross_attention(ks[1], cfg, dtype)
+    else:
+        p["norm"] = ones((cfg.d_model,), (None,), jnp.float32)
+        p["mamba"] = layers.init_mamba(ks[2], cfg, dtype)
+    if cfg.d_ff > 0 and spec.kind == "attn" or (cfg.d_ff > 0 and spec.kind == "mamba" and cfg.arch_type == "hybrid"):
+        p["mlp_norm"] = ones((cfg.d_model,), (None,), jnp.float32)
+        if spec.moe:
+            p["moe"] = layers.init_moe(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def _stack_vals(xs):
+    """Stack param values; abstract-init (ShapeDtypeStruct) safe."""
+    if isinstance(xs[0], jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((len(xs),) + tuple(xs[0].shape), xs[0].dtype)
+    return jnp.stack(xs, axis=0)
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_axes) pytrees."""
+    dtype = jnp.dtype(cfg.dtype)
+    layout = cache_positions(cfg)
+    period, n_full = layout["period"], layout["n_full"]
+    keys = jax.random.split(key, 8)
+
+    tree: Dict[str, Any] = {
+        "embed": normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                        ("model", "fsdp"), 0.02, dtype),
+        "final_norm": ones((cfg.d_model,), (None,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = normal(keys[1], (cfg.d_model, cfg.padded_vocab),
+                                 ("fsdp", "model"), 0.02, dtype)
+
+    bkeys = jax.random.split(keys[2], max(1, n_full) * period).reshape(
+        max(1, n_full), period, 2)
+    blocks = []
+    for i in range(n_full):
+        blocks.append({f"p{p}": _init_layer(bkeys[i, p], cfg,
+                                            layout["pspecs"][p], dtype)
+                       for p in range(period)})
+    if blocks:
+        tree["blocks"] = jax.tree.map(
+            lambda *xs: (_stack_vals([x[0] for x in xs]), (None,) + xs[0][1]),
+            *blocks, is_leaf=common.is_param)
+    tkeys = jax.random.split(keys[3], max(1, len(layout["tail_specs"])))
+    tree["tail"] = {f"t{i}": _init_layer(tkeys[i], cfg, s, dtype)
+                    for i, s in enumerate(layout["tail_specs"])}
+
+    if cfg.n_patches > 0:
+        tree["patch_proj"] = normal(keys[4], (PATCH_DIM, cfg.d_model),
+                                    (None, "fsdp"), 0.02, dtype)
+    if cfg.encoder_layers > 0:
+        ekeys = jax.random.split(keys[5], cfg.encoder_layers + 1)
+        enc_blocks = [{"p0": _init_layer(ekeys[i], cfg,
+                                         LayerSpec(kind="attn", attn="global"),
+                                         dtype)}
+                      for i in range(cfg.encoder_layers)]
+        # strip cross-attn from encoder blocks
+        for b in enc_blocks:
+            b["p0"].pop("cross", None)
+            b["p0"].pop("cross_norm", None)
+        tree["enc"] = {
+            "frame_proj": normal(ekeys[-1], (FRAME_DIM, cfg.d_model),
+                                 (None, "fsdp"), 0.02, dtype),
+            "blocks": jax.tree.map(
+                lambda *xs: (_stack_vals([x[0] for x in xs]), (None,) + xs[0][1]),
+                *enc_blocks, is_leaf=common.is_param),
+            "final_norm": ones((cfg.d_model,), (None,), jnp.float32),
+        }
+    return split_params(tree)
+
+
+# =========================================================================== #
+# Layer application (shared by all passes)
+# =========================================================================== #
+def _apply_ffn(p, cfg, x, aux):
+    if "moe" in p:
+        h, a = layers.moe_ffn(p["moe"], cfg, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x + h, aux + a
+    if "mlp" in p:
+        h = layers.mlp(p["mlp"], cfg, rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+        return x + h, aux
+    return x, aux
+
+
+def _apply_layer_train(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                       aux, *, positions3=None, cross: Optional[CrossKVCache] = None,
+                       causal=True, kv_keep=None):
+    """Returns (x, aux, extra) where extra carries per-layer state for
+    dense prefill: ("kv", (k, k_rot, v)) / ("mamba", MambaState) or None.
+
+    ``kv_keep``: optional bool[T] per-layer token-retention mask (evaluation
+    of static cache patterns, paper Fig. 3) — attention sees only kept
+    positions (plus the causal constraint)."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    extra = None
+    if spec.kind == "attn":
+        window = cfg.sliding_window if spec.attn == "local" else 0
+        if kv_keep is not None and spec.attn == "global":
+            from repro.kernels import ref as kref
+            q, k, v = layers._qkv(p["attn"], cfg, h)
+            q = layers._rope_q(cfg, q, positions, positions3)
+            k_rot = layers._rope_q(cfg, k, positions, positions3)
+            o = kref.mha_reference(q, k_rot, v, causal=True,
+                                   kv_valid=kv_keep)
+            y = o.reshape(h.shape[0], h.shape[1], -1) @ p["attn"]["wo"]
+            x = x + y
+            x, aux = _apply_ffn(p, cfg, x, aux)
+            return x, aux, None
+        if not causal:
+            from repro.kernels import ops as kops
+            q, k, v = layers._qkv(p["attn"], cfg, h)
+            o = kops.flash_attention(q, k, v, causal=False)
+            y = o.reshape(h.shape[0], h.shape[1], -1) @ p["attn"]["wo"]
+        else:
+            y, kv = layers.attention_train(p["attn"], cfg, h, positions,
+                                           window=window, positions3=positions3)
+            extra = kv  # (k_unrotated, k_rotated, v)
+        x = x + y
+        if cross is not None and "cross" in p:
+            hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+            x = x + layers.cross_attention(p["cross"], cfg, hc, cross)
+    else:
+        y, mstate = layers.mamba_train(p["mamba"], cfg, h)
+        x = x + y
+        extra = mstate
+    x, aux = _apply_ffn(p, cfg, x, aux)
+    return x, aux, extra
+
+
+# =========================================================================== #
+# Embedding / position helpers
+# =========================================================================== #
+def _embed_tokens(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return shard(e, "batch", "res_seq", "residual")
+
+
+def _build_embeds(params, cfg: ModelConfig, tokens, patches=None):
+    """Token embeddings, with the VLM patch prefix prepended when present.
+
+    Returns (embeds [b, T, d], positions [T] or None, positions3 [b, T, 3]).
+    """
+    emb = _embed_tokens(params, cfg, tokens)
+    b = tokens.shape[0]
+    if patches is not None and cfg.n_patches > 0:
+        pe = patches.astype(emb.dtype) @ params["patch_proj"]
+        emb = jnp.concatenate([pe, emb], axis=1)
+    t = emb.shape[1]
+    positions = jnp.arange(t)
+    positions3 = None
+    if cfg.mrope:
+        npat = cfg.n_patches if patches is not None else 0
+        side = max(1, int(npat ** 0.5)) if npat else 1
+        pid = jnp.arange(t)
+        hh = jnp.where(pid < npat, (pid // side), 0)
+        ww = jnp.where(pid < npat, (pid % side), 0)
+        tt = jnp.zeros_like(pid)
+        text_pos = side + (pid - npat)          # sequential after the image
+        p3 = jnp.where((pid < npat)[:, None],
+                       jnp.stack([tt, hh, ww], axis=-1),
+                       jnp.stack([text_pos] * 3, axis=-1))
+        positions3 = jnp.broadcast_to(p3[None], (b, t, 3)).astype(jnp.int32)
+    if cfg.pos_emb == "abs":
+        emb = emb + common.sinusoidal_positions(t, cfg.d_model)[None].astype(emb.dtype)
+    return emb, positions, positions3
+
+
+# =========================================================================== #
+# Encoder (whisper)
+# =========================================================================== #
+def encode_audio(params, cfg: ModelConfig, frames):
+    """frames: [b, n_frames, FRAME_DIM] stub embeddings -> [b, n_frames, d]."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["enc"]["frame_proj"]
+    x = x + common.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+
+    def body(carry, pblock):
+        h, aux = carry
+        h, aux, _ = _apply_layer_train(
+            pblock["p0"], cfg, LayerSpec(kind="attn", attn="global"),
+            h, jnp.arange(h.shape[1]), aux, causal=False)
+        return (h, aux), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["enc"]["blocks"])
+    return rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def _cross_caches(params, cfg: ModelConfig, enc_out):
+    """Precompute per-layer cross-attention KV (stacked per period/tail)."""
+    layout = cache_positions(cfg)
+
+    def per_block(pblock):
+        return {k: layers.encode_cross_kv(v["cross"], cfg, enc_out)
+                for k, v in pblock.items() if "cross" in v}
+
+    cross_blocks = None
+    if layout["n_full"]:
+        cross_blocks = jax.vmap(per_block)(params["blocks"])
+    cross_tail = {k: layers.encode_cross_kv(v["cross"], cfg, enc_out)
+                  for k, v in params["tail"].items() if "cross" in v}
+    return cross_blocks, cross_tail
+
+
+# =========================================================================== #
+# Train / dense-prefill forward
+# =========================================================================== #
+def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
+                  frames=None, collect_kv: bool = False, remat: bool = True,
+                  kv_keep_masks=None):
+    """Teacher-forcing forward. Returns (logits, aux, kv_list or None).
+
+    ``collect_kv`` additionally returns each global-attention layer's
+    (k_unrotated, k_rotated, v) for dense prefill -> cache construction.
+    ``kv_keep_masks``: bool[n_layers, T] static per-layer retention pattern
+    (Fig. 3 evaluation; global-attention layers only).
+    """
+    layout = cache_positions(cfg)
+    x, positions, positions3 = _build_embeds(params, cfg, tokens, patches)
+    cross_blocks = cross_tail = None
+    if cfg.cross_attention and frames is not None:
+        enc_out = encode_audio(params, cfg, frames)
+        cross_blocks, cross_tail = _cross_caches(params, cfg, enc_out)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, xs):
+        h, aux = carry
+        pblock = xs["params"]
+        cross_b = xs.get("cross")
+        keeps = xs.get("kv_keep")
+        extras = {}
+        for p in range(layout["period"]):
+            spec = layout["pspecs"][p]
+            cr = None
+            if cross_b is not None and f"p{p}" in cross_b:
+                cr = cross_b[f"p{p}"]
+            h, aux, extra = _apply_layer_train(
+                pblock[f"p{p}"], cfg, spec, h, positions, aux,
+                positions3=positions3, cross=cr,
+                kv_keep=None if keeps is None else keeps[p])
+            if collect_kv and extra is not None:
+                extras[f"p{p}"] = extra
+        return (h, aux), extras if collect_kv else None
+
+    if remat:
+        policy = jax.checkpoint_policies.save_only_these_names("tp_out")
+        body = jax.checkpoint(period_body, policy=policy)
+    else:
+        body = period_body
+    kv_blocks = None
+    if layout["n_full"]:
+        xs = {"params": params["blocks"]}
+        if cross_blocks is not None:
+            xs["cross"] = cross_blocks
+        if kv_keep_masks is not None:
+            n_full, period = layout["n_full"], layout["period"]
+            xs["kv_keep"] = jnp.asarray(kv_keep_masks)[
+                : n_full * period].reshape(n_full, period, -1)
+        (x, aux), kv_blocks = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        aux = aux0
+
+    kv_tail = {}
+    n_scanned = layout["n_full"] * layout["period"]
+    for i, spec in enumerate(layout["tail_specs"]):
+        cr = cross_tail.get(f"t{i}") if cross_tail else None
+        x, aux, extra = _apply_layer_train(
+            params["tail"][f"t{i}"], cfg, spec, x, positions, aux,
+            positions3=positions3, cross=cr,
+            kv_keep=None if kv_keep_masks is None
+            else jnp.asarray(kv_keep_masks)[n_scanned + i])
+        if collect_kv and extra is not None:
+            kv_tail[f"t{i}"] = extra
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(x @ head, "batch", "seq", "model")
+    if collect_kv:
+        return logits, aux, (kv_blocks, kv_tail)
+    return logits, aux, None
+
+
+# =========================================================================== #
+# Decode state (budgeted LaCache caches + ring windows + SSM states)
+# =========================================================================== #
+def _empty_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                       n_slots: int, dtype):
+    if spec.kind == "mamba":
+        return MambaState(
+            conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            ssm=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32))
+    if spec.attn == "local":
+        w = max(1, cfg.sliding_window)
+        return layers.init_ring_cache(batch, w, cfg.n_kv_heads, cfg.head_dim_, dtype)
+    with_scores = cfg.lacache.policy in ("h2o", "tova")
+    return cachelib.init_cache(batch, n_slots, cfg.n_kv_heads, cfg.head_dim_,
+                               dtype, with_scores=with_scores)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
+                      frames=None) -> Dict[str, Any]:
+    """Empty decode state. ``n_slots`` is the per-layer cache buffer size
+    (= LaCache budget B, or seq_len for the full-cache baseline)."""
+    dtype = jnp.dtype(cfg.dtype)
+    layout = cache_positions(cfg)
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+
+    def stack_layer(spec):
+        one = _empty_layer_state(cfg, spec, batch, n_slots, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (layout["n_full"],) + x.shape),
+            one)
+
+    state["blocks"] = {f"p{p}": stack_layer(layout["pspecs"][p])
+                       for p in range(layout["period"])} if layout["n_full"] else {}
+    state["tail"] = {f"t{i}": _empty_layer_state(cfg, s, batch, n_slots, dtype)
+                     for i, s in enumerate(layout["tail_specs"])}
+    if cfg.cross_attention and frames is not None:
+        enc_out = encode_audio(params, cfg, frames)
+        cb, ct = _cross_caches(params, cfg, enc_out)
+        state["cross_blocks"], state["cross_tail"] = cb, ct
+    return state
+
+
+def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
+                                    positions, n_slots: int, lspec, layer_ord):
+    """Turn dense-prefill per-layer state into the decode-time state."""
+    dtype = jnp.dtype(cfg.dtype)
+    if spec.kind == "mamba":
+        return extra  # final MambaState
+    k_unrot, k_rot, v = extra
+    t = k_unrot.shape[1]
+    batch = k_unrot.shape[0]
+    if spec.attn == "local":
+        w = max(1, cfg.sliding_window)
+        take = min(w, t)
+        ring = layers.init_ring_cache(batch, w, cfg.n_kv_heads, cfg.head_dim_, dtype)
+        kw = k_rot[:, t - take:]
+        vw = v[:, t - take:]
+        k = jax.lax.dynamic_update_slice(
+            ring.k, kw.astype(dtype), (0, 0, 0, 0))
+        vv = jax.lax.dynamic_update_slice(
+            ring.v, vw.astype(dtype), (0, 0, 0, 0))
+        pos = jnp.full((w,), -1, jnp.int32).at[:take].set(
+            jnp.arange(t - take, t, dtype=jnp.int32))
+        # ring invariant: slot == pos % w. Rotate so entries land on their slot.
+        slots = pos[:take] % w
+        k = ring.k.at[:, slots].set(kw.astype(dtype))
+        vv = ring.v.at[:, slots].set(vw.astype(dtype))
+        pos_arr = jnp.full((w,), -1, jnp.int32).at[slots].set(pos[:take])
+        return layers.RingKVCache(k=k, v=vv, pos=pos_arr,
+                                  next_pos=jnp.asarray(t, jnp.int32))
+    # global attention: budgeted slot cache. Keys are stored ROTATED: during
+    # prefill position == slot index, so k_rot serves both rope modes; under
+    # cache-relative mode compaction applies the slot-delta fixup.
+    with_scores = cfg.lacache.policy in ("h2o", "tova")
+    cache_rope = (cfg.pos_emb == "rope" and cfg.lacache.rope_mode == "cache"
+                  and not cfg.mrope)
+    n_buf = max(t, n_slots)
+    c = cachelib.init_cache(batch, n_buf, cfg.n_kv_heads, cfg.head_dim_, dtype,
+                            with_scores=with_scores)
+    c = cachelib.append(c, k_rot, v, jnp.arange(t, dtype=jnp.int32))
+    c = cachelib.compact_to_budget(
+        c, lspec, layer_ord, cfg.lacache.policy, n_slots,
+        rope_theta=cfg.rope_theta if cache_rope else None)
+    return cachelib.crop(c, n_slots)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
+            patches=None, frames=None):
+    """Dense prefill: full forward, then LaCache compaction into the budget
+    (paper Fig. 2: 'compact the original full KV cache'). Returns
+    (last_logits [b, V], decode_state)."""
+    layout = cache_positions(cfg)
+    lspec = ladder_spec(cfg, budget=n_slots)
+    logits, _, (kv_blocks, kv_tail) = forward_train(
+        params, cfg, tokens, patches=patches, frames=frames,
+        collect_kv=True, remat=False)
+    t_total = logits.shape[1]
+    positions = jnp.arange(t_total)
+    gpp = layout["gpp"]
+
+    state: Dict[str, Any] = {"pos": jnp.asarray(t_total, jnp.int32)}
+    blocks_state = {}
+    for p in range(layout["period"]):
+        spec = layout["pspecs"][p]
+        key = f"p{p}"
+        if kv_blocks is None or key not in kv_blocks:
+            continue
+        extra = kv_blocks[key]  # leaves stacked [n_full, ...]
+        if spec.kind == "mamba" or spec.attn == "local":
+            blocks_state[key] = jax.vmap(
+                lambda e: _build_layer_cache_from_prefill(
+                    cfg, spec, e, positions, n_slots, lspec, 0))(extra)
+        else:
+            rank = sum(1 for q in range(p) if layout["pspecs"][q].attn == "global")
+            ords = jnp.arange(layout["n_full"]) * gpp + rank
+            blocks_state[key] = jax.vmap(
+                lambda e, o: _build_layer_cache_from_prefill(
+                    cfg, spec, e, positions, n_slots, lspec, o))(extra, ords)
+    state["blocks"] = blocks_state
+
+    tail_state = {}
+    n_tail_base = layout["n_full"] * gpp
+    tr = 0
+    for i, spec in enumerate(layout["tail_specs"]):
+        key = f"t{i}"
+        if key not in kv_tail:
+            continue
+        if spec.attn == "global":
+            ordl = n_tail_base + tr
+            tr += 1
+        else:
+            ordl = 0
+        tail_state[key] = _build_layer_cache_from_prefill(
+            cfg, spec, kv_tail[key], positions, n_slots, lspec, ordl)
+    state["tail"] = tail_state
+
+    if cfg.cross_attention and frames is not None:
+        enc_out = encode_audio(params, cfg, frames)
+        cb, ct = _cross_caches(params, cfg, enc_out)
+        state["cross_blocks"], state["cross_tail"] = cb, ct
+    return logits[:, -1], state
+
+
+# =========================================================================== #
+# Decode step
+# =========================================================================== #
+def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
+                        lspec, layer_ord, true_pos, cross=None):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if spec.kind == "mamba":
+        y, st = layers.mamba_decode(p["mamba"], cfg, h, st)
+        x = x + y
+    elif spec.attn == "local":
+        y, st = layers.attention_decode_ring(
+            p["attn"], cfg, h, st, window=cfg.sliding_window)
+        x = x + y
+    else:
+        y, st = layers.attention_decode(
+            p["attn"], cfg, h, st, spec=lspec, layer_ord=layer_ord,
+            policy=cfg.lacache.policy, true_pos=true_pos)
+        x = x + y
+    if cross is not None and "cross" in p:
+        hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        x = x + layers.cross_attention(p["cross"], cfg, hc, cross)
+    x, _ = _apply_ffn(p, cfg, x, jnp.zeros((), jnp.float32))
+    return x, st
+
+
+def decode_step(params, cfg: ModelConfig, state: Dict[str, Any], tokens
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One autoregressive step: tokens [b, 1] -> (logits [b, V], state).
+
+    Runs LaCache iterative compaction in-step (lax.cond inside each layer)
+    whenever a layer's budget is full — the paper's Sec. 3.3 mechanism.
+    """
+    layout = cache_positions(cfg)
+    lspec = ladder_spec(cfg)
+    if state["blocks"]:
+        any_kv = [v for k, v in state["blocks"].items()
+                  if isinstance(v, KVCache)]
+        if any_kv:
+            lspec = lspec._replace(budget=any_kv[0].n_slots)
+    pos = state["pos"]
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.pos_emb == "abs":
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+    gpp = layout["gpp"]
+
+    new_state = dict(state)
+    if layout["n_full"]:
+        def body(carry, xs):
+            h = carry
+            pblock, caches, pidx = xs["params"], xs["caches"], xs["idx"]
+            cross_b = xs.get("cross")
+            new_caches = {}
+            for p in range(layout["period"]):
+                spec = layout["pspecs"][p]
+                key = f"p{p}"
+                st = caches.get(key)
+                rank = sum(1 for q in range(p)
+                           if layout["pspecs"][q].attn == "global")
+                ordl = pidx * gpp + rank
+                cr = cross_b.get(key) if cross_b else None
+                h, st_new = _apply_layer_decode(
+                    pblock[key], cfg, spec, h, st, lspec=lspec,
+                    layer_ord=ordl, true_pos=pos, cross=cr)
+                if st is not None:
+                    new_caches[key] = st_new
+            return h, new_caches
+
+        xs = {"params": params["blocks"], "caches": state["blocks"],
+              "idx": jnp.arange(layout["n_full"])}
+        if "cross_blocks" in state:
+            xs["cross"] = state["cross_blocks"]
+        x, new_blocks = jax.lax.scan(body, x, xs)
+        new_state["blocks"] = new_blocks
+
+    n_tail_base = layout["n_full"] * gpp
+    tr = 0
+    new_tail = {}
+    for i, spec in enumerate(layout["tail_specs"]):
+        key = f"t{i}"
+        st = state["tail"].get(key)
+        if spec.attn == "global":
+            ordl = n_tail_base + tr
+            tr += 1
+        else:
+            ordl = 0
+        cr = state.get("cross_tail", {}).get(key)
+        x, st_new = _apply_layer_decode(
+            params["tail"][key], cfg, spec, x, st, lspec=lspec,
+            layer_ord=ordl, true_pos=pos, cross=cr)
+        if st is not None:
+            new_tail[key] = st_new
+    new_state["tail"] = new_tail
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(x @ head, "batch", "seq", "model")
+    new_state["pos"] = pos + 1
+    return logits[:, 0], new_state
+
+
+def _sinusoid_at(pos, d_model: int):
+    import math as _m
+    log_timescale = _m.log(10000.0) / max(1, d_model // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(d_model // 2, dtype=jnp.float32))
+    scaled = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)])
+
+
+# =========================================================================== #
+# Loss
+# =========================================================================== #
+def lm_loss(logits, targets, mask=None):
+    """Next-token cross entropy; logits [b, t, V], targets [b, t]."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# =========================================================================== #
+# Chunked decode: streaming prefill / scoring (paper's PG19 sliding window)
+# =========================================================================== #
+def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process T tokens against the budgeted caches in one pass:
+    tokens [b, T] -> (logits [b, T, V], state). Each token sees the whole
+    compacted past plus the chunk prefix — identical semantics to T calls of
+    decode_step (exactly equal when no compaction fires mid-chunk; otherwise
+    compaction is amortized once per chunk, the paper's window setting).
+    O(budget * T) attention instead of O(T^2) dense prefill."""
+    layout = cache_positions(cfg)
+    lspec = ladder_spec(cfg)
+    any_kv = [v for v in state["blocks"].values() if isinstance(v, KVCache)] \
+        + [v for v in state["tail"].values() if isinstance(v, KVCache)]
+    if any_kv:
+        lspec = lspec._replace(budget=any_kv[0].n_slots)
+    pos0 = state["pos"]
+    tc = tokens.shape[1]
+    x = _embed_tokens(params, cfg, tokens)
+    if cfg.pos_emb == "abs":
+        rows = jax.vmap(lambda p: _sinusoid_at(p, cfg.d_model))(
+            pos0 + jnp.arange(tc))
+        x = x + rows[None].astype(x.dtype)
+    gpp = layout["gpp"]
+
+    def apply_one(p, spec, h, st, ordl, cross):
+        hh = rms_norm(h, p["norm"], cfg.norm_eps)
+        if spec.kind == "mamba":
+            y, st = layers.mamba_chunk(p["mamba"], cfg, hh, st)
+        elif spec.attn == "local":
+            y, st = layers.ring_chunk(p["attn"], cfg, hh, st,
+                                      window=cfg.sliding_window)
+        else:
+            y, st = layers.attention_decode_chunk(
+                p["attn"], cfg, hh, st, spec=lspec, layer_ord=ordl,
+                policy=cfg.lacache.policy, start_pos=pos0)
+        h = h + y
+        if cross is not None and "cross" in p:
+            hc = rms_norm(h, p["cross_norm"], cfg.norm_eps)
+            h = h + layers.cross_attention(p["cross"], cfg, hc, cross)
+        h, _ = _apply_ffn(p, cfg, h, jnp.zeros((), jnp.float32))
+        return h, st
+
+    new_state = dict(state)
+    if layout["n_full"]:
+        def body(carry, xs):
+            h = carry
+            pblock, caches, pidx = xs["params"], xs["caches"], xs["idx"]
+            cross_b = xs.get("cross")
+            new_caches = {}
+            for p in range(layout["period"]):
+                spec = layout["pspecs"][p]
+                key = f"p{p}"
+                st = caches.get(key)
+                rank = sum(1 for qq in range(p)
+                           if layout["pspecs"][qq].attn == "global")
+                ordl = pidx * gpp + rank
+                cr = cross_b.get(key) if cross_b else None
+                h, st_new = apply_one(pblock[key], spec, h, st, ordl, cr)
+                if st is not None:
+                    new_caches[key] = st_new
+            return h, new_caches
+
+        xs = {"params": params["blocks"], "caches": state["blocks"],
+              "idx": jnp.arange(layout["n_full"])}
+        if "cross_blocks" in state:
+            xs["cross"] = state["cross_blocks"]
+        x, new_blocks = jax.lax.scan(body, x, xs)
+        new_state["blocks"] = new_blocks
+
+    n_tail_base = layout["n_full"] * gpp
+    tr = 0
+    new_tail = {}
+    for i, spec in enumerate(layout["tail_specs"]):
+        key = f"t{i}"
+        st = state["tail"].get(key)
+        ordl = n_tail_base + tr if spec.attn == "global" else 0
+        if spec.attn == "global":
+            tr += 1
+        cr = state.get("cross_tail", {}).get(key)
+        x, st_new = apply_one(params["tail"][key], spec, x, st, ordl, cr)
+        if st is not None:
+            new_tail[key] = st_new
+    new_state["tail"] = new_tail
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(x @ head, "batch", "seq", "model")
+    new_state["pos"] = pos0 + tc
+    return logits, new_state

@@ -1,0 +1,140 @@
+"""Batched serving engine with LaCache iterative compaction.
+
+Wraps the model's prefill / decode_step into jitted drivers:
+
+* :meth:`generate` — batched autoregressive generation under any eviction
+  policy (lacache / streaming / h2o / full),
+* :meth:`score_stream` — token-by-token teacher-forced scoring through the
+  *decode* path (the paper's Wikitext/PG19 evaluation semantics: each
+  prediction only sees the compacted cache), with O(1) memory,
+* :meth:`generate_stream` — unbounded continuous generation (paper §3.3's
+  infinite-length claim): memory never grows past the budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving import sampling
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.budget = budget if budget is not None else cfg.lacache.budget
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg=cfg))
+        self._decode_score = jax.jit(self._decode_and_score)
+        self._prefill = jax.jit(functools.partial(M.prefill, cfg=cfg),
+                                static_argnames=("n_slots",))
+
+    # ------------------------------------------------------------------ #
+    def _decode_and_score(self, params, state, token, next_token):
+        logits, state = M.decode_step(params, self.cfg, state, token)
+        lp = sampling.log_prob_of(logits, next_token[:, 0])
+        return lp, logits, state
+
+    def new_state(self, batch: int, frames=None):
+        return M.init_decode_state(self.params, self.cfg, batch,
+                                   self.budget, frames=frames)
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, tokens, patches=None, frames=None):
+        return self._prefill(self.params, tokens=tokens, n_slots=self.budget,
+                             patches=patches, frames=frames)
+
+    def generate(self, prompt_tokens, max_new_tokens: int, *,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 patches=None, frames=None) -> np.ndarray:
+        """prompt_tokens [b, t] -> generated [b, max_new_tokens]."""
+        logits, state = self.prefill(prompt_tokens, patches=patches,
+                                     frames=frames)
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        tok = (sampling.greedy(logits) if temperature == 0.0 else
+               sampling.sample(key, logits, temperature, top_k))[:, None]
+        for i in range(max_new_tokens):
+            outs.append(np.asarray(tok[:, 0]))
+            logits, state = self._decode(self.params, state=state, tokens=tok)
+            if temperature == 0.0:
+                tok = sampling.greedy(logits)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = sampling.sample(sub, logits, temperature, top_k)[:, None]
+        return np.stack(outs, axis=1)
+
+    # ------------------------------------------------------------------ #
+    def score_stream(self, tokens, *, frames=None, prime: int = 1,
+                     collect_every: int = 1) -> np.ndarray:
+        """Teacher-forced token-by-token NLL through the decode path.
+
+        tokens [b, T]: feeds tokens[:, i] and scores tokens[:, i+1] under the
+        policy-restricted cache — the paper's language-modeling evaluation.
+        Returns per-position NLL [b, T-prime].
+        """
+        tokens = jnp.asarray(tokens)
+        b, T = tokens.shape
+        state = self.new_state(b, frames=frames)
+        # prime the cache with the first `prime` tokens (BOS etc.)
+        nlls = []
+        for i in range(T - 1):
+            lp, _, state = self._decode_score(
+                self.params, state, tokens[:, i:i + 1], tokens[:, i + 1:i + 2])
+            if i >= prime - 1:
+                nlls.append(np.asarray(-lp))
+        return np.stack(nlls, axis=1)
+
+    def cache_bytes(self, state) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state["blocks"])) + \
+               sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state["tail"]))
+
+
+# --------------------------------------------------------------------------- #
+# Chunked streaming APIs (added with model.decode_chunk)
+# --------------------------------------------------------------------------- #
+def _chunked_score(engine: "Engine", tokens, chunk: int = 64, frames=None):
+    """Teacher-forced NLL via decode_chunk: O(budget*T), ~chunk x fewer
+    dispatches than score_stream. Same streaming semantics (every prediction
+    sees only the compacted cache + chunk prefix)."""
+    import functools as _ft
+    from repro.models import model as _M
+    from repro.serving import sampling as _s
+    tokens = jnp.asarray(tokens)
+    b, T = tokens.shape
+    # a chunk must fit in the slot buffer alongside the compacted past
+    chunk = max(1, min(chunk, engine.budget // 2))
+    state = engine.new_state(b, frames=frames)
+    if not hasattr(engine, "_decode_chunk"):
+        engine._decode_chunk = jax.jit(
+            _ft.partial(_M.decode_chunk, cfg=engine.cfg))
+    nll = []
+    n_chunks = (T - 1) // chunk
+    for ci in range(n_chunks + (1 if (T - 1) % chunk else 0)):
+        s, e = ci * chunk, min((ci + 1) * chunk, T - 1)
+        if e <= s:
+            break
+        if e - s != chunk:  # ragged tail: pad to the jitted chunk size
+            pad = chunk - (e - s)
+            seg = jnp.pad(tokens[:, s:e], ((0, 0), (0, pad)))
+        else:
+            seg = tokens[:, s:e]
+        logits, state = engine._decode_chunk(engine.params, state=state,
+                                             tokens=seg)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        gold = tokens[:, s + 1:e + 1]
+        g = jnp.take_along_axis(lp[:, :e - s], gold[..., None], axis=-1)[..., 0]
+        nll.append(np.asarray(-g))
+    return np.concatenate(nll, axis=1)
+
+
+Engine.score_stream_chunked = _chunked_score

@@ -1,0 +1,27 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits: jnp.ndarray, temperature: float = 1.0,
+           top_k: int = 0) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k and top_k > 0 and top_k < lf.shape[-1]:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        thresh = vals[..., -1:]
+        lf = jnp.where(lf >= thresh, lf, -1e30)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def log_prob_of(logits: jnp.ndarray, token: jnp.ndarray) -> jnp.ndarray:
+    """log p(token | context); logits [b, V], token [b]."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, token[:, None], axis=-1)[:, 0]
+    return gold - logz

@@ -1,0 +1,15 @@
+"""Shared test config.
+
+``jax.clear_caches()`` between modules: a single pytest process otherwise
+accumulates hundreds of jitted executables (property sweeps + per-arch smoke
++ pallas interpret kernels) until XLA's CPU ORC JIT fails with
+"Failed to materialize symbols" / MemoryError late in the run.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

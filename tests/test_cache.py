@@ -1,0 +1,122 @@
+"""KV cache state machine: append / compact / policies (paper Sec. 3.3)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cachelib
+from repro.core.ladder import LadderSpec
+
+
+def spec(**kw):
+    d = dict(n_layers=8, span=2, overlap=1, chunk=2, n_sink=2, n_recent=4,
+             budget=24)
+    d.update(kw)
+    return LadderSpec(**d)
+
+
+def filled_cache(n=24, batch=2, kv=2, hd=8, with_scores=False):
+    c = cachelib.init_cache(batch, n, kv, hd, jnp.float32,
+                            with_scores=with_scores)
+    k = jnp.arange(batch * n * kv * hd, dtype=jnp.float32).reshape(batch, n, kv, hd)
+    c = cachelib.append(c, k, k + 1.0, jnp.arange(n, dtype=jnp.int32))
+    if with_scores:
+        c = c._replace(scores=jnp.linspace(0, 1, n))
+    return c
+
+
+def test_append_tracks_positions_and_length():
+    c = cachelib.init_cache(1, 16, 2, 4, jnp.float32)
+    c = cachelib.append(c, jnp.ones((1, 3, 2, 4)), jnp.ones((1, 3, 2, 4)),
+                        jnp.array([10, 11, 12]))
+    assert int(c.length) == 3
+    assert c.pos[:3].tolist() == [10, 11, 12]
+    assert int(c.pos[3]) == -1
+
+
+@pytest.mark.parametrize("policy", ["lacache", "streaming"])
+def test_compact_frees_space_and_keeps_order(policy):
+    s = spec()
+    c = filled_cache()
+    c2 = cachelib.compact(c, s, layer=3, policy=policy)
+    assert int(c2.length) < int(c.length)
+    pos = np.asarray(c2.pos[: int(c2.length)])
+    assert (np.diff(pos) > 0).all()            # age order preserved
+    assert pos[0] == 0 and pos[1] == 1         # sinks survive
+    assert pos[-1] == 23                       # newest survives
+    # slots past new length are zeroed
+    assert float(jnp.abs(c2.k[:, int(c2.length):]).max()) == 0.0
+
+
+def test_maybe_compact_noop_when_space():
+    s = spec()
+    c = filled_cache(n=24)
+    c = c._replace(length=jnp.asarray(10, jnp.int32))
+    c2 = cachelib.maybe_compact(c, s, 0, "lacache", n_incoming=1)
+    assert int(c2.length) == 10
+
+
+def test_maybe_compact_triggers_on_overflow():
+    s = spec()
+    c = filled_cache(n=24)
+    c2 = cachelib.maybe_compact(c, s, 0, "lacache", n_incoming=1)
+    assert int(c2.length) < 24
+
+
+def test_full_policy_never_evicts():
+    s = spec()
+    c = filled_cache(n=24)
+    c2 = cachelib.maybe_compact(c, s, 0, "full", n_incoming=1)
+    assert int(c2.length) == 24
+
+
+def test_compact_to_budget_terminates_and_fits():
+    s = spec(budget=16)
+    c = filled_cache(n=24)
+    c2 = cachelib.compact_to_budget(c, s, layer=1, policy="lacache", target=16)
+    assert int(c2.length) <= 16
+    c3 = cachelib.crop(c2, 16)
+    assert c3.k.shape[1] == 16
+
+
+def test_h2o_keeps_heavy_hitters():
+    s = spec()
+    c = filled_cache(with_scores=True)
+    # give slot 10 a huge score, slot 11 a tiny one
+    scores = np.zeros(24, np.float32)
+    scores[10] = 100.0
+    scores[11] = 1e-6
+    c = c._replace(scores=jnp.asarray(scores))
+    c2 = cachelib.compact(c, s, layer=0, policy="h2o")
+    kept = set(np.asarray(c2.pos[: int(c2.length)]).tolist())
+    assert 10 in kept
+    assert 0 in kept and 1 in kept             # sinks
+    assert 23 in kept                          # recent
+
+
+def test_ladder_differs_across_layers_streaming_does_not():
+    s = spec()
+    c = filled_cache()
+    kept_by_layer = []
+    for layer in range(s.n_layers):
+        c2 = cachelib.compact(c, s, layer=layer, policy="lacache")
+        kept_by_layer.append(tuple(np.asarray(c2.pos[: int(c2.length)])))
+    assert len(set(kept_by_layer)) > 1         # ladder: layer-dependent
+    kept_stream = [tuple(np.asarray(
+        cachelib.compact(c, s, layer, "streaming").pos)) for layer in range(4)]
+    assert len(set(kept_stream)) == 1          # streaming: uniform
+
+
+def test_checkpoint_roundtrip():
+    from repro.checkpoint import io as ck
+    import tempfile, os
+    c = filled_cache()
+    tree = {"a": c, "b": [jnp.arange(3), {"c": jnp.ones((2, 2))}]}
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.npz")
+        ck.save(p, tree)
+        back = ck.load(p, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
