@@ -29,7 +29,7 @@ def decode_throughput(cfg, params, policy, budget, batch=8, steps=40):
     # fill the cache first so compaction costs are included
     for _ in range(budget + 8):
         _, state = eng._decode(eng.params, state=state, tokens=tok)
-    jax.block_until_ready(state["pos"])
+    jax.block_until_ready(state.pos)
     t0 = time.perf_counter()
     for _ in range(steps):
         logits, state = eng._decode(eng.params, state=state, tokens=tok)

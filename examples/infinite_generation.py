@@ -35,9 +35,9 @@ def main():
         if (i + 1) % 64 == 0:
             # per-layer occupied slots (post-compaction lengths differ by rung)
             lens = np.asarray(jax.tree.leaves(
-                {k: v.length for k, v in state["blocks"].items()})[0])
-            lengths_trace.append((i + 1, int(state["pos"]), lens.tolist()))
-            print(f"step {i+1:5d} abs-pos {int(state['pos']):6d} "
+                {k: v.length for k, v in state.blocks.items()})[0])
+            lengths_trace.append((i + 1, int(state.pos), lens.tolist()))
+            print(f"step {i+1:5d} abs-pos {int(state.pos):6d} "
                   f"per-layer cache lengths {lens.tolist()} "
                   f"(budget {args.budget})")
     final = lengths_trace[-1][2]

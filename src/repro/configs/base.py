@@ -28,8 +28,18 @@ class LaCacheConfig:
     overlap: Optional[int] = None  # O: band overlap between consecutive rungs
     chunk: int = 16             # C: tokens per ladder rung chunk
     rope_mode: str = "cache"    # "cache" (slot-relative) | "original"
-    policy: str = "lacache"     # lacache | streaming | h2o | full
+    policy: str = "lacache"     # any name registered in repro.core.policy
+                                # (built-ins: lacache|streaming|h2o|tova|full)
     fused_compaction: bool = True  # compaction inside serve_step (lax.cond)
+
+    def eviction_policy(self):
+        """Resolve the policy name to its EvictionPolicy object.
+
+        Lazy import: configs must stay importable without pulling in the
+        core package (core.ladder itself imports configs.base).
+        """
+        from repro.core.policy import get_policy
+        return get_policy(self.policy)
 
     def resolve(self, n_attn_layers: int) -> "LaCacheConfig":
         span = self.span

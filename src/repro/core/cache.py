@@ -7,7 +7,13 @@ All state is a pytree of fixed-shape arrays (SPMD/jit friendly — DESIGN.md §4
   batch-uniform because the engine decodes lockstep batches,
 * ``length``: scalar int32 — occupied prefix (survivors are left-compacted,
   so slot order == age order, the invariant iterative compaction relies on),
-* ``scores``: ``[n_slots]`` accumulated attention mass (H2O policy only).
+* ``scores``: ``[n_slots]`` accumulated attention mass (score-based
+  policies, i.e. those with ``EvictionPolicy.needs_scores``: H2O/TOVA).
+
+Which slots survive a compaction is delegated to the
+:class:`repro.core.policy.EvictionPolicy` objects; string names are
+accepted everywhere for backwards compatibility and resolved once via
+:func:`repro.core.policy.get_policy`.
 
 This module is per-layer; the model stacks layer caches as scan xs/ys.
 """
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import ladder
 from repro.core.ladder import LadderSpec
+from repro.core.policy import PolicyLike, get_policy
 
 
 class KVCache(NamedTuple):
@@ -79,46 +86,13 @@ def append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
 # --------------------------------------------------------------------------- #
 # Policies: which slots survive a compaction pass
 # --------------------------------------------------------------------------- #
-def keep_mask(policy: str, spec: LadderSpec, cache: KVCache, layer) -> jnp.ndarray:
-    n_slots = cache.n_slots
-    if policy == "lacache":
-        return ladder.ladder_keep_mask(spec, n_slots, cache.length, layer)
-    if policy == "streaming":
-        return ladder.streaming_keep_mask(spec, n_slots, cache.length, layer)
-    if policy in ("h2o", "tova"):
-        return _h2o_keep_mask(spec, cache)   # TOVA: same top-scored rule,
-                                             # scores are last-step not summed
-    if policy == "full":
-        return cache.valid_mask()
-    raise ValueError(f"unknown policy {policy!r}")
+def keep_mask(policy: PolicyLike, spec: LadderSpec, cache: KVCache,
+              layer) -> jnp.ndarray:
+    """Survivor mask of one compaction pass (policy object or legacy name)."""
+    return get_policy(policy).keep_mask(spec, cache, layer)
 
 
-def _h2o_keep_mask(spec: LadderSpec, cache: KVCache) -> jnp.ndarray:
-    """H2O (Zhang et al., 2024): retain heavy hitters by accumulated attention.
-
-    Keeps sinks + recent window + the top-scored half of the middle region.
-    Requires ``cache.scores`` (attention probabilities — the XLA attention
-    path only; this is the paper's FlashAttention-incompatibility argument).
-    """
-    assert cache.scores is not None, "h2o policy requires attention scores"
-    n_slots = cache.n_slots
-    slot = jnp.arange(n_slots)
-    occupied = slot < cache.length
-    is_sink = slot < spec.n_sink
-    is_recent = slot >= (cache.length - spec.n_recent)
-    middle = occupied & ~is_sink & ~is_recent
-    n_middle = jnp.sum(middle)
-    n_keep = n_middle // 2
-    neg = jnp.finfo(jnp.float32).min
-    sc = jnp.where(middle, cache.scores, neg)
-    # threshold at the n_keep-th largest middle score
-    order = jnp.argsort(-sc)                      # descending
-    rank = jnp.argsort(order)                     # rank of each slot
-    top = middle & (rank < n_keep)
-    return (is_sink | is_recent | top) & occupied
-
-
-def compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
+def compact(cache: KVCache, spec: LadderSpec, layer, policy: PolicyLike,
             gather_fn=None, rope_theta=None) -> KVCache:
     """One compaction pass: drop non-kept slots, left-compact survivors.
 
@@ -127,7 +101,7 @@ def compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
     keys by the slot delta. R(a)R(b) = R(a+b), so applying RoPE with
     position (new_slot - old_slot) is exact — O(budget) work only on the
     rare compaction step instead of O(budget) re-rotation every step."""
-    keep = keep_mask(policy, spec, cache, layer)
+    keep = get_policy(policy).keep_mask(spec, cache, layer)
     perm, new_len = ladder.compaction_perm(keep)
     if gather_fn is None:
         from repro.kernels import ops as kops
@@ -170,12 +144,13 @@ def _force_evict(cache: KVCache, spec: LadderSpec, n_free: int,
         else jnp.where(live, cache.scores[perm], 0.0))
 
 
-def maybe_compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
+def maybe_compact(cache: KVCache, spec: LadderSpec, layer, policy: PolicyLike,
                   n_incoming: int = 1, rope_theta=None) -> KVCache:
     """Compact iff the incoming tokens would overflow the buffer (lax.cond).
     A second forced recency pass guarantees space even when the policy pass
     frees nothing."""
-    if policy == "full":
+    policy = get_policy(policy)
+    if not policy.evicts:
         return cache
     need = cache.length + n_incoming > cache.n_slots
 
@@ -190,8 +165,8 @@ def maybe_compact(cache: KVCache, spec: LadderSpec, layer, policy: str,
     return jax.lax.cond(need, do, lambda c: c, cache)
 
 
-def compact_to_budget(cache: KVCache, spec: LadderSpec, layer, policy: str,
-                      target: int, max_passes: int = 8,
+def compact_to_budget(cache: KVCache, spec: LadderSpec, layer,
+                      policy: PolicyLike, target: int, max_passes: int = 8,
                       rope_theta=None) -> KVCache:
     """Iterated compaction until ``length <= target`` (dense-prefill path).
 
@@ -240,16 +215,12 @@ def crop(cache: KVCache, n_slots: int) -> KVCache:
 
 
 def add_scores(cache: KVCache, probs: jnp.ndarray) -> KVCache:
-    """Accumulate attention mass for H2O. probs: [batch, heads, q, n_slots]."""
-    if cache.scores is None:
-        return cache
-    s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
-    return cache._replace(scores=cache.scores + s)
+    """Legacy shim: accumulate attention mass (H2O). Prefer
+    ``policy.observe(cache, probs)``. probs: [batch, heads, q, n_slots]."""
+    return get_policy("h2o").observe(cache, probs)
 
 
 def set_scores(cache: KVCache, probs: jnp.ndarray) -> KVCache:
-    """TOVA (Oren et al., 2024): importance = the LAST query's attention."""
-    if cache.scores is None:
-        return cache
-    s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
-    return cache._replace(scores=s)
+    """Legacy shim: last-query attention scores (TOVA). Prefer
+    ``policy.observe(cache, probs)``."""
+    return get_policy("tova").observe(cache, probs)

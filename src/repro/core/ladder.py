@@ -155,7 +155,11 @@ def simulate_stream(spec: LadderSpec, n_tokens: int,
     Returns per-layer lists of retained original token positions after
     ingesting ``n_tokens`` tokens one at a time with budget ``spec.budget``.
     Pure-python/numpy; used by analysis benchmarks and property tests.
+    Any registered policy with a ``keep_mask_np`` simulation works.
     """
+    # function-level import: policy.py imports this module
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
     L = spec.n_layers
     kept = [list(range(0)) for _ in range(L)]
     compactions = [0] * L
@@ -163,15 +167,7 @@ def simulate_stream(spec: LadderSpec, n_tokens: int,
         for l in range(L):
             if len(kept[l]) >= spec.budget:
                 length = len(kept[l])
-                if policy == "lacache":
-                    mask = ladder_keep_mask_np(spec, length, l)
-                elif policy == "streaming":
-                    slot = np.arange(length)
-                    middle = length - spec.n_sink
-                    n_keep = max(int(middle * 0.5), spec.n_recent)
-                    mask = (slot < spec.n_sink) | (slot >= length - n_keep)
-                else:
-                    raise ValueError(policy)
+                mask = pol.keep_mask_np(spec, length, l)
                 kept[l] = [p for p, k in zip(kept[l], mask) if k]
                 compactions[l] += 1
             kept[l].append(t)

@@ -1,0 +1,231 @@
+"""First-class eviction policies for the budgeted KV cache.
+
+LaCache's contribution is a *policy* — which slots survive a compaction
+pass — so policies are objects, not strings dispatched ad hoc. An
+:class:`EvictionPolicy` bundles everything the cache/model/serving layers
+need to run a policy:
+
+* :meth:`keep_mask`  — bool[n_slots] survivor mask for one compaction pass,
+* ``needs_scores``   — whether the attention kernel must hand back
+  attention probabilities (H2O/TOVA; the paper's FlashAttention-
+  incompatibility argument),
+* :meth:`observe`    — fold a step's attention probabilities into the
+  cache's score accumulator (no-op for score-free policies),
+* ``evicts``         — False for the full-cache baseline, letting the
+  cache skip the compaction cond entirely.
+
+A registry maps the legacy string names (``"lacache"``, ``"streaming"``,
+``"h2o"``, ``"tova"``, ``"full"``) to singleton policy instances so every
+existing config / CLI call site keeps working: :func:`get_policy` accepts
+either a name or an already-constructed policy object. New policies plug in
+via :func:`register_policy` without touching the model core::
+
+    @register_policy
+    class MyPolicy(EvictionPolicy):
+        name = "mine"
+        def keep_mask(self, spec, cache, layer):
+            ...
+
+Policy instances are stateless (all running state lives in the cache
+pytree), hashable, and compared by identity — safe to close over in jitted
+functions and to pass as static arguments.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+import jax.numpy as jnp
+
+from repro.core import ladder
+from repro.core.ladder import LadderSpec
+
+
+class EvictionPolicy:
+    """Base class / protocol for KV-cache eviction policies.
+
+    Subclasses set ``name`` and implement :meth:`keep_mask`; policies that
+    rank slots by attention mass additionally set ``needs_scores = True``
+    and implement :meth:`observe`.
+    """
+
+    name: str = ""
+    #: attention kernels must return probabilities for this policy
+    needs_scores: bool = False
+    #: False => the cache never compacts (full-cache baseline)
+    evicts: bool = True
+
+    def keep_mask(self, spec: LadderSpec, cache, layer) -> jnp.ndarray:
+        """bool[n_slots] — True for slots surviving this compaction pass.
+
+        ``cache`` is a :class:`repro.core.cache.KVCache`; ``layer`` is the
+        cache-bearing layer ordinal (traced or static int).
+        """
+        raise NotImplementedError
+
+    def observe(self, cache, probs):
+        """Fold one step's attention probabilities into the cache scores.
+
+        probs: [batch, heads, q, n_slots]. Returns the (possibly updated)
+        cache; the default is a no-op for score-free policies.
+        """
+        return cache
+
+    def keep_mask_np(self, spec: LadderSpec, length: int, layer: int):
+        """Numpy twin of :meth:`keep_mask` over ``length`` occupied slots,
+        for the pure-python stream simulation (analysis benchmarks /
+        property tests). Optional — score-based policies have no
+        closed-form simulation."""
+        raise NotImplementedError(
+            f"policy {self.name!r} has no numpy stream simulation")
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+_REGISTRY: Dict[str, EvictionPolicy] = {}
+
+PolicyLike = Union[str, EvictionPolicy]
+
+
+def register_policy(policy) -> EvictionPolicy:
+    """Register a policy instance (or class, which is instantiated).
+
+    Usable as a decorator on an ``EvictionPolicy`` subclass. Re-registering
+    a name overwrites it (latest wins), so tests can shadow built-ins.
+    Returns the registered instance (or the class when used as a decorator).
+    """
+    obj = policy() if isinstance(policy, type) else policy
+    if not isinstance(obj, EvictionPolicy):
+        raise TypeError(f"not an EvictionPolicy: {policy!r}")
+    if not obj.name:
+        raise ValueError(f"policy {policy!r} has no name")
+    _REGISTRY[obj.name] = obj
+    return policy
+
+
+def get_policy(policy: PolicyLike) -> EvictionPolicy:
+    """Resolve a policy name (or pass through a policy object).
+
+    The single string->object shim: every other module consumes
+    EvictionPolicy objects and calls this once at its boundary.
+    """
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    try:
+        return _REGISTRY[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown eviction policy {policy!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def policy_names() -> List[str]:
+    """Registered policy names (CLI choices derive from this)."""
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------- #
+# Built-in policies
+# --------------------------------------------------------------------------- #
+@register_policy
+class LaCachePolicy(EvictionPolicy):
+    """The paper's ladder keep-pattern (Sec. 3.2-3.3)."""
+
+    name = "lacache"
+
+    def keep_mask(self, spec, cache, layer):
+        return ladder.ladder_keep_mask(spec, cache.n_slots, cache.length, layer)
+
+    def keep_mask_np(self, spec, length, layer):
+        return ladder.ladder_keep_mask_np(spec, length, layer)
+
+
+@register_policy
+class StreamingPolicy(EvictionPolicy):
+    """StreamingLLM-as-block-eviction: sinks + newest fraction of middle."""
+
+    name = "streaming"
+
+    def keep_mask(self, spec, cache, layer):
+        return ladder.streaming_keep_mask(spec, cache.n_slots, cache.length,
+                                          layer)
+
+    def keep_mask_np(self, spec, length, layer):
+        import numpy as np
+        slot = np.arange(length)
+        middle = length - spec.n_sink
+        n_keep = max(int(middle * 0.5), spec.n_recent)
+        return (slot < spec.n_sink) | (slot >= length - n_keep)
+
+
+def _score_topk_keep_mask(spec: LadderSpec, cache) -> jnp.ndarray:
+    """Shared H2O/TOVA rule: sinks + recent window + top-scored middle half.
+
+    Requires ``cache.scores`` (attention probabilities — the XLA attention
+    path only; this is the paper's FlashAttention-incompatibility argument).
+    """
+    assert cache.scores is not None, \
+        "score-based policies require attention scores"
+    n_slots = cache.n_slots
+    slot = jnp.arange(n_slots)
+    occupied = slot < cache.length
+    is_sink = slot < spec.n_sink
+    is_recent = slot >= (cache.length - spec.n_recent)
+    middle = occupied & ~is_sink & ~is_recent
+    n_middle = jnp.sum(middle)
+    n_keep = n_middle // 2
+    neg = jnp.finfo(jnp.float32).min
+    sc = jnp.where(middle, cache.scores, neg)
+    # threshold at the n_keep-th largest middle score
+    order = jnp.argsort(-sc)                      # descending
+    rank = jnp.argsort(order)                     # rank of each slot
+    top = middle & (rank < n_keep)
+    return (is_sink | is_recent | top) & occupied
+
+
+@register_policy
+class H2OPolicy(EvictionPolicy):
+    """H2O (Zhang et al., 2024): heavy hitters by *accumulated* attention."""
+
+    name = "h2o"
+    needs_scores = True
+
+    def keep_mask(self, spec, cache, layer):
+        return _score_topk_keep_mask(spec, cache)
+
+    def observe(self, cache, probs):
+        if cache.scores is None:
+            return cache
+        s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
+        return cache._replace(scores=cache.scores + s)
+
+
+@register_policy
+class TOVAPolicy(EvictionPolicy):
+    """TOVA (Oren et al., 2024): importance = the LAST query's attention."""
+
+    name = "tova"
+    needs_scores = True
+
+    def keep_mask(self, spec, cache, layer):
+        return _score_topk_keep_mask(spec, cache)
+
+    def observe(self, cache, probs):
+        if cache.scores is None:
+            return cache
+        s = probs.astype(jnp.float32).sum(axis=(0, 1, 2))
+        return cache._replace(scores=s)
+
+
+@register_policy
+class FullCachePolicy(EvictionPolicy):
+    """Never evicts — the full-cache quality/memory baseline."""
+
+    name = "full"
+    evicts = False
+
+    def keep_mask(self, spec, cache, layer):
+        return cache.valid_mask()

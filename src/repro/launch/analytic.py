@@ -18,12 +18,13 @@ def _dtype_bytes(cfg: ModelConfig) -> int:
     return 2 if cfg.dtype == "bfloat16" else 4
 
 
-def attention_context(cfg: ModelConfig, shape: ShapeConfig, policy: str,
+def attention_context(cfg: ModelConfig, shape: ShapeConfig, policy,
                       budget: int) -> Dict[str, float]:
     """Average attended context per query token, per layer kind."""
+    from repro.core.policy import get_policy
     t = shape.seq_len
     if shape.mode == "decode":
-        ctx_global = budget if policy != "full" else t
+        ctx_global = budget if get_policy(policy).evicts else t
         ctx_local = min(cfg.sliding_window or 0, t)
         return {"global": ctx_global, "local": ctx_local, "queries": 1}
     # train/prefill: causal average t/2; local: window
@@ -78,7 +79,8 @@ def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, policy: str, budget: int,
     p_bytes = params_total * dt
 
     if shape.mode == "decode":
-        ctx = budget if policy != "full" else t
+        from repro.core.policy import get_policy
+        ctx = budget if get_policy(policy).evicts else t
         cache_read = (cfg.n_cache_layers * ctx
                       + cfg.n_local_layers * min(cfg.sliding_window or 0, ctx)
                       ) * b * kv_b

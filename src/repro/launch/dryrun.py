@@ -262,7 +262,8 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
-    ap.add_argument("--policy", default=None,
+    from repro.core.policy import policy_names
+    ap.add_argument("--policy", default=None, choices=policy_names(),
                     help="default: lacache for decode/prefill, n/a for train")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "serving"])

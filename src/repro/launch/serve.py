@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --policy lacache --budget 128 --prompt-len 256 --max-new 64
+
+``--policy`` choices come from the eviction-policy registry
+(:mod:`repro.core.policy`), so a newly registered policy is servable with no
+launcher edits. ``--request-mode`` drives the continuous-batching request
+API (Engine.submit/run) with staggered prompt lengths instead of one
+lockstep batch.
 """
 from __future__ import annotations
 
@@ -14,21 +20,24 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.configs import get_config
+from repro.core.policy import policy_names
 from repro.data.pipeline import CorpusConfig, SyntheticCorpus
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, SamplingParams
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--policy", default="lacache",
-                    choices=["lacache", "streaming", "h2o", "full"])
+    ap.add_argument("--policy", default="lacache", choices=policy_names())
     ap.add_argument("--budget", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--request-mode", action="store_true",
+                    help="serve via Engine.submit/run (continuous batching, "
+                         "staggered prompt lengths) instead of lockstep")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -43,20 +52,35 @@ def main():
         params = ckpt.load(args.ckpt, params)
 
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
-    prompts = np.stack([corpus.stream(args.prompt_len, seed=i)
-                        for i in range(args.batch)])
-    eng = Engine(cfg, params, budget=args.budget)
-    t0 = time.perf_counter()
-    out = eng.generate(prompts, args.max_new)
-    dt = time.perf_counter() - t0
-    state = eng.new_state(args.batch)
+    eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch)
     print(f"policy={args.policy} budget={args.budget} "
           f"prompt={args.prompt_len} new={args.max_new}")
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch*args.max_new/dt:.1f} tok/s incl. compile)")
+
+    if args.request_mode:
+        # staggered prompt lengths + per-request sampling params
+        for i in range(args.batch):
+            plen = max(8, args.prompt_len - 16 * i)
+            eng.submit(corpus.stream(plen, seed=i), args.max_new,
+                       SamplingParams(seed=i))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.output_tokens) for r in done)
+        print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok/dt:.1f} tok/s incl. compile)")
+        print("sample:", done[0].tokens[:32].tolist())
+    else:
+        prompts = np.stack([corpus.stream(args.prompt_len, seed=i)
+                            for i in range(args.batch)])
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, args.max_new)
+        dt = time.perf_counter() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({args.batch*args.max_new/dt:.1f} tok/s incl. compile)")
+        print("sample:", out[0, :32].tolist())
+    state = eng.new_state(args.batch)
     print(f"cache bytes/layer-state: {eng.cache_bytes(state)/1e6:.2f} MB "
           f"(constant in sequence length — the paper's O(1) claim)")
-    print("sample:", out[0, :32].tolist())
 
 
 if __name__ == "__main__":

@@ -27,10 +27,11 @@ def sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
-def decode_budget(cfg: ModelConfig, shape: ShapeConfig, policy: str) -> int:
+def decode_budget(cfg: ModelConfig, shape: ShapeConfig, policy) -> int:
+    from repro.core.policy import get_policy
     if shape.name == "long_500k":
         return LONG_BUDGET
-    if policy == "full":
+    if not get_policy(policy).evicts:     # full-cache baseline
         return shape.seq_len
     return DECODE_LACACHE_BUDGET
 

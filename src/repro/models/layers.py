@@ -14,6 +14,7 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as cachelib
 from repro.core.cache import CrossKVCache, KVCache, MambaState
 from repro.core.ladder import LadderSpec
+from repro.core.policy import PolicyLike, get_policy
 from repro.kernels import ops as kops
 from repro.launch.axes import shard
 from repro.models import common
@@ -116,7 +117,7 @@ def attention_train(w, cfg: ModelConfig, x, positions, *, window: int = 0,
 
 
 def attention_decode(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
-                     spec: LadderSpec, layer_ord, policy: str,
+                     spec: LadderSpec, layer_ord, policy: PolicyLike,
                      true_pos, impl: Optional[str] = None
                      ) -> Tuple[jnp.ndarray, KVCache]:
     """Single-token decode against a budgeted (LaCache) slot cache.
@@ -129,6 +130,7 @@ def attention_decode(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
     """
     b = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    policy = get_policy(policy)
     rope_mode = cfg.lacache.rope_mode
     cache_rope = (cfg.pos_emb == "rope" and rope_mode == "cache"
                   and not cfg.mrope)
@@ -151,11 +153,10 @@ def attention_decode(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
                                jnp.asarray(true_pos, jnp.int32)[None])
     keys = kv_cache.k
 
-    if policy in ("h2o", "tova"):
+    if policy.needs_scores:
         o, probs = kops.decode_attention(qq[:, 0], keys, kv_cache.v,
                                          kv_cache.length, return_probs=True)
-        kv_cache = (cachelib.add_scores(kv_cache, probs) if policy == "h2o"
-                    else cachelib.set_scores(kv_cache, probs))
+        kv_cache = policy.observe(kv_cache, probs)
     else:
         o = kops.decode_attention(qq[:, 0], keys, kv_cache.v, kv_cache.length,
                                   impl=impl)
@@ -427,7 +428,7 @@ def mamba_decode(w, cfg: ModelConfig, x, state: MambaState
 # Chunked decode (streaming prefill): T>1 tokens against the budgeted cache
 # =========================================================================== #
 def attention_decode_chunk(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
-                           spec: LadderSpec, layer_ord, policy: str,
+                           spec: LadderSpec, layer_ord, policy: PolicyLike,
                            start_pos) -> Tuple[jnp.ndarray, KVCache]:
     """Process a chunk of T tokens against the compacted cache (paper's
     PG19 sliding-window evaluation; O(budget * T) instead of O(T^2)).
@@ -437,6 +438,7 @@ def attention_decode_chunk(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
     token sees [whole compacted past || chunk prefix]."""
     b, tc, _ = x.shape
     h = cfg.n_heads
+    policy = get_policy(policy)
     rope_mode = cfg.lacache.rope_mode
     cache_rope = (cfg.pos_emb == "rope" and rope_mode == "cache"
                   and not cfg.mrope)

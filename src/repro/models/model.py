@@ -25,6 +25,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.core import cache as cachelib
 from repro.core import ladder
 from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.core.policy import EvictionPolicy
 from repro.launch.axes import shard
 from repro.models import common, layers
 from repro.models.common import normal, ones, rms_norm, split_params, zeros
@@ -62,6 +63,11 @@ def ladder_spec(cfg: ModelConfig, budget: Optional[int] = None) -> ladder.Ladder
     if budget is not None:
         spec = spec._replace(budget=budget)
     return spec
+
+
+def eviction_policy(cfg: ModelConfig) -> EvictionPolicy:
+    """The config's resolved EvictionPolicy object."""
+    return cfg.lacache.eviction_policy()
 
 
 # =========================================================================== #
@@ -363,6 +369,29 @@ def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
 # =========================================================================== #
 # Decode state (budgeted LaCache caches + ring windows + SSM states)
 # =========================================================================== #
+class DecodeState(NamedTuple):
+    """Typed decode-state pytree threaded through prefill / decode_step /
+    decode_chunk (replaces the raw string-keyed dict).
+
+    * ``pos``: scalar int32 — absolute position of the next token,
+    * ``blocks``: per-period-position layer states, leaves stacked
+      ``[n_full, ...]`` for the lax.scan over periods,
+    * ``tail``: per-tail-layer states (unrolled remainder layers),
+    * ``cross_blocks``/``cross_tail``: static encoder cross-attention KV
+      (whisper), ``None`` for decoder-only models.
+
+    NamedTuple => automatically a registered pytree with stable field-name
+    key paths, so jit boundaries, sharding rules and engine code address
+    fields as attributes instead of string-indexing into dicts.
+    """
+
+    pos: jnp.ndarray
+    blocks: Dict[str, Any]
+    tail: Dict[str, Any]
+    cross_blocks: Any = None
+    cross_tail: Any = None
+
+
 def _empty_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
                        n_slots: int, dtype):
     if spec.kind == "mamba":
@@ -372,18 +401,17 @@ def _empty_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
     if spec.attn == "local":
         w = max(1, cfg.sliding_window)
         return layers.init_ring_cache(batch, w, cfg.n_kv_heads, cfg.head_dim_, dtype)
-    with_scores = cfg.lacache.policy in ("h2o", "tova")
+    with_scores = eviction_policy(cfg).needs_scores
     return cachelib.init_cache(batch, n_slots, cfg.n_kv_heads, cfg.head_dim_,
                                dtype, with_scores=with_scores)
 
 
 def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
-                      frames=None) -> Dict[str, Any]:
+                      frames=None) -> DecodeState:
     """Empty decode state. ``n_slots`` is the per-layer cache buffer size
     (= LaCache budget B, or seq_len for the full-cache baseline)."""
     dtype = jnp.dtype(cfg.dtype)
     layout = cache_positions(cfg)
-    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
 
     def stack_layer(spec):
         one = _empty_layer_state(cfg, spec, batch, n_slots, dtype)
@@ -391,15 +419,16 @@ def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
             lambda x: jnp.broadcast_to(x[None], (layout["n_full"],) + x.shape),
             one)
 
-    state["blocks"] = {f"p{p}": stack_layer(layout["pspecs"][p])
-                       for p in range(layout["period"])} if layout["n_full"] else {}
-    state["tail"] = {f"t{i}": _empty_layer_state(cfg, s, batch, n_slots, dtype)
-                     for i, s in enumerate(layout["tail_specs"])}
+    blocks = {f"p{p}": stack_layer(layout["pspecs"][p])
+              for p in range(layout["period"])} if layout["n_full"] else {}
+    tail = {f"t{i}": _empty_layer_state(cfg, s, batch, n_slots, dtype)
+            for i, s in enumerate(layout["tail_specs"])}
+    cb = ct = None
     if cfg.cross_attention and frames is not None:
         enc_out = encode_audio(params, cfg, frames)
         cb, ct = _cross_caches(params, cfg, enc_out)
-        state["cross_blocks"], state["cross_tail"] = cb, ct
-    return state
+    return DecodeState(pos=jnp.zeros((), jnp.int32), blocks=blocks, tail=tail,
+                       cross_blocks=cb, cross_tail=ct)
 
 
 def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
@@ -433,15 +462,15 @@ def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
     # global attention: budgeted slot cache. Keys are stored ROTATED: during
     # prefill position == slot index, so k_rot serves both rope modes; under
     # cache-relative mode compaction applies the slot-delta fixup.
-    with_scores = cfg.lacache.policy in ("h2o", "tova")
+    policy = eviction_policy(cfg)
     cache_rope = (cfg.pos_emb == "rope" and cfg.lacache.rope_mode == "cache"
                   and not cfg.mrope)
     n_buf = max(t, n_slots)
     c = cachelib.init_cache(batch, n_buf, cfg.n_kv_heads, cfg.head_dim_, dtype,
-                            with_scores=with_scores)
+                            with_scores=policy.needs_scores)
     c = cachelib.append(c, k_rot, v, jnp.arange(t, dtype=jnp.int32))
     c = cachelib.compact_to_budget(
-        c, lspec, layer_ord, cfg.lacache.policy, n_slots,
+        c, lspec, layer_ord, policy, n_slots,
         rope_theta=cfg.rope_theta if cache_rope else None)
     return cachelib.crop(c, n_slots)
 
@@ -460,7 +489,6 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
     positions = jnp.arange(t_total)
     gpp = layout["gpp"]
 
-    state: Dict[str, Any] = {"pos": jnp.asarray(t_total, jnp.int32)}
     blocks_state = {}
     for p in range(layout["period"]):
         spec = layout["pspecs"][p]
@@ -478,7 +506,6 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
             blocks_state[key] = jax.vmap(
                 lambda e, o: _build_layer_cache_from_prefill(
                     cfg, spec, e, positions, n_slots, lspec, o))(extra, ords)
-    state["blocks"] = blocks_state
 
     tail_state = {}
     n_tail_base = layout["n_full"] * gpp
@@ -494,12 +521,14 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
             ordl = 0
         tail_state[key] = _build_layer_cache_from_prefill(
             cfg, spec, kv_tail[key], positions, n_slots, lspec, ordl)
-    state["tail"] = tail_state
 
+    cb = ct = None
     if cfg.cross_attention and frames is not None:
         enc_out = encode_audio(params, cfg, frames)
         cb, ct = _cross_caches(params, cfg, enc_out)
-        state["cross_blocks"], state["cross_tail"] = cb, ct
+    state = DecodeState(pos=jnp.asarray(t_total, jnp.int32),
+                        blocks=blocks_state, tail=tail_state,
+                        cross_blocks=cb, cross_tail=ct)
     return logits[:, -1], state
 
 
@@ -507,7 +536,7 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
 # Decode step
 # =========================================================================== #
 def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
-                        lspec, layer_ord, true_pos, cross=None):
+                        lspec, layer_ord, policy, true_pos, cross=None):
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     if spec.kind == "mamba":
         y, st = layers.mamba_decode(p["mamba"], cfg, h, st)
@@ -519,7 +548,7 @@ def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
     else:
         y, st = layers.attention_decode(
             p["attn"], cfg, h, st, spec=lspec, layer_ord=layer_ord,
-            policy=cfg.lacache.policy, true_pos=true_pos)
+            policy=policy, true_pos=true_pos)
         x = x + y
     if cross is not None and "cross" in p:
         hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
@@ -528,8 +557,8 @@ def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
     return x, st
 
 
-def decode_step(params, cfg: ModelConfig, state: Dict[str, Any], tokens
-                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
+                ) -> Tuple[jnp.ndarray, DecodeState]:
     """One autoregressive step: tokens [b, 1] -> (logits [b, V], state).
 
     Runs LaCache iterative compaction in-step (lax.cond inside each layer)
@@ -537,18 +566,19 @@ def decode_step(params, cfg: ModelConfig, state: Dict[str, Any], tokens
     """
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg)
-    if state["blocks"]:
-        any_kv = [v for k, v in state["blocks"].items()
+    policy = eviction_policy(cfg)
+    if state.blocks:
+        any_kv = [v for k, v in state.blocks.items()
                   if isinstance(v, KVCache)]
         if any_kv:
             lspec = lspec._replace(budget=any_kv[0].n_slots)
-    pos = state["pos"]
+    pos = state.pos
     x = _embed_tokens(params, cfg, tokens)
     if cfg.pos_emb == "abs":
         x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
     gpp = layout["gpp"]
 
-    new_state = dict(state)
+    new_blocks = state.blocks
     if layout["n_full"]:
         def body(carry, xs):
             h = carry
@@ -565,41 +595,39 @@ def decode_step(params, cfg: ModelConfig, state: Dict[str, Any], tokens
                 cr = cross_b.get(key) if cross_b else None
                 h, st_new = _apply_layer_decode(
                     pblock[key], cfg, spec, h, st, lspec=lspec,
-                    layer_ord=ordl, true_pos=pos, cross=cr)
+                    layer_ord=ordl, policy=policy, true_pos=pos, cross=cr)
                 if st is not None:
                     new_caches[key] = st_new
             return h, new_caches
 
-        xs = {"params": params["blocks"], "caches": state["blocks"],
+        xs = {"params": params["blocks"], "caches": state.blocks,
               "idx": jnp.arange(layout["n_full"])}
-        if "cross_blocks" in state:
-            xs["cross"] = state["cross_blocks"]
+        if state.cross_blocks is not None:
+            xs["cross"] = state.cross_blocks
         x, new_blocks = jax.lax.scan(body, x, xs)
-        new_state["blocks"] = new_blocks
 
     n_tail_base = layout["n_full"] * gpp
     tr = 0
     new_tail = {}
     for i, spec in enumerate(layout["tail_specs"]):
         key = f"t{i}"
-        st = state["tail"].get(key)
+        st = state.tail.get(key)
         if spec.attn == "global":
             ordl = n_tail_base + tr
             tr += 1
         else:
             ordl = 0
-        cr = state.get("cross_tail", {}).get(key)
+        cr = (state.cross_tail or {}).get(key)
         x, st_new = _apply_layer_decode(
             params["tail"][key], cfg, spec, x, st, lspec=lspec,
-            layer_ord=ordl, true_pos=pos, cross=cr)
+            layer_ord=ordl, policy=policy, true_pos=pos, cross=cr)
         if st is not None:
             new_tail[key] = st_new
-    new_state["tail"] = new_tail
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = shard(x @ head, "batch", "seq", "model")
-    new_state["pos"] = pos + 1
+    new_state = state._replace(pos=pos + 1, blocks=new_blocks, tail=new_tail)
     return logits[:, 0], new_state
 
 
@@ -628,8 +656,8 @@ def lm_loss(logits, targets, mask=None):
 # =========================================================================== #
 # Chunked decode: streaming prefill / scoring (paper's PG19 sliding window)
 # =========================================================================== #
-def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
-                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
+                 ) -> Tuple[jnp.ndarray, DecodeState]:
     """Process T tokens against the budgeted caches in one pass:
     tokens [b, T] -> (logits [b, T, V], state). Each token sees the whole
     compacted past plus the chunk prefix — identical semantics to T calls of
@@ -638,11 +666,12 @@ def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
     O(budget * T) attention instead of O(T^2) dense prefill."""
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg)
-    any_kv = [v for v in state["blocks"].values() if isinstance(v, KVCache)] \
-        + [v for v in state["tail"].values() if isinstance(v, KVCache)]
+    policy = eviction_policy(cfg)
+    any_kv = [v for v in state.blocks.values() if isinstance(v, KVCache)] \
+        + [v for v in state.tail.values() if isinstance(v, KVCache)]
     if any_kv:
         lspec = lspec._replace(budget=any_kv[0].n_slots)
-    pos0 = state["pos"]
+    pos0 = state.pos
     tc = tokens.shape[1]
     x = _embed_tokens(params, cfg, tokens)
     if cfg.pos_emb == "abs":
@@ -661,7 +690,7 @@ def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
         else:
             y, st = layers.attention_decode_chunk(
                 p["attn"], cfg, hh, st, spec=lspec, layer_ord=ordl,
-                policy=cfg.lacache.policy, start_pos=pos0)
+                policy=policy, start_pos=pos0)
         h = h + y
         if cross is not None and "cross" in p:
             hc = rms_norm(h, p["cross_norm"], cfg.norm_eps)
@@ -669,7 +698,7 @@ def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
         h, _ = _apply_ffn(p, cfg, h, jnp.zeros((), jnp.float32))
         return h, st
 
-    new_state = dict(state)
+    new_blocks = state.blocks
     if layout["n_full"]:
         def body(carry, xs):
             h = carry
@@ -689,30 +718,29 @@ def decode_chunk(params, cfg: ModelConfig, state: Dict[str, Any], tokens
                     new_caches[key] = st_new
             return h, new_caches
 
-        xs = {"params": params["blocks"], "caches": state["blocks"],
+        xs = {"params": params["blocks"], "caches": state.blocks,
               "idx": jnp.arange(layout["n_full"])}
-        if "cross_blocks" in state:
-            xs["cross"] = state["cross_blocks"]
+        if state.cross_blocks is not None:
+            xs["cross"] = state.cross_blocks
         x, new_blocks = jax.lax.scan(body, x, xs)
-        new_state["blocks"] = new_blocks
 
     n_tail_base = layout["n_full"] * gpp
     tr = 0
     new_tail = {}
     for i, spec in enumerate(layout["tail_specs"]):
         key = f"t{i}"
-        st = state["tail"].get(key)
+        st = state.tail.get(key)
         ordl = n_tail_base + tr if spec.attn == "global" else 0
         if spec.attn == "global":
             tr += 1
-        cr = state.get("cross_tail", {}).get(key)
+        cr = (state.cross_tail or {}).get(key)
         x, st_new = apply_one(params["tail"][key], spec, x, st, ordl, cr)
         if st is not None:
             new_tail[key] = st_new
-    new_state["tail"] = new_tail
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = shard(x @ head, "batch", "seq", "model")
-    new_state["pos"] = pos0 + tc
+    new_state = state._replace(pos=pos0 + tc, blocks=new_blocks,
+                               tail=new_tail)
     return logits, new_state

@@ -1,20 +1,38 @@
-"""Batched serving engine with LaCache iterative compaction.
+"""Request-level serving engine with LaCache iterative compaction.
 
-Wraps the model's prefill / decode_step into jitted drivers:
+Two API layers over the model's jitted prefill / decode:
 
-* :meth:`generate` — batched autoregressive generation under any eviction
-  policy (lacache / streaming / h2o / full),
-* :meth:`score_stream` — token-by-token teacher-forced scoring through the
+**Lockstep (batch) layer** — the paper's evaluation drivers:
+
+* :meth:`Engine.generate` — batched autoregressive generation under any
+  registered eviction policy,
+* :meth:`Engine.score_stream` / :meth:`Engine.score_stream_chunked` —
+  token-by-token (or chunk-amortized) teacher-forced scoring through the
   *decode* path (the paper's Wikitext/PG19 evaluation semantics: each
-  prediction only sees the compacted cache), with O(1) memory,
-* :meth:`generate_stream` — unbounded continuous generation (paper §3.3's
-  infinite-length claim): memory never grows past the budget.
+  prediction only sees the compacted cache), with O(1) memory.
+
+**Request layer** — continuous batching for serving traffic:
+
+* :meth:`Engine.submit` enqueues a :class:`Request` (own prompt length,
+  ``max_new_tokens``, :class:`SamplingParams`),
+* :meth:`Engine.step` admits pending requests into free batch slots
+  (prefill), advances every active slot one decode step, samples
+  per-request, and retires finished requests (their slot is immediately
+  recyclable),
+* :meth:`Engine.run` drives :meth:`step` until the queue drains.
+
+Slots are independent: the slot axis is a ``jax.vmap`` over the same jitted
+``decode_step`` the lockstep layer uses, so each slot carries its own
+absolute position and cache occupancy — requests of different lengths
+coexist in one batch, and per-slot compaction fires independently. With a
+uniform batch the per-slot computation is identical to lockstep
+:meth:`generate` (asserted by tests).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -26,27 +44,141 @@ from repro.models import model as M
 from repro.serving import sampling
 
 
+# --------------------------------------------------------------------------- #
+# Requests
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (temperature 0 => greedy)."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+PENDING, RUNNING, FINISHED = "pending", "running", "finished"
+
+
+@dataclasses.dataclass(eq=False)   # identity equality: holds ndarrays
+class Request:
+    """One generation request moving through pending -> running -> finished."""
+
+    prompt: np.ndarray                  # [prompt_len] int32
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    request_id: int = -1
+    status: str = PENDING
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1                      # batch slot while RUNNING, else -1
+    _key: Any = None                    # per-request PRNG chain (runtime)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Generated tokens so far, [<= max_new_tokens] int32."""
+        return np.asarray(self.output_tokens, np.int32)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output_tokens) >= self.max_new_tokens
+
+
+class Scheduler:
+    """FIFO admission of requests into a fixed pool of batch slots.
+
+    Invariants (tested): a request occupies exactly one slot while RUNNING;
+    retiring frees the slot for the next admission; pending order is
+    preserved; ``n_running + n_free == n_slots`` always.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("scheduler needs at least one slot")
+        self.n_slots = n_slots
+        self.pending: deque = deque()
+        self.running: Dict[int, Request] = {}
+        self._free: List[int] = list(range(n_slots))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or bool(self.running)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return sorted(self._free)
+
+    def submit(self, req: Request) -> Request:
+        req.status = PENDING
+        self.pending.append(req)
+        return req
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Move pending requests into free slots (FIFO, lowest slot first)."""
+        admitted = []
+        while self.pending and self._free:
+            self._free.sort()
+            slot = self._free.pop(0)
+            req = self.pending.popleft()
+            req.status, req.slot = RUNNING, slot
+            self.running[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def retire(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        req.status, req.slot = FINISHED, -1
+        self._free.append(slot)
+        return req
+
+
+# --------------------------------------------------------------------------- #
+# Engine
+# --------------------------------------------------------------------------- #
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None):
+    def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None,
+                 max_batch: int = 8):
         self.cfg = cfg
         self.params = params
         self.budget = budget if budget is not None else cfg.lacache.budget
+        self.max_batch = max_batch
         self._decode = jax.jit(functools.partial(M.decode_step, cfg=cfg))
         self._decode_score = jax.jit(self._decode_and_score)
+        self._decode_chunk = jax.jit(functools.partial(M.decode_chunk, cfg=cfg))
         self._prefill = jax.jit(functools.partial(M.prefill, cfg=cfg),
                                 static_argnames=("n_slots",))
+        # slot axis = vmap over the SAME decode_step the lockstep path jits:
+        # each slot has its own pos / cache occupancy / compaction schedule.
+        self._slot_step = jax.jit(jax.vmap(
+            lambda p, s, t: M.decode_step(p, cfg, s, t),
+            in_axes=(None, 0, 0)))
+        # one fused dispatch per admission; donation lets XLA splice the
+        # request's prefill state into the slot stack in place instead of
+        # copying every [max_batch, ...] cache buffer per leaf.
+        self._splice = jax.jit(
+            lambda full, one, slot: jax.tree.map(
+                lambda F, o: jax.lax.dynamic_update_index_in_dim(
+                    F, o.astype(F.dtype), slot, 0), full, one),
+            donate_argnums=(0,))
+        self.scheduler = Scheduler(max_batch)
+        self._slot_states = None            # stacked DecodeState [max_batch, ...]
+        self._slot_tokens = np.zeros((max_batch,), np.int64)
+        self._next_id = 0
 
+    # ------------------------------------------------------------------ #
+    # Lockstep (batch) layer
     # ------------------------------------------------------------------ #
     def _decode_and_score(self, params, state, token, next_token):
         logits, state = M.decode_step(params, self.cfg, state, token)
         lp = sampling.log_prob_of(logits, next_token[:, 0])
         return lp, logits, state
 
-    def new_state(self, batch: int, frames=None):
+    def new_state(self, batch: int, frames=None) -> M.DecodeState:
         return M.init_decode_state(self.params, self.cfg, batch,
                                    self.budget, frames=frames)
 
-    # ------------------------------------------------------------------ #
     def prefill(self, tokens, patches=None, frames=None):
         return self._prefill(self.params, tokens=tokens, n_slots=self.budget,
                              patches=patches, frames=frames)
@@ -54,7 +186,7 @@ class Engine:
     def generate(self, prompt_tokens, max_new_tokens: int, *,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  patches=None, frames=None) -> np.ndarray:
-        """prompt_tokens [b, t] -> generated [b, max_new_tokens]."""
+        """Lockstep: prompt_tokens [b, t] -> generated [b, max_new_tokens]."""
         logits, state = self.prefill(prompt_tokens, patches=patches,
                                      frames=frames)
         key = jax.random.PRNGKey(seed)
@@ -71,7 +203,6 @@ class Engine:
                 tok = sampling.sample(sub, logits, temperature, top_k)[:, None]
         return np.stack(outs, axis=1)
 
-    # ------------------------------------------------------------------ #
     def score_stream(self, tokens, *, frames=None, prime: int = 1,
                      collect_every: int = 1) -> np.ndarray:
         """Teacher-forced token-by-token NLL through the decode path.
@@ -92,49 +223,118 @@ class Engine:
                 nlls.append(np.asarray(-lp))
         return np.stack(nlls, axis=1)
 
-    def cache_bytes(self, state) -> int:
-        return sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(state["blocks"])) + \
-               sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(state["tail"]))
-
-
-# --------------------------------------------------------------------------- #
-# Chunked streaming APIs (added with model.decode_chunk)
-# --------------------------------------------------------------------------- #
-def _chunked_score(engine: "Engine", tokens, chunk: int = 64, frames=None):
-    """Teacher-forced NLL via decode_chunk: O(budget*T), ~chunk x fewer
-    dispatches than score_stream. Same streaming semantics (every prediction
-    sees only the compacted cache + chunk prefix)."""
-    import functools as _ft
-    from repro.models import model as _M
-    from repro.serving import sampling as _s
-    tokens = jnp.asarray(tokens)
-    b, T = tokens.shape
-    # a chunk must fit in the slot buffer alongside the compacted past
-    chunk = max(1, min(chunk, engine.budget // 2))
-    state = engine.new_state(b, frames=frames)
-    if not hasattr(engine, "_decode_chunk"):
-        engine._decode_chunk = jax.jit(
-            _ft.partial(_M.decode_chunk, cfg=engine.cfg))
-    nll = []
-    n_chunks = (T - 1) // chunk
-    for ci in range(n_chunks + (1 if (T - 1) % chunk else 0)):
-        s, e = ci * chunk, min((ci + 1) * chunk, T - 1)
-        if e <= s:
-            break
-        if e - s != chunk:  # ragged tail: pad to the jitted chunk size
-            pad = chunk - (e - s)
-            seg = jnp.pad(tokens[:, s:e], ((0, 0), (0, pad)))
-        else:
+    def score_stream_chunked(self, tokens, chunk: int = 64,
+                             frames=None) -> np.ndarray:
+        """Teacher-forced NLL via decode_chunk: O(budget*T), ~chunk x fewer
+        dispatches than score_stream. Same streaming semantics (every
+        prediction sees only the compacted cache + chunk prefix)."""
+        tokens = jnp.asarray(tokens)
+        b, T = tokens.shape
+        # a chunk must fit in the slot buffer alongside the compacted past
+        chunk = max(1, min(chunk, self.budget // 2))
+        state = self.new_state(b, frames=frames)
+        nll = []
+        n_chunks = (T - 1) // chunk
+        for ci in range(n_chunks + (1 if (T - 1) % chunk else 0)):
+            s, e = ci * chunk, min((ci + 1) * chunk, T - 1)
+            if e <= s:
+                break
+            # the ragged tail dispatches at its own size (one extra compile)
+            # rather than padding: padded appends can overflow the slot
+            # buffer under a non-evicting policy and corrupt live slots.
             seg = tokens[:, s:e]
-        logits, state = engine._decode_chunk(engine.params, state=state,
-                                             tokens=seg)
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        gold = tokens[:, s + 1:e + 1]
-        g = jnp.take_along_axis(lp[:, :e - s], gold[..., None], axis=-1)[..., 0]
-        nll.append(np.asarray(-g))
-    return np.concatenate(nll, axis=1)
+            logits, state = self._decode_chunk(self.params, state=state,
+                                               tokens=seg)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            gold = tokens[:, s + 1:e + 1]
+            g = jnp.take_along_axis(lp[:, :e - s], gold[..., None],
+                                    axis=-1)[..., 0]
+            nll.append(np.asarray(-g))
+        return np.concatenate(nll, axis=1)
 
+    def cache_bytes(self, state: M.DecodeState) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state.blocks)) + \
+               sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state.tail))
 
-Engine.score_stream_chunked = _chunked_score
+    # ------------------------------------------------------------------ #
+    # Request layer (continuous batching)
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt, max_new_tokens: int,
+               sampling_params: Optional[SamplingParams] = None) -> Request:
+        """Enqueue one request. prompt: [t] int tokens (1-D)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        sp = sampling_params or SamplingParams()
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      sampling=sp, request_id=self._next_id,
+                      _key=jax.random.PRNGKey(sp.seed))
+        self._next_id += 1
+        return self.scheduler.submit(req)
+
+    def _ensure_slot_states(self):
+        if self._slot_states is None:
+            one = self.new_state(1)
+            self._slot_states = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.max_batch,) + x.shape).copy(), one)
+
+    def _sample_next(self, req: Request, logits_row) -> int:
+        """Sample one token for a request from its [1, V] logits row."""
+        sp = req.sampling
+        if sp.temperature == 0.0:
+            tok = sampling.greedy(logits_row)
+        else:
+            req._key, sub = jax.random.split(req._key)
+            tok = sampling.sample(sub, logits_row, sp.temperature, sp.top_k)
+        return int(tok[0])
+
+    def _record(self, req: Request, tok: int) -> None:
+        req.output_tokens.append(tok)
+        self._slot_tokens[req.slot] = tok
+
+    def step(self) -> List[Request]:
+        """One engine tick. Returns the requests that finished this tick.
+
+        1. Admit pending requests into free slots: per-request prefill
+           (jitted; distinct prompt lengths compile once each), sample the
+           first token, splice the request's decode state into its slot.
+        2. vmap-decode every slot one step (inactive slots are masked out of
+           all bookkeeping — their lanes compute but are never read).
+        3. Per-request sampling of the next token; requests reaching
+           ``max_new_tokens`` retire and free their slot immediately.
+        """
+        self._ensure_slot_states()
+        finished: List[Request] = []
+
+        for slot, req in self.scheduler.admit():
+            logits, state1 = self.prefill(jnp.asarray(req.prompt)[None])
+            self._slot_states = self._splice(self._slot_states, state1,
+                                             jnp.asarray(slot, jnp.int32))
+            self._record(req, self._sample_next(req, logits))
+            if req.done:
+                finished.append(self.scheduler.retire(slot))
+
+        if self.scheduler.running:
+            toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None, None]
+            logits, self._slot_states = self._slot_step(
+                self.params, self._slot_states, toks)
+            logits = np.asarray(logits)          # [max_batch, 1, V]
+            for slot in sorted(self.scheduler.running):
+                req = self.scheduler.running[slot]
+                self._record(req, self._sample_next(req, logits[slot]))
+                if req.done:
+                    finished.append(self.scheduler.retire(slot))
+        return finished
+
+    def run(self) -> List[Request]:
+        """Drive :meth:`step` until the queue drains; returns the finished
+        requests in submission order."""
+        done: List[Request] = []
+        while self.scheduler.has_work:
+            done.extend(self.step())
+        return sorted(done, key=lambda r: r.request_id)

@@ -9,6 +9,15 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    # registered here (not pytest.ini) so the mark works without the
+    # pytest-timeout plugin installed; with the plugin it enforces.
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): soft per-test time budget (enforced only when "
+        "pytest-timeout is installed)")
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_per_module():
     yield

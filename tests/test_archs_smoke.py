@@ -61,7 +61,7 @@ def test_reduced_smoke(arch):
     lg, state2 = M.decode_step(params, cfg, state, toks[:, :1])
     assert lg.shape == (batch, cfg.padded_vocab)
     assert not bool(jnp.isnan(lg).any())
-    assert int(state2["pos"]) == int(state["pos"]) + 1
+    assert int(state2.pos) == int(state.pos) + 1
 
 
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "jamba-1.5-large-398b",

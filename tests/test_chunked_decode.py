@@ -61,6 +61,23 @@ def test_chunked_scoring_matches_stepwise_under_lacache():
     assert abs(nc.mean() - ns.mean()) < 0.05
 
 
+def test_chunked_scoring_ragged_tail_full_policy_exact():
+    """Regression: the ragged tail chunk must not pad-append past the slot
+    buffer — under the non-evicting full policy that overflow used to
+    corrupt live slots and silently skew the final chunk's NLL."""
+    T = 130                                        # 129 = 2*48 + ragged 33
+    cfg = dataclasses.replace(
+        cfg_for("dense"),
+        lacache=LaCacheConfig(budget=T, policy="full", rope_mode="original"))
+    from repro.serving.engine import Engine
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, budget=T)
+    toks = np.random.default_rng(0).integers(0, 97, (1, T))
+    nc = eng.score_stream_chunked(toks, chunk=48)
+    ns = eng.score_stream(toks)
+    np.testing.assert_allclose(nc, ns, atol=1e-4, rtol=1e-4)
+
+
 def test_tova_policy_evicts_by_last_attention():
     import repro.core.cache as cachelib
     from repro.core.ladder import LadderSpec

@@ -1,6 +1,9 @@
 """Property tests for the ladder pattern math (paper Sec. 3.2/3.3)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ladder

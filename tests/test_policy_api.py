@@ -1,0 +1,170 @@
+"""Eviction-policy API: registry round-trip, object/string parity,
+custom-policy plug-in through the model core."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cachelib
+from repro.core import policy as pol
+from repro.core.ladder import LadderSpec
+
+ALL_POLICIES = ["lacache", "streaming", "h2o", "tova", "full"]
+
+
+def spec(**kw):
+    d = dict(n_layers=8, span=2, overlap=1, chunk=2, n_sink=2, n_recent=4,
+             budget=24)
+    d.update(kw)
+    return LadderSpec(**d)
+
+
+def filled_cache(n=24, batch=2, kv=2, hd=8, with_scores=False):
+    c = cachelib.init_cache(batch, n, kv, hd, jnp.float32,
+                            with_scores=with_scores)
+    k = jnp.arange(batch * n * kv * hd, dtype=jnp.float32).reshape(
+        batch, n, kv, hd)
+    c = cachelib.append(c, k, k + 1.0, jnp.arange(n, dtype=jnp.int32))
+    if with_scores:
+        c = c._replace(scores=jnp.linspace(0, 1, n))
+    return c
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+def test_builtins_registered():
+    assert set(ALL_POLICIES) <= set(pol.policy_names())
+    for name in ALL_POLICIES:
+        p = pol.get_policy(name)
+        assert isinstance(p, pol.EvictionPolicy)
+        assert p.name == name
+
+
+def test_get_policy_passthrough_and_roundtrip():
+    p = pol.get_policy("lacache")
+    assert pol.get_policy(p) is p                  # object passthrough
+    assert pol.get_policy("lacache") is p          # singleton
+
+
+def test_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown eviction policy"):
+        pol.get_policy("definitely-not-registered")
+
+
+def test_register_custom_policy_roundtrip():
+    class EvictEverything(pol.EvictionPolicy):
+        name = "test-evict-everything"
+
+        def keep_mask(self, spec, cache, layer):
+            slot = jnp.arange(cache.n_slots)
+            # keep only sinks + the newest slot
+            return ((slot < spec.n_sink) | (slot == cache.length - 1)) \
+                & (slot < cache.length)
+
+    try:
+        pol.register_policy(EvictEverything)
+        got = pol.get_policy("test-evict-everything")
+        assert isinstance(got, EvictEverything)
+        assert "test-evict-everything" in pol.policy_names()
+        c2 = cachelib.compact(filled_cache(), spec(), layer=0, policy=got)
+        assert int(c2.length) == 3                 # 2 sinks + newest
+    finally:
+        pol._REGISTRY.pop("test-evict-everything", None)
+
+
+def test_register_rejects_bad_inputs():
+    with pytest.raises(TypeError):
+        pol.register_policy(object())
+    with pytest.raises(ValueError, match="no name"):
+        pol.register_policy(pol.EvictionPolicy())  # nameless
+
+
+def test_needs_scores_flags():
+    assert pol.get_policy("h2o").needs_scores
+    assert pol.get_policy("tova").needs_scores
+    for name in ("lacache", "streaming", "full"):
+        assert not pol.get_policy(name).needs_scores
+    assert not pol.get_policy("full").evicts
+    for name in ("lacache", "streaming", "h2o", "tova"):
+        assert pol.get_policy(name).evicts
+
+
+# --------------------------------------------------------------------------- #
+# Object-vs-string parity (the shim must be semantics-preserving)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ALL_POLICIES)
+@pytest.mark.parametrize("layer", [0, 3, 7])
+def test_keep_mask_object_string_parity(name, layer):
+    s = spec()
+    c = filled_cache(with_scores=name in ("h2o", "tova"))
+    obj = pol.get_policy(name)
+    m_str = np.asarray(cachelib.keep_mask(name, s, c, layer))
+    m_obj = np.asarray(obj.keep_mask(s, c, layer))
+    np.testing.assert_array_equal(m_str, m_obj)
+
+
+@pytest.mark.parametrize("name", ["lacache", "streaming", "h2o"])
+def test_compact_object_string_parity(name):
+    s = spec()
+    c = filled_cache(with_scores=name == "h2o")
+    c_str = cachelib.compact(c, s, layer=2, policy=name)
+    c_obj = cachelib.compact(c, s, layer=2, policy=pol.get_policy(name))
+    assert int(c_str.length) == int(c_obj.length)
+    np.testing.assert_array_equal(np.asarray(c_str.pos), np.asarray(c_obj.pos))
+    np.testing.assert_array_equal(np.asarray(c_str.k), np.asarray(c_obj.k))
+
+
+def test_observe_matches_legacy_score_shims():
+    c = filled_cache(batch=1, with_scores=True)
+    probs = jax.random.uniform(jax.random.PRNGKey(0), (1, 2, 1, 24))
+    h2o, tova = pol.get_policy("h2o"), pol.get_policy("tova")
+    np.testing.assert_array_equal(
+        np.asarray(h2o.observe(c, probs).scores),
+        np.asarray(cachelib.add_scores(c, probs).scores))
+    np.testing.assert_array_equal(
+        np.asarray(tova.observe(c, probs).scores),
+        np.asarray(cachelib.set_scores(c, probs).scores))
+    # score-free policies: observe is a no-op
+    assert pol.get_policy("lacache").observe(c, probs) is c
+
+
+# --------------------------------------------------------------------------- #
+# Custom policy end-to-end through the model core (the gateway property)
+# --------------------------------------------------------------------------- #
+def test_custom_policy_drives_decode_without_model_edits():
+    from repro.configs.base import LaCacheConfig, ModelConfig
+    from repro.models import model as M
+
+    class KeepHalf(pol.EvictionPolicy):
+        name = "test-keep-half"
+
+        def keep_mask(self, spec, cache, layer):
+            slot = jnp.arange(cache.n_slots)
+            keep = (slot < spec.n_sink) | (slot % 2 == 0) \
+                | (slot >= cache.length - spec.n_recent)
+            return keep & (slot < cache.length)
+
+    try:
+        pol.register_policy(KeepHalf)
+        cfg = ModelConfig(
+            name="t", arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+            n_kv_heads=1, d_ff=64, vocab_size=64, head_dim=16, dtype="float32",
+            lacache=LaCacheConfig(budget=16, n_sink=2, n_recent=4, chunk=2,
+                                  policy="test-keep-half"))
+        params, _ = M.init(cfg, jax.random.PRNGKey(0))
+        state = M.init_decode_state(params, cfg, 1, 16)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        for _ in range(40):                        # >> budget => compactions
+            lg, state = M.decode_step(params, cfg, state, tok)
+        assert np.isfinite(np.asarray(lg)).all()
+        caches = [v for v in jax.tree.leaves(
+            state.blocks, is_leaf=lambda x: isinstance(x, cachelib.KVCache))
+            if isinstance(v, cachelib.KVCache)]
+        lengths = np.concatenate(
+            [np.atleast_1d(np.asarray(c.length)) for c in caches])
+        assert caches and (lengths <= 16).all()
+    finally:
+        pol._REGISTRY.pop("test-keep-half", None)

@@ -1,0 +1,169 @@
+"""Request-level serving engine: scheduler invariants, slot recycling,
+per-request sampling, and uniform-batch parity with lockstep generate."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.models import model as M
+from repro.serving.engine import (Engine, Request, SamplingParams, Scheduler,
+                                  FINISHED, PENDING, RUNNING)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=48, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler invariants (no model needed)
+# --------------------------------------------------------------------------- #
+def _req(n=4, new=3):
+    return Request(prompt=np.arange(n, dtype=np.int32), max_new_tokens=new)
+
+
+def test_scheduler_admits_fifo_into_lowest_slots():
+    s = Scheduler(2)
+    r1, r2, r3 = _req(), _req(), _req()
+    s.submit(r1), s.submit(r2), s.submit(r3)
+    admitted = s.admit()
+    assert [slot for slot, _ in admitted] == [0, 1]
+    assert [r for _, r in admitted] == [r1, r2]
+    assert r1.status == RUNNING and r3.status == PENDING
+    assert s.free_slots == [] and len(s.pending) == 1
+
+
+def test_scheduler_retire_frees_slot_for_next_admission():
+    s = Scheduler(1)
+    r1, r2 = _req(), _req()
+    s.submit(r1), s.submit(r2)
+    assert s.admit() == [(0, r1)]
+    assert s.admit() == []                         # full: nothing admitted
+    out = s.retire(0)
+    assert out is r1 and r1.status == FINISHED and r1.slot == -1
+    assert s.free_slots == [0]
+    assert s.admit() == [(0, r2)]                  # recycled slot
+    assert len(s.running) + len(s.free_slots) == s.n_slots
+
+
+def test_scheduler_conservation_under_churn():
+    s = Scheduler(3)
+    reqs = [_req() for _ in range(7)]
+    for r in reqs:
+        s.submit(r)
+    served = []
+    while s.has_work:
+        s.admit()
+        # retire one arbitrary running request per tick
+        slot = sorted(s.running)[0]
+        served.append(s.retire(slot))
+        assert len(s.running) + len(s._free) == s.n_slots
+    assert len(served) == len(reqs)
+    assert {id(r) for r in served} == {id(r) for r in reqs}  # each exactly once
+
+
+# --------------------------------------------------------------------------- #
+# Engine request layer
+# --------------------------------------------------------------------------- #
+def test_submit_validates_inputs(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.arange(4), 0)
+
+
+def test_uniform_batch_matches_lockstep_generate(small_model):
+    """Acceptance: >= 3 requests, identical tokens to lockstep generate."""
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 24))
+    ref = Engine(cfg, params, budget=48).generate(prompts, 10)
+
+    eng = Engine(cfg, params, budget=48, max_batch=4)
+    reqs = [eng.submit(prompts[i], 10) for i in range(3)]
+    done = eng.run()
+    assert [r.request_id for r in done] == [r.request_id for r in reqs]
+    for i, r in enumerate(done):
+        assert r.status == FINISHED
+        np.testing.assert_array_equal(r.tokens, ref[i])
+
+
+def test_mixed_lengths_per_request_params_and_recycling(small_model):
+    """4 requests through 2 slots: per-request prompt lengths, token budgets
+    and sampling params are all honored; finished slots are recycled."""
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    eng = Engine(cfg, params, budget=48, max_batch=2)
+    specs = [(20, 5, SamplingParams()),
+             (37, 8, SamplingParams(temperature=0.8, top_k=16, seed=7)),
+             (11, 1, SamplingParams()),
+             (29, 6, SamplingParams(temperature=1.1, seed=3))]
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, (plen,)), new, sp)
+            for plen, new, sp in specs]
+    done = eng.run()
+    assert len(done) == 4
+    for r, (plen, new, _) in zip(done, specs):
+        assert r.status == FINISHED
+        assert r.prompt_len == plen
+        assert len(r.output_tokens) == new         # per-request length honored
+        assert all(0 <= t for t in r.output_tokens)
+    assert eng.scheduler.free_slots == [0, 1]      # all slots recycled
+    assert not eng.scheduler.has_work
+
+
+def test_step_returns_finishers_and_frees_their_slots(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(2)
+    eng = Engine(cfg, params, budget=48, max_batch=2)
+    fast = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 1)
+    slow = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 4)
+    waiting = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2)
+
+    first = eng.step()
+    # `fast` (max_new=1) finishes at admission; its slot frees the same tick
+    assert fast in first and fast.status == FINISHED
+    assert slow.status == RUNNING
+    rest = eng.run()
+    assert {r.request_id for r in rest} == {slow.request_id,
+                                            waiting.request_id}
+
+
+def test_greedy_request_isolated_from_batch_mates(small_model):
+    """A greedy request's tokens must not depend on what shares the batch."""
+    cfg, params = small_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (18,))
+
+    eng_alone = Engine(cfg, params, budget=48, max_batch=3)
+    alone = eng_alone.submit(prompt, 6)
+    eng_alone.run()
+
+    eng_crowd = Engine(cfg, params, budget=48, max_batch=3)
+    crowded = eng_crowd.submit(prompt, 6)
+    eng_crowd.submit(rng.integers(0, cfg.vocab_size, (31,)), 9,
+                     SamplingParams(temperature=1.0, seed=11))
+    eng_crowd.submit(rng.integers(0, cfg.vocab_size, (5,)), 3)
+    eng_crowd.run()
+
+    np.testing.assert_array_equal(alone.tokens, crowded.tokens)
+
+
+def test_more_requests_than_slots_all_complete(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(4)
+    eng = Engine(cfg, params, budget=48, max_batch=3)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, (12,)), 2 + i % 3)
+            for i in range(8)]
+    done = eng.run()
+    assert len(done) == 8
+    assert [r.request_id for r in done] == [r.request_id for r in reqs]
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in done)
