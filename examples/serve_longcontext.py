@@ -48,9 +48,11 @@ def main():
         mb = eng.cache_bytes(eng.new_state(args.batch)) / 1e6
         print(f"{policy:12s}{budget:>8d}{ppl:>9.3f}{mb:>9.2f}{dt:>10.3f}")
 
-    # 2) mixed-length request serving under LaCache (continuous batching)
+    # 2) mixed-length request serving under LaCache (continuous batching,
+    #    bucketed prefill: ragged lengths share power-of-two executables)
     c = with_policy(cfg, "lacache", args.budget)
-    eng = Engine(c, params, budget=args.budget, max_batch=max(2, args.batch // 2))
+    eng = Engine(c, params, budget=args.budget,
+                 max_batch=max(2, args.batch // 2), bucket_prefill=True)
     for i in range(args.batch):
         plen = args.ctx // (1 + i % 3)            # deliberately ragged
         eng.submit(co.stream(plen, seed=200 + i), args.max_new,
@@ -61,7 +63,31 @@ def main():
     n_tok = sum(len(r.output_tokens) for r in done)
     print(f"\nrequest mode: {len(done)} requests "
           f"({eng.scheduler.n_slots} slots) -> {n_tok} tokens "
-          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile; "
+          f"{len(eng.prefill_shapes)} prefill shapes for "
+          f"{args.batch} prompt lengths)")
+
+    # 3) shared system prompt + priority admission + streamed tokens:
+    #    every request extends one long prefix; only the first pays full
+    #    prefill, later ones prefill their tail. A late high-priority
+    #    request jumps the pending queue.
+    eng = Engine(c, params, budget=args.budget, max_batch=2,
+                 admission="priority")
+    shared = co.stream(args.ctx, seed=300)
+    first_tokens = []
+    for i in range(args.batch):
+        prompt = np.concatenate([shared, co.stream(8 + 4 * i, seed=301 + i)])
+        eng.submit(prompt, args.max_new, SamplingParams(seed=i),
+                   priority=(5 if i == args.batch - 1 else 0),
+                   cache_prefix=True,
+                   on_token=(lambda r, t: first_tokens.append(t))
+                   if i == args.batch - 1 else None)
+    done = eng.run()
+    print(f"\nshared-prefix mode: prefix hit rate "
+          f"{eng.prefix_hit_rate:.2f}, {eng.prefix_tokens_reused} prompt "
+          f"tokens never recomputed ({eng.prefill_tokens} prefilled cold)")
+    print(f"high-priority request (submitted last) streamed "
+          f"{len(first_tokens)} tokens via on_token")
     print("LaCache: near-full-cache quality at streaming-cache memory.")
 
 

@@ -184,7 +184,7 @@ def compact_to_budget(cache: KVCache, spec: LadderSpec, layer,
     cache, _ = jax.lax.while_loop(cond, body, (cache, jnp.zeros((), jnp.int32)))
 
     # hard guarantee: keep sinks + newest (target - n_sink)
-    def truncate(c):
+    def hard_truncate(c):
         slot = jnp.arange(c.n_slots)
         keep = ((slot < spec.n_sink) | (slot >= c.length - (target - spec.n_sink))) \
             & (slot < c.length)
@@ -203,7 +203,26 @@ def compact_to_budget(cache: KVCache, spec: LadderSpec, layer,
             scores=None if c.scores is None else jnp.where(live, c.scores[perm], 0.0),
         )
 
-    return jax.lax.cond(cache.length > target, truncate, lambda c: c, cache)
+    return jax.lax.cond(cache.length > target, hard_truncate,
+                        lambda c: c, cache)
+
+
+def truncate(cache: KVCache, length) -> KVCache:
+    """Mark every slot at or past ``length`` empty (pos = -1, scores = 0).
+
+    Bucketed prefill appends a right-padded token block in one shot; the
+    pad slots are dead weight that must not survive into compaction or
+    attention. ``length`` may be traced; k/v payloads beyond ``length`` are
+    left in place — everything masks by ``length``/``pos`` and the next
+    append overwrites them.
+    """
+    length = jnp.minimum(cache.length, jnp.asarray(length, jnp.int32))
+    live = jnp.arange(cache.n_slots) < length
+    return cache._replace(
+        length=length,
+        pos=jnp.where(live, cache.pos, -1),
+        scores=None if cache.scores is None
+        else jnp.where(live, cache.scores, 0.0))
 
 
 def crop(cache: KVCache, n_slots: int) -> KVCache:

@@ -4,10 +4,15 @@
       --policy lacache --budget 128 --prompt-len 256 --max-new 64
 
 ``--policy`` choices come from the eviction-policy registry
-(:mod:`repro.core.policy`), so a newly registered policy is servable with no
-launcher edits. ``--request-mode`` drives the continuous-batching request
-API (Engine.submit/run) with staggered prompt lengths instead of one
-lockstep batch.
+(:mod:`repro.core.policy`) and ``--admission`` choices from the admission
+registry (:mod:`repro.serving.admission`), so a newly registered policy is
+servable with no launcher edits. ``--request-mode`` drives the
+continuous-batching request API (Engine.submit/run) with staggered prompt
+lengths instead of one lockstep batch; ``--share-prefix`` makes every
+request extend one long common prompt prefix through the shared-prefix
+cache; ``--bucket-prefill`` pads prompts to power-of-two buckets so mixed
+lengths share prefill executables; ``--stream`` prints tokens as they are
+sampled (per-request on_token callback).
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from repro.configs import get_config
 from repro.core.policy import policy_names
 from repro.data.pipeline import CorpusConfig, SyntheticCorpus
 from repro.models import model as M
+from repro.serving.admission import admission_names
 from repro.serving.engine import Engine, SamplingParams
 
 
@@ -31,6 +37,8 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--policy", default="lacache", choices=policy_names())
+    ap.add_argument("--admission", default="fifo", choices=admission_names(),
+                    help="request admission order (registry-derived)")
     ap.add_argument("--budget", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=256)
@@ -38,9 +46,23 @@ def main():
     ap.add_argument("--request-mode", action="store_true",
                     help="serve via Engine.submit/run (continuous batching, "
                          "staggered prompt lengths) instead of lockstep")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="request-mode: all prompts extend one common "
+                         "prefix; serve it through the shared-prefix cache")
+    ap.add_argument("--bucket-prefill", action="store_true",
+                    help="request-mode: pad prompts to power-of-two buckets "
+                         "(one prefill executable per bucket instead of "
+                         "per length)")
+    ap.add_argument("--stream", action="store_true",
+                    help="request-mode: print tokens as they are sampled "
+                         "(on_token)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if not args.request_mode and (args.share_prefix or args.bucket_prefill
+                                  or args.stream):
+        print("note: --share-prefix/--bucket-prefill/--stream apply only "
+              "with --request-mode; ignoring")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -52,22 +74,44 @@ def main():
         params = ckpt.load(args.ckpt, params)
 
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
-    eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch)
-    print(f"policy={args.policy} budget={args.budget} "
-          f"prompt={args.prompt_len} new={args.max_new}")
+    eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch,
+                 admission=args.admission,
+                 bucket_prefill=args.bucket_prefill)
+    print(f"policy={args.policy} admission={args.admission} "
+          f"budget={args.budget} prompt={args.prompt_len} new={args.max_new}")
 
     if args.request_mode:
-        # staggered prompt lengths + per-request sampling params
+        on_token = None
+        if args.stream:
+            def on_token(req, tok):
+                print(f"  [req {req.request_id}] tok {len(req.output_tokens)}"
+                      f"/{req.max_new_tokens}: {tok}")
+        shared = corpus.stream(args.prompt_len, seed=999)
         for i in range(args.batch):
-            plen = max(8, args.prompt_len - 16 * i)
-            eng.submit(corpus.stream(plen, seed=i), args.max_new,
-                       SamplingParams(seed=i))
+            if args.share_prefix:
+                # every request extends the same long prefix -> only the
+                # first pays full prefill, the rest prefill their tail
+                tail = corpus.stream(8 + 4 * i, seed=i)
+                prompt = np.concatenate([shared, tail])
+            else:
+                prompt = corpus.stream(max(8, args.prompt_len - 16 * i),
+                                       seed=i)
+            # staggered priorities/deadlines give non-FIFO admission
+            # policies something to reorder
+            eng.submit(prompt, args.max_new, SamplingParams(seed=i),
+                       priority=i % 3, deadline=float(args.batch - i),
+                       cache_prefix=args.share_prefix, on_token=on_token)
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0
         n_tok = sum(len(r.output_tokens) for r in done)
         print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
               f"({n_tok/dt:.1f} tok/s incl. compile)")
+        print(f"prefill: {eng.prefill_tokens} tokens in "
+              f"{eng.prefill_dispatches} dispatches over "
+              f"{len(eng.prefill_shapes)} distinct shapes; "
+              f"prefix hit rate {eng.prefix_hit_rate:.2f} "
+              f"({eng.prefix_tokens_reused} tokens reused)")
         print("sample:", done[0].tokens[:32].tolist())
     else:
         prompts = np.stack([corpus.stream(args.prompt_len, seed=i)

@@ -432,8 +432,15 @@ def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
 
 
 def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
-                                    positions, n_slots: int, lspec, layer_ord):
-    """Turn dense-prefill per-layer state into the decode-time state."""
+                                    positions, n_slots: int, lspec, layer_ord,
+                                    true_len=None):
+    """Turn dense-prefill per-layer state into the decode-time state.
+
+    ``true_len`` (traced int32, bucketed prefill): the tokens were right-
+    padded to a bucket length; only the first ``true_len`` are real. Causal
+    attention makes the padded forward exact for real positions, so the
+    cache build just has to drop the pad entries.
+    """
     dtype = jnp.dtype(cfg.dtype)
     if spec.kind == "mamba":
         return extra  # final MambaState
@@ -442,14 +449,26 @@ def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
     batch = k_unrot.shape[0]
     if spec.attn == "local":
         w = max(1, cfg.sliding_window)
+        if true_len is not None:
+            # ring invariant slot == pos % w, built by residue class: slot j
+            # holds the newest real position p_j ≡ j (mod w), gathered
+            # dynamically because true_len is traced.
+            j = jnp.arange(w)
+            last = true_len - 1
+            p_j = last - ((last - j) % w)
+            live = p_j >= 0
+            src = jnp.clip(p_j, 0, t - 1)
+            gk = jnp.take(k_rot, src, axis=1).astype(dtype)
+            gv = jnp.take(v, src, axis=1).astype(dtype)
+            kk = jnp.where(live[None, :, None, None], gk, 0)
+            vv = jnp.where(live[None, :, None, None], gv, 0)
+            pos_arr = jnp.where(live, p_j, -1).astype(jnp.int32)
+            return layers.RingKVCache(k=kk, v=vv, pos=pos_arr,
+                                      next_pos=true_len.astype(jnp.int32))
         take = min(w, t)
         ring = layers.init_ring_cache(batch, w, cfg.n_kv_heads, cfg.head_dim_, dtype)
         kw = k_rot[:, t - take:]
         vw = v[:, t - take:]
-        k = jax.lax.dynamic_update_slice(
-            ring.k, kw.astype(dtype), (0, 0, 0, 0))
-        vv = jax.lax.dynamic_update_slice(
-            ring.v, vw.astype(dtype), (0, 0, 0, 0))
         pos = jnp.full((w,), -1, jnp.int32).at[:take].set(
             jnp.arange(t - take, t, dtype=jnp.int32))
         # ring invariant: slot == pos % w. Rotate so entries land on their slot.
@@ -469,6 +488,8 @@ def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
     c = cachelib.init_cache(batch, n_buf, cfg.n_kv_heads, cfg.head_dim_, dtype,
                             with_scores=policy.needs_scores)
     c = cachelib.append(c, k_rot, v, jnp.arange(t, dtype=jnp.int32))
+    if true_len is not None:
+        c = cachelib.truncate(c, true_len)
     c = cachelib.compact_to_budget(
         c, lspec, layer_ord, policy, n_slots,
         rope_theta=cfg.rope_theta if cache_rope else None)
@@ -476,10 +497,26 @@ def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
-            patches=None, frames=None):
+            patches=None, frames=None, true_len=None):
     """Dense prefill: full forward, then LaCache compaction into the budget
     (paper Fig. 2: 'compact the original full KV cache'). Returns
-    (last_logits [b, V], decode_state)."""
+    (last_logits [b, V], decode_state).
+
+    ``true_len`` (traced int32 scalar) enables *bucketed* prefill: ``tokens``
+    is right-padded to a bucket length and only ``tokens[:, :true_len]`` are
+    real. Causality makes the forward exact for real positions; the cache
+    build drops pad entries (global slots via :func:`cachelib.truncate`,
+    ring windows by residue-class gather). Mamba states are cumulative
+    through pads, so bucketing is attention-only.
+    """
+    if true_len is not None:
+        if patches is not None or frames is not None:
+            raise ValueError("true_len (bucketed prefill) does not support "
+                             "patches/frames inputs")
+        if any(s.kind == "mamba" for s in cfg.layer_specs()):
+            raise ValueError("true_len (bucketed prefill) is attention-only: "
+                             "SSM states are cumulative through padding")
+        true_len = jnp.asarray(true_len, jnp.int32)
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg, budget=n_slots)
     logits, _, (kv_blocks, kv_tail) = forward_train(
@@ -499,13 +536,15 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
         if spec.kind == "mamba" or spec.attn == "local":
             blocks_state[key] = jax.vmap(
                 lambda e: _build_layer_cache_from_prefill(
-                    cfg, spec, e, positions, n_slots, lspec, 0))(extra)
+                    cfg, spec, e, positions, n_slots, lspec, 0,
+                    true_len=true_len))(extra)
         else:
             rank = sum(1 for q in range(p) if layout["pspecs"][q].attn == "global")
             ords = jnp.arange(layout["n_full"]) * gpp + rank
             blocks_state[key] = jax.vmap(
                 lambda e, o: _build_layer_cache_from_prefill(
-                    cfg, spec, e, positions, n_slots, lspec, o))(extra, ords)
+                    cfg, spec, e, positions, n_slots, lspec, o,
+                    true_len=true_len))(extra, ords)
 
     tail_state = {}
     n_tail_base = layout["n_full"] * gpp
@@ -520,16 +559,21 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
         else:
             ordl = 0
         tail_state[key] = _build_layer_cache_from_prefill(
-            cfg, spec, kv_tail[key], positions, n_slots, lspec, ordl)
+            cfg, spec, kv_tail[key], positions, n_slots, lspec, ordl,
+            true_len=true_len)
 
     cb = ct = None
     if cfg.cross_attention and frames is not None:
         enc_out = encode_audio(params, cfg, frames)
         cb, ct = _cross_caches(params, cfg, enc_out)
-    state = DecodeState(pos=jnp.asarray(t_total, jnp.int32),
-                        blocks=blocks_state, tail=tail_state,
+    if true_len is None:
+        last, pos = logits[:, -1], jnp.asarray(t_total, jnp.int32)
+    else:
+        last = jax.lax.dynamic_slice_in_dim(logits, true_len - 1, 1, 1)[:, 0]
+        pos = true_len
+    state = DecodeState(pos=pos, blocks=blocks_state, tail=tail_state,
                         cross_blocks=cb, cross_tail=ct)
-    return logits[:, -1], state
+    return last, state
 
 
 # =========================================================================== #

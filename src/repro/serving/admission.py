@@ -1,0 +1,126 @@
+"""First-class admission policies for the request scheduler.
+
+Mirrors the eviction-policy registry (:mod:`repro.core.policy`): an
+:class:`AdmissionPolicy` decides the order in which pending requests are
+admitted into free batch slots. The scheduler keeps its pending queue as a
+heap ordered by :meth:`AdmissionPolicy.key`, so a policy is just a sort key
+over (request, submission sequence number) — submission order is always the
+final tie-break, keeping every policy deterministic and starvation-visible.
+
+Built-ins:
+
+* ``fifo``     — strict submission order (the PR-1 behaviour),
+* ``priority`` — higher ``Request.priority`` first (ties: FIFO),
+* ``deadline`` — earliest ``Request.deadline`` first (requests without a
+  deadline sort last; ties: FIFO) — the SLO-aware ordering.
+
+New policies plug in via :func:`register_admission` without touching the
+scheduler or the engine::
+
+    @register_admission
+    class ShortestFirst(AdmissionPolicy):
+        name = "shortest"
+        def key(self, req, seq):
+            return (req.prompt_len, seq)
+
+CLI choices (``repro.launch.serve --admission``) derive from the registry.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple, Union
+
+
+class AdmissionPolicy:
+    """Base class / protocol for scheduler admission policies.
+
+    Subclasses set ``name`` and implement :meth:`key`. Policy instances are
+    stateless and shared (singletons in the registry).
+    """
+
+    name: str = ""
+
+    def key(self, req, seq: int) -> Tuple:
+        """Heap sort key for one pending request; smaller is admitted first.
+
+        ``seq`` is the monotonically increasing submission sequence number —
+        include it (last) so equal-keyed requests admit in FIFO order.
+        """
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+_REGISTRY: Dict[str, AdmissionPolicy] = {}
+
+AdmissionLike = Union[str, AdmissionPolicy]
+
+
+def register_admission(policy) -> AdmissionPolicy:
+    """Register an admission policy instance (or class, instantiated).
+
+    Usable as a decorator; re-registering a name overwrites (latest wins).
+    """
+    obj = policy() if isinstance(policy, type) else policy
+    if not isinstance(obj, AdmissionPolicy):
+        raise TypeError(f"not an AdmissionPolicy: {policy!r}")
+    if not obj.name:
+        raise ValueError(f"admission policy {policy!r} has no name")
+    _REGISTRY[obj.name] = obj
+    return policy
+
+
+def get_admission(policy: AdmissionLike) -> AdmissionPolicy:
+    """Resolve an admission-policy name (or pass through an instance)."""
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    try:
+        return _REGISTRY[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {policy!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def admission_names() -> List[str]:
+    """Registered admission-policy names (CLI choices derive from this)."""
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------- #
+# Built-in policies
+# --------------------------------------------------------------------------- #
+@register_admission
+class FIFOAdmission(AdmissionPolicy):
+    """Strict submission order."""
+
+    name = "fifo"
+
+    def key(self, req, seq):
+        return (seq,)
+
+
+@register_admission
+class PriorityAdmission(AdmissionPolicy):
+    """Higher ``Request.priority`` admitted first; ties in FIFO order."""
+
+    name = "priority"
+
+    def key(self, req, seq):
+        return (-req.priority, seq)
+
+
+@register_admission
+class DeadlineAdmission(AdmissionPolicy):
+    """Earliest ``Request.deadline`` first (SLO-aware EDF); requests
+    without a deadline sort after all deadlined ones; ties FIFO."""
+
+    name = "deadline"
+
+    def key(self, req, seq):
+        d = req.deadline if req.deadline is not None else math.inf
+        return (d, seq)

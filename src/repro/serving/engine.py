@@ -14,26 +14,43 @@ Two API layers over the model's jitted prefill / decode:
 **Request layer** — continuous batching for serving traffic:
 
 * :meth:`Engine.submit` enqueues a :class:`Request` (own prompt length,
-  ``max_new_tokens``, :class:`SamplingParams`),
+  ``max_new_tokens``, :class:`SamplingParams`, plus ``priority`` /
+  ``deadline`` for the admission policy, ``cache_prefix`` to opt into the
+  shared-prefix prompt cache, and ``on_token`` for streamed token
+  callbacks),
 * :meth:`Engine.step` admits pending requests into free batch slots
-  (prefill), advances every active slot one decode step, samples
+  (prefill — reusing the longest cached prompt prefix, so only the suffix
+  is computed), advances every active slot one decode step, samples
   per-request, and retires finished requests (their slot is immediately
   recyclable),
 * :meth:`Engine.run` drives :meth:`step` until the queue drains.
+
+Admission order is pluggable (:mod:`repro.serving.admission`: ``fifo``,
+``priority``, ``deadline``, mirroring the eviction-policy registry); the
+scheduler's pending queue is a heap over the admission policy's sort key.
+
+Prefill is optionally *bucketed* (``bucket_prefill=True``): prompts are
+right-padded to power-of-two lengths and dispatched with a traced
+``true_len``, so mixed-length traffic compiles one executable per bucket
+instead of one per distinct prompt length (attention-only models; SSM
+states are cumulative through padding, so those configs fall back to
+exact-length prefill automatically).
 
 Slots are independent: the slot axis is a ``jax.vmap`` over the same jitted
 ``decode_step`` the lockstep layer uses, so each slot carries its own
 absolute position and cache occupancy — requests of different lengths
 coexist in one batch, and per-slot compaction fires independently. With a
 uniform batch the per-slot computation is identical to lockstep
-:meth:`generate` (asserted by tests).
+:meth:`generate` (asserted per registered policy by the differential
+harness, ``tests/test_differential.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +59,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving import sampling
+from repro.serving.admission import AdmissionLike, get_admission
+from repro.serving.prefix import PrefixCache
 
 
 # --------------------------------------------------------------------------- #
@@ -54,6 +73,22 @@ class SamplingParams:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+
+    def validate(self) -> "SamplingParams":
+        """Reject nonsense at the API boundary (``Engine.submit``) instead
+        of failing later inside a jitted sampler (or worse, silently)."""
+        t = self.temperature
+        if not isinstance(t, (int, float, np.floating, np.integer)) \
+                or isinstance(t, bool) or not math.isfinite(t) or t < 0.0:
+            raise ValueError(
+                f"temperature must be a finite float >= 0, got {t!r}")
+        k = self.top_k
+        if not isinstance(k, (int, np.integer)) or isinstance(k, bool) or k < 0:
+            raise ValueError(f"top_k must be an int >= 0, got {k!r}")
+        if not isinstance(self.seed, (int, np.integer)) \
+                or isinstance(self.seed, bool):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
+        return self
 
 
 PENDING, RUNNING, FINISHED = "pending", "running", "finished"
@@ -70,6 +105,10 @@ class Request:
     status: str = PENDING
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                      # batch slot while RUNNING, else -1
+    priority: int = 0                   # higher admits first ("priority")
+    deadline: Optional[float] = None    # earlier admits first ("deadline")
+    cache_prefix: bool = False          # opt into the shared-prefix cache
+    on_token: Optional[Callable[["Request", int], None]] = None
     _key: Any = None                    # per-request PRNG chain (runtime)
 
     @property
@@ -87,20 +126,24 @@ class Request:
 
 
 class Scheduler:
-    """FIFO admission of requests into a fixed pool of batch slots.
+    """Policy-ordered admission of requests into a fixed pool of batch slots.
 
-    Invariants (tested): a request occupies exactly one slot while RUNNING;
-    retiring frees the slot for the next admission; pending order is
-    preserved; ``n_running + n_free == n_slots`` always.
+    The pending queue is a heap over the admission policy's sort key
+    (:mod:`repro.serving.admission`; default ``fifo`` preserves submission
+    order exactly). Invariants (tested): a request occupies exactly one
+    slot while RUNNING; retiring frees the slot for the next admission;
+    ``n_running + n_free == n_slots`` always.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, admission: AdmissionLike = "fifo"):
         if n_slots < 1:
             raise ValueError("scheduler needs at least one slot")
         self.n_slots = n_slots
-        self.pending: deque = deque()
+        self.admission = get_admission(admission)
+        self.pending: List[Tuple[Tuple, int, Request]] = []   # heap
         self.running: Dict[int, Request] = {}
         self._free: List[int] = list(range(n_slots))
+        self._seq = 0
 
     @property
     def has_work(self) -> bool:
@@ -110,18 +153,25 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return sorted(self._free)
 
+    def pending_requests(self) -> List[Request]:
+        """Pending requests in admission order (non-destructive)."""
+        return [r for _, _, r in sorted(self.pending)]
+
     def submit(self, req: Request) -> Request:
         req.status = PENDING
-        self.pending.append(req)
+        heapq.heappush(self.pending,
+                       (self.admission.key(req, self._seq), self._seq, req))
+        self._seq += 1
         return req
 
     def admit(self) -> List[Tuple[int, Request]]:
-        """Move pending requests into free slots (FIFO, lowest slot first)."""
+        """Move pending requests into free slots (admission-policy order,
+        lowest slot first)."""
         admitted = []
         while self.pending and self._free:
             self._free.sort()
             slot = self._free.pop(0)
-            req = self.pending.popleft()
+            _, _, req = heapq.heappop(self.pending)
             req.status, req.slot = RUNNING, slot
             self.running[slot] = req
             admitted.append((slot, req))
@@ -139,7 +189,9 @@ class Scheduler:
 # --------------------------------------------------------------------------- #
 class Engine:
     def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None,
-                 max_batch: int = 8):
+                 max_batch: int = 8, *, admission: AdmissionLike = "fifo",
+                 prefix_cache_bytes: int = 256 << 20, prefix_block: int = 16,
+                 bucket_prefill: bool = False, min_bucket: int = 16):
         self.cfg = cfg
         self.params = params
         self.budget = budget if budget is not None else cfg.lacache.budget
@@ -162,10 +214,32 @@ class Engine:
                 lambda F, o: jax.lax.dynamic_update_index_in_dim(
                     F, o.astype(F.dtype), slot, 0), full, one),
             donate_argnums=(0,))
-        self.scheduler = Scheduler(max_batch)
+        self.scheduler = Scheduler(max_batch, admission=admission)
+        self.prefix_cache = PrefixCache(max_bytes=prefix_cache_bytes)
+        self.prefix_block = max(1, prefix_block)
+        self._policy_evicts = M.eviction_policy(cfg).evicts
+        # bucketing pads the prompt; exact only for attention layers (SSM
+        # states are cumulative through pads) and decoder-only inputs.
+        self._can_bucket = (all(s.kind == "attn" for s in cfg.layer_specs())
+                            and not cfg.cross_attention)
+        self.bucket_prefill = bucket_prefill and self._can_bucket
+        self.min_bucket = max(1, min_bucket)
         self._slot_states = None            # stacked DecodeState [max_batch, ...]
         self._slot_tokens = np.zeros((max_batch,), np.int64)
         self._next_id = 0
+        # prefill telemetry: dispatch count, REAL prompt tokens prefilled
+        # (pad lanes of bucketed dispatches are excluded — compare
+        # prefill_shapes for the padded dispatch sizes), distinct dispatch
+        # shapes (buckets compile once each), prefix-reuse counters
+        self.prefill_dispatches = 0
+        self.prefill_tokens = 0
+        self.prefill_shapes: Set[Tuple[str, int]] = set()
+        self.prefix_tokens_reused = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-cache lookups that found a reusable prefix."""
+        return self.prefix_cache.hit_rate
 
     # ------------------------------------------------------------------ #
     # Lockstep (batch) layer
@@ -262,16 +336,40 @@ class Engine:
     # Request layer (continuous batching)
     # ------------------------------------------------------------------ #
     def submit(self, prompt, max_new_tokens: int,
-               sampling_params: Optional[SamplingParams] = None) -> Request:
-        """Enqueue one request. prompt: [t] int tokens (1-D)."""
+               sampling_params: Optional[SamplingParams] = None, *,
+               priority: int = 0, deadline: Optional[float] = None,
+               cache_prefix: bool = False,
+               on_token: Optional[Callable[[Request, int], None]] = None
+               ) -> Request:
+        """Enqueue one request. prompt: [t] int tokens (1-D).
+
+        ``priority``/``deadline`` feed the scheduler's admission policy;
+        ``cache_prefix`` opts the request into the shared-prefix prompt
+        cache (reuse the longest cached prefix, snapshot its own post-
+        prefill state); ``on_token(request, token)`` is invoked once per
+        generated token, on the tick it is sampled.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        sp = sampling_params or SamplingParams()
+        sp = (sampling_params or SamplingParams()).validate()
+        if not isinstance(priority, (int, np.integer)) \
+                or isinstance(priority, bool):
+            raise ValueError(f"priority must be an int, got {priority!r}")
+        if deadline is not None and (
+                not isinstance(deadline,
+                               (int, float, np.floating, np.integer))
+                or isinstance(deadline, bool) or not math.isfinite(deadline)):
+            raise ValueError(
+                f"deadline must be a finite number, got {deadline!r}")
+        if on_token is not None and not callable(on_token):
+            raise ValueError("on_token must be callable")
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
                       sampling=sp, request_id=self._next_id,
+                      priority=int(priority), deadline=deadline,
+                      cache_prefix=cache_prefix, on_token=on_token,
                       _key=jax.random.PRNGKey(sp.seed))
         self._next_id += 1
         return self.scheduler.submit(req)
@@ -282,6 +380,92 @@ class Engine:
             self._slot_states = jax.tree.map(
                 lambda x: jnp.broadcast_to(
                     x[None], (self.max_batch,) + x.shape).copy(), one)
+
+    # -- prefill paths (cold / bucketed / prefix-reusing) ---------------- #
+    @staticmethod
+    def _bucket_len(n: int, minimum: int) -> int:
+        b = max(1, minimum)
+        while b < n:
+            b *= 2
+        return b
+
+    def _note_prefill(self, kind: str, shape: int, n_tokens: int) -> None:
+        self.prefill_dispatches += 1
+        self.prefill_tokens += n_tokens
+        self.prefill_shapes.add((kind, shape))
+
+    def _cold_prefill(self, prompt: np.ndarray):
+        """Full-prompt prefill; bucketed (padded to a power-of-two length,
+        traced true_len) when enabled, so mixed-length traffic shares one
+        executable per bucket instead of compiling per distinct length."""
+        t = int(prompt.shape[0])
+        if self.bucket_prefill:
+            b = self._bucket_len(t, self.min_bucket)
+            padded = np.zeros((b,), np.int32)
+            padded[:t] = prompt
+            logits, state = self._prefill(
+                self.params, tokens=jnp.asarray(padded)[None],
+                n_slots=self.budget, true_len=jnp.asarray(t, jnp.int32))
+            self._note_prefill("prefill", b, t)
+        else:
+            logits, state = self.prefill(jnp.asarray(prompt)[None])
+            self._note_prefill("prefill", t, t)
+        return logits, state
+
+    def _chunk_prefill(self, state: M.DecodeState, suffix: np.ndarray):
+        """Prefill only ``suffix`` on top of a restored prefix snapshot via
+        decode_chunk. Chunks are capped at budget // 2 (a chunk must fit in
+        the slot buffer alongside the compacted past); with bucketing the
+        suffix is split greedily into power-of-two chunks so suffix lengths
+        share executables too."""
+        cap = max(1, self.budget // 2)
+        rem, off = int(suffix.shape[0]), 0
+        logits = None
+        while rem:
+            if self.bucket_prefill:
+                size = 1 << (min(rem, cap).bit_length() - 1)
+            else:
+                size = min(rem, cap)
+            seg = jnp.asarray(suffix[off:off + size])[None]
+            lseq, state = self._decode_chunk(self.params, state=state,
+                                             tokens=seg)
+            logits = lseq[:, -1]
+            self._note_prefill("chunk", size, size)
+            off, rem = off + size, rem - size
+        return logits, state
+
+    def _prefill_request(self, req: Request):
+        """Prefill one admitted request. Requests that opted out take the
+        dense one-dispatch prefill; ``cache_prefix`` requests restore the
+        longest cached prefix snapshot and stream the remainder through
+        decode_chunk in ``prefix_block``-aligned chunks, snapshotting at
+        every block boundary — so two prompts sharing a system prefix hit
+        each other's block snapshots even when neither is a full prefix of
+        the other.
+
+        Non-evicting policies (``full``) cannot stream a prompt longer than
+        the slot buffer through decode_chunk (maybe_compact is a no-op, so
+        the append would silently clobber live slots); such requests fall
+        back to dense prefill, whose compact_to_budget hard-truncates."""
+        if not req.cache_prefix or (not self._policy_evicts
+                                    and req.prompt_len > self.budget):
+            return self._cold_prefill(req.prompt)
+        entry = self.prefix_cache.lookup(req.prompt)
+        if entry is not None:
+            self.prefix_tokens_reused += entry.length
+            if entry.length == req.prompt_len:
+                return entry.logits, entry.state     # zero prefill compute
+        start = entry.length if entry is not None else 0
+        state = entry.state if entry is not None else self.new_state(1)
+        prompt, t = req.prompt, req.prompt_len
+        block = self.prefix_block
+        logits, off = None, start
+        while off < t:
+            nxt = min(t, (off // block + 1) * block)
+            logits, state = self._chunk_prefill(state, prompt[off:nxt])
+            off = nxt
+            self.prefix_cache.insert(prompt[:off], state, logits)
+        return logits, state
 
     def _sample_next(self, req: Request, logits_row) -> int:
         """Sample one token for a request from its [1, V] logits row."""
@@ -296,13 +480,17 @@ class Engine:
     def _record(self, req: Request, tok: int) -> None:
         req.output_tokens.append(tok)
         self._slot_tokens[req.slot] = tok
+        if req.on_token is not None:
+            req.on_token(req, tok)
 
     def step(self) -> List[Request]:
         """One engine tick. Returns the requests that finished this tick.
 
-        1. Admit pending requests into free slots: per-request prefill
-           (jitted; distinct prompt lengths compile once each), sample the
-           first token, splice the request's decode state into its slot.
+        1. Admit pending requests (admission-policy order) into free slots:
+           per-request prefill — reusing the longest cached prompt prefix
+           and/or padding to a power-of-two bucket when enabled — sample
+           the first token, splice the request's decode state into its
+           slot.
         2. vmap-decode every slot one step (inactive slots are masked out of
            all bookkeeping — their lanes compute but are never read).
         3. Per-request sampling of the next token; requests reaching
@@ -312,7 +500,7 @@ class Engine:
         finished: List[Request] = []
 
         for slot, req in self.scheduler.admit():
-            logits, state1 = self.prefill(jnp.asarray(req.prompt)[None])
+            logits, state1 = self._prefill_request(req)
             self._slot_states = self._splice(self._slot_states, state1,
                                              jnp.asarray(slot, jnp.int32))
             self._record(req, self._sample_next(req, logits))

@@ -1,0 +1,151 @@
+"""Shared-prefix prompt cache: snapshot post-prefill decode states by prompt.
+
+A million-user deployment re-prefills the same system prompt thousands of
+times; the LaCache promise is to never recompute what the ladder already
+holds. :class:`PrefixCache` extends that promise *across requests*: after a
+request opts in (``Engine.submit(..., cache_prefix=True)``), its
+:class:`~repro.models.model.DecodeState` (every ``KVCache`` / ring / SSM
+pytree leaf, batch = 1) is snapshotted under a hash of its prompt tokens —
+at the full prompt *and* at every ``Engine.prefix_block`` boundary along
+the way. A later request whose prompt shares a cached prefix restores the
+longest matching snapshot and prefills only the remainder through
+``decode_chunk``; the block-boundary snapshots mean two prompts sharing a
+system prefix hit each other even when neither is a full prefix of the
+other.
+
+Correctness notes:
+
+* Snapshots are position-exact even after compaction: each ``KVCache``
+  stores the absolute token position per slot and ``DecodeState.pos`` is
+  the absolute next position, so continuing from a snapshot is
+  indistinguishable from having decoded through it.
+* JAX arrays are immutable and the engine's donating dispatches never
+  donate a snapshot, so entries are shared by reference — a hit costs no
+  copy.
+* Lookup is longest-match: hashes of every cached length are probed from
+  the longest candidate down, and the stored tokens are compared on a hash
+  hit, so a digest collision can never splice the wrong state.
+
+Eviction is LRU under a byte budget (``max_bytes``): both ``lookup`` hits
+and ``insert`` refresh recency; inserting past the budget evicts the least
+recently used entries first. A single entry larger than the whole budget is
+refused rather than thrashing the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _digest(tokens: np.ndarray) -> bytes:
+    return hashlib.sha1(
+        np.ascontiguousarray(tokens, np.int32).tobytes()).digest()
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of every array leaf in a pytree."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass(eq=False)
+class PrefixEntry:
+    """One cached prefix: the tokens it covers, the batch-1 decode state
+    snapshot positioned just past them, and the last-token logits (so an
+    exact-match request can sample its first token with zero compute)."""
+
+    tokens: np.ndarray          # [length] int32
+    state: Any                  # DecodeState, batch = 1, pos == length
+    logits: Any                 # [1, V] logits of tokens[-1]
+    nbytes: int
+
+    @property
+    def length(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+class PrefixCache:
+    """LRU map from token-prefix hashes to decode-state snapshots."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        if max_bytes < 1:
+            raise ValueError("prefix cache needs a positive byte budget")
+        self.max_bytes = int(max_bytes)
+        self._entries: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        self._len_count: dict = {}     # distinct entry lengths -> #entries
+        self._nbytes = 0
+        self.lookups = 0
+        self.hits = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def lookup(self, tokens) -> Optional[PrefixEntry]:
+        """Longest cached prefix of ``tokens`` (LRU-refreshing), or None."""
+        self.lookups += 1
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        # probe by the distinct-length index, not a scan of every entry:
+        # O(distinct lengths), which stays small (block-aligned snapshots)
+        lengths = sorted((length for length in self._len_count
+                          if length <= tokens.shape[0]), reverse=True)
+        for length in lengths:
+            h = _digest(tokens[:length])
+            entry = self._entries.get(h)
+            if entry is not None and np.array_equal(entry.tokens,
+                                                    tokens[:length]):
+                self._entries.move_to_end(h)
+                self.hits += 1
+                return entry
+        return None
+
+    def insert(self, tokens, state, logits) -> bool:
+        """Snapshot ``state``/``logits`` under ``tokens``; returns False when
+        the entry alone exceeds the byte budget (and is not cached)."""
+        tokens = np.array(tokens, np.int32).reshape(-1)
+        nbytes = tree_bytes(state) + tree_bytes(logits)
+        if nbytes > self.max_bytes:
+            return False
+        h = _digest(tokens)
+        old = self._entries.pop(h, None)
+        if old is not None:
+            self._nbytes -= old.nbytes
+            self._drop_len(old.length)
+        entry = PrefixEntry(tokens=tokens, state=state, logits=logits,
+                            nbytes=nbytes)
+        self._entries[h] = entry
+        self._len_count[entry.length] = self._len_count.get(entry.length,
+                                                            0) + 1
+        self._nbytes += nbytes
+        self.insertions += 1
+        while self._nbytes > self.max_bytes:
+            _, evicted = self._entries.popitem(last=False)
+            self._nbytes -= evicted.nbytes
+            self._drop_len(evicted.length)
+            self.evictions += 1
+        return True
+
+    def _drop_len(self, length: int) -> None:
+        n = self._len_count.get(length, 0) - 1
+        if n <= 0:
+            self._len_count.pop(length, None)
+        else:
+            self._len_count[length] = n
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._len_count.clear()
+        self._nbytes = 0

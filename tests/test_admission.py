@@ -1,0 +1,237 @@
+"""Admission-policy registry, priority/deadline scheduling, streamed token
+callbacks, and submit-time SamplingParams validation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.models import model as M
+from repro.serving import admission as adm
+from repro.serving.engine import (Engine, Request, SamplingParams, Scheduler,
+                                  PENDING, RUNNING)
+
+
+def _req(n=4, new=3, **kw):
+    return Request(prompt=np.arange(n, dtype=np.int32), max_new_tokens=new,
+                   **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+def test_builtin_admissions_registered():
+    assert {"fifo", "priority", "deadline"} <= set(adm.admission_names())
+    for name in ("fifo", "priority", "deadline"):
+        p = adm.get_admission(name)
+        assert isinstance(p, adm.AdmissionPolicy) and p.name == name
+        assert adm.get_admission(p) is p            # object passthrough
+
+
+def test_unknown_admission_raises():
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        adm.get_admission("not-a-policy")
+
+
+def test_register_custom_admission_drives_scheduler():
+    class ShortestFirst(adm.AdmissionPolicy):
+        name = "test-shortest-first"
+
+        def key(self, req, seq):
+            return (req.prompt_len, seq)
+
+    adm.register_admission(ShortestFirst)
+    s = Scheduler(2, admission="test-shortest-first")
+    long_, short, mid = _req(30), _req(5), _req(12)
+    s.submit(long_), s.submit(short), s.submit(mid)
+    admitted = [r for _, r in s.admit()]
+    assert admitted == [short, mid]
+    assert long_.status == PENDING
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler-level ordering
+# --------------------------------------------------------------------------- #
+def test_priority_high_late_submit_admitted_first():
+    """Acceptance: a high-priority request submitted last is admitted
+    before earlier low-priority pending requests."""
+    s = Scheduler(1, admission="priority")
+    lo1, lo2 = _req(priority=0), _req(priority=0)
+    hi = _req(priority=5)
+    s.submit(lo1), s.submit(lo2), s.submit(hi)
+    assert [r for _, r in s.admit()] == [hi]
+    assert lo1.status == PENDING and lo2.status == PENDING
+    s.retire(0)
+    assert [r for _, r in s.admit()] == [lo1]       # ties: FIFO
+
+
+def test_priority_ties_preserve_fifo():
+    s = Scheduler(3, admission="priority")
+    reqs = [_req(priority=1) for _ in range(3)]
+    for r in reqs:
+        s.submit(r)
+    assert [r for _, r in s.admit()] == reqs
+
+
+def test_deadline_orders_earliest_first_none_last():
+    s = Scheduler(4, admission="deadline")
+    late = _req(deadline=9.0)
+    none = _req(deadline=None)
+    soon = _req(deadline=1.0)
+    mid = _req(deadline=4.0)
+    for r in (late, none, soon, mid):
+        s.submit(r)
+    assert [r for _, r in s.admit()] == [soon, mid, late, none]
+
+
+def test_fifo_default_unchanged():
+    s = Scheduler(2)
+    assert s.admission.name == "fifo"
+    a, b = _req(priority=9), _req(priority=0)       # priority ignored
+    s.submit(a), s.submit(b)
+    assert [r for _, r in s.admit()] == [a, b]
+
+
+def test_pending_requests_reports_admission_order():
+    s = Scheduler(1, admission="priority")
+    lo, hi = _req(priority=0), _req(priority=3)
+    s.submit(lo), s.submit(hi)
+    assert s.pending_requests() == [hi, lo]
+    assert len(s.pending) == 2                       # non-destructive
+
+
+def test_conservation_invariant_under_priority_churn():
+    rng = np.random.default_rng(0)
+    s = Scheduler(3, admission="priority")
+    for i in range(9):
+        s.submit(_req(priority=int(rng.integers(0, 4))))
+    served = 0
+    while s.has_work:
+        s.admit()
+        assert len(s.running) + len(s._free) == s.n_slots
+        s.retire(sorted(s.running)[0])
+        served += 1
+        assert len(s.running) + len(s._free) == s.n_slots
+    assert served == 9
+
+
+# --------------------------------------------------------------------------- #
+# Engine level: admission + on_token + validation
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=48, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_priority_admission(small_model):
+    """Acceptance: with one slot, the late high-priority submit runs while
+    the earlier low-priority requests are still pending."""
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    eng = Engine(cfg, params, budget=48, max_batch=1, admission="priority")
+    lo1 = eng.submit(rng.integers(0, cfg.vocab_size, (10,)), 3, priority=0)
+    lo2 = eng.submit(rng.integers(0, cfg.vocab_size, (10,)), 3, priority=0)
+    hi = eng.submit(rng.integers(0, cfg.vocab_size, (10,)), 3, priority=7)
+    eng.step()
+    assert hi.status == RUNNING
+    assert lo1.status == PENDING and lo2.status == PENDING
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.output_tokens) == 3 for r in done)
+
+
+def test_engine_deadline_admission(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    eng = Engine(cfg, params, budget=48, max_batch=1, admission="deadline")
+    slack = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2, deadline=50.0)
+    urgent = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2, deadline=1.0)
+    eng.step()
+    assert urgent.status in (RUNNING, "finished")
+    assert slack.status == PENDING
+    eng.run()
+
+
+def test_on_token_streams_every_token_in_order(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(2)
+    seen = []
+    eng = Engine(cfg, params, budget=48, max_batch=2)
+    req = eng.submit(rng.integers(0, cfg.vocab_size, (12,)), 5,
+                     on_token=lambda r, t: seen.append((r.request_id, t)))
+    eng.submit(rng.integers(0, cfg.vocab_size, (9,)), 3)   # silent batchmate
+    eng.run()
+    assert [t for _, t in seen] == req.output_tokens
+    assert all(rid == req.request_id for rid, _ in seen)
+
+
+def test_on_token_fires_at_admission_tick(small_model):
+    """The first token is sampled from the prefill logits — the callback
+    must fire on that same tick, before any decode step."""
+    cfg, params = small_model
+    seen = []
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    eng.submit(np.arange(8), 4, on_token=lambda r, t: seen.append(t))
+    eng.step()
+    assert len(seen) == 2          # prefill-sampled token + one decode step
+
+
+def test_submit_rejects_negative_temperature(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(np.arange(4), 2, SamplingParams(temperature=-0.5))
+
+
+def test_submit_rejects_non_finite_temperature(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(np.arange(4), 2, SamplingParams(temperature=float("nan")))
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(np.arange(4), 2, SamplingParams(temperature=float("inf")))
+
+
+def test_submit_rejects_negative_top_k(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    with pytest.raises(ValueError, match="top_k"):
+        eng.submit(np.arange(4), 2, SamplingParams(top_k=-1))
+
+
+def test_submit_rejects_bad_seed_and_deadline_and_callback(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    with pytest.raises(ValueError, match="seed"):
+        eng.submit(np.arange(4), 2, SamplingParams(seed=1.5))
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(np.arange(4), 2, deadline=float("nan"))
+    with pytest.raises(ValueError, match="on_token"):
+        eng.submit(np.arange(4), 2, on_token="not-callable")
+    with pytest.raises(ValueError, match="priority"):
+        eng.submit(np.arange(4), 2, priority=0.9)   # would truncate silently
+
+
+def test_submit_accepts_numpy_scalar_params(small_model):
+    """Config-derived numpy scalars are as valid as Python scalars."""
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    req = eng.submit(np.arange(6), 2,
+                     SamplingParams(temperature=np.float32(0.7),
+                                    top_k=np.int32(5), seed=np.int64(1)),
+                     priority=np.int32(2))
+    eng.run()
+    assert len(req.output_tokens) == 2
+
+
+def test_valid_params_still_accepted(small_model):
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1)
+    req = eng.submit(np.arange(6), 2,
+                     SamplingParams(temperature=0.7, top_k=10, seed=3),
+                     priority=2, deadline=12.5)
+    done = eng.run()
+    assert done == [req] and len(req.output_tokens) == 2

@@ -1,0 +1,106 @@
+"""Cross-policy differential harness.
+
+Iterates the *eviction-policy registry* (not a hard-coded list) and asserts
+for every registered policy that the engine's alternative execution paths
+agree:
+
+(a) ``score_stream_chunked`` matches ``score_stream`` token-for-token
+    (chunked and stepwise decode are the same computation whenever no
+    compaction fires mid-chunk, so the no-overflow case must be exact for
+    *every* policy — a newly registered policy that diverges in the
+    chunked path fails here without any new test code),
+(b) request-mode ``Engine.run`` on a uniform batch matches lockstep
+    ``generate`` token-for-token — both without compaction (batch 3) and
+    with compaction firing (single request, prompt > budget; batch 1 keeps
+    the batch-uniform score accumulation of score-based policies
+    identical between the two paths).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.core.policy import policy_names
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+# snapshot at collection: the harness must cover every registered policy
+POLICIES = policy_names()
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=48, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def with_policy(cfg, policy, budget):
+    return dataclasses.replace(cfg, lacache=dataclasses.replace(
+        cfg.lacache, policy=policy, budget=budget))
+
+
+def test_harness_covers_all_builtins():
+    assert {"lacache", "streaming", "h2o", "tova", "full"} <= set(POLICIES)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_chunked_scoring_matches_stepwise(policy, small_model):
+    """(a) T < budget => no compaction can fire, so chunked teacher-forced
+    NLL must equal stepwise NLL token-for-token under every policy."""
+    cfg, params = small_model
+    eng = Engine(with_policy(cfg, policy, 64), params, budget=64)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 40))
+    ns = eng.score_stream(toks)
+    nc = eng.score_stream_chunked(toks, chunk=16)
+    np.testing.assert_allclose(nc, ns, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_chunked_scoring_overflow_finite(policy, small_model):
+    """(a') with the stream overflowing the budget, chunked scoring still
+    produces finite per-token NLL of the right shape for every policy
+    (exactness is only defined modulo intra-chunk compaction timing)."""
+    cfg, params = small_model
+    eng = Engine(with_policy(cfg, policy, 32), params, budget=32)
+    toks = np.random.default_rng(1).integers(0, cfg.vocab_size, (1, 80))
+    nc = eng.score_stream_chunked(toks, chunk=16)
+    assert nc.shape == (1, 79)
+    assert np.isfinite(nc).all()
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_request_mode_matches_lockstep(policy, small_model):
+    """(b) uniform batch of 3 requests == lockstep generate, per policy."""
+    cfg, params = small_model
+    c = with_policy(cfg, policy, 48)
+    prompts = np.random.default_rng(2).integers(0, cfg.vocab_size, (3, 20))
+    ref = Engine(c, params, budget=48).generate(prompts, 8)
+    eng = Engine(c, params, budget=48, max_batch=4)
+    reqs = [eng.submit(prompts[i], 8) for i in range(3)]
+    done = eng.run()
+    assert [r.request_id for r in done] == [r.request_id for r in reqs]
+    for i, r in enumerate(done):
+        np.testing.assert_array_equal(r.tokens, ref[i])
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_request_mode_matches_lockstep_with_compaction(policy, small_model):
+    """(b') prompt + new tokens overflow the budget, so prefill compaction
+    and in-decode compaction both fire; a single request against a batch-1
+    lockstep reference must still match token-for-token."""
+    cfg, params = small_model
+    budget = 32
+    c = with_policy(cfg, policy, budget)
+    n_slots = 80 if policy == "full" else budget   # full never evicts
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 44))
+    ref = Engine(c, params, budget=n_slots).generate(prompt, 6)
+    eng = Engine(c, params, budget=n_slots, max_batch=2)
+    req = eng.submit(prompt[0], 6)
+    eng.run()
+    np.testing.assert_array_equal(req.tokens, ref[0])

@@ -1,0 +1,320 @@
+"""Shared-prefix prompt cache + bucketed prefill.
+
+Unit level: longest-match lookup, hash-collision safety, LRU eviction
+under a byte budget. Engine level (the acceptance tests): two requests
+sharing a long prompt prefix produce tokens/logits identical to cold
+prefill while the second request's prefill processes only the suffix
+(asserted via dispatch/token counts and ``prefix_hit_rate``); bucketed
+prefill is exact and collapses distinct prompt lengths onto shared
+power-of-two executables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.prefix import PrefixCache, tree_bytes
+
+
+# --------------------------------------------------------------------------- #
+# PrefixCache unit tests (no model)
+# --------------------------------------------------------------------------- #
+def _payload(n=8):
+    """A dummy 'state' pytree of a known byte size."""
+    return {"x": jnp.zeros((n,), jnp.float32)}
+
+
+def _logits():
+    return jnp.zeros((1, 4), jnp.float32)
+
+
+def test_lookup_returns_longest_matching_prefix():
+    pc = PrefixCache()
+    toks = np.arange(16, dtype=np.int32)
+    pc.insert(toks[:4], _payload(), _logits())
+    pc.insert(toks[:12], _payload(), _logits())
+    pc.insert(toks[:8], _payload(), _logits())
+    hit = pc.lookup(toks)
+    assert hit is not None and hit.length == 12
+    # a shorter prompt can only match shorter prefixes
+    hit = pc.lookup(toks[:9])
+    assert hit is not None and hit.length == 8
+
+
+def test_lookup_miss_and_same_length_different_tokens():
+    pc = PrefixCache()
+    pc.insert(np.arange(8, dtype=np.int32), _payload(), _logits())
+    assert pc.lookup(np.arange(100, 108, dtype=np.int32)) is None
+    assert pc.lookup(np.arange(4, dtype=np.int32)) is None
+    assert pc.hits == 0 and pc.lookups == 2 and pc.hit_rate == 0.0
+
+
+def test_exact_match_is_a_hit():
+    pc = PrefixCache()
+    toks = np.arange(8, dtype=np.int32)
+    pc.insert(toks, _payload(), _logits())
+    hit = pc.lookup(toks)
+    assert hit is not None and hit.length == 8
+    assert pc.hit_rate == 1.0
+
+
+def test_lru_eviction_under_byte_budget():
+    entry_bytes = tree_bytes(_payload()) + tree_bytes(_logits())
+    pc = PrefixCache(max_bytes=2 * entry_bytes)
+    a, b, c = (np.arange(4) + 10 * i for i in range(3))
+    pc.insert(a, _payload(), _logits())
+    pc.insert(b, _payload(), _logits())
+    assert pc.lookup(a) is not None          # refresh a => b becomes LRU
+    pc.insert(c, _payload(), _logits())      # evicts b
+    assert pc.lookup(b) is None
+    assert pc.lookup(a) is not None and pc.lookup(c) is not None
+    assert pc.evictions == 1 and len(pc) == 2
+    assert pc.nbytes <= pc.max_bytes
+
+
+def test_insert_replaces_same_tokens_without_growth():
+    pc = PrefixCache()
+    toks = np.arange(6, dtype=np.int32)
+    pc.insert(toks, _payload(), _logits())
+    n0 = pc.nbytes
+    pc.insert(toks, _payload(), _logits())
+    assert len(pc) == 1 and pc.nbytes == n0
+
+
+def test_oversized_entry_refused():
+    pc = PrefixCache(max_bytes=8)
+    assert not pc.insert(np.arange(4), _payload(1024), _logits())
+    assert len(pc) == 0 and pc.nbytes == 0
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level prefix reuse
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=64, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_prefix_reuse_identical_to_cold_and_prefills_only_suffix(small_model):
+    """Acceptance: request B extends request A's prompt by 8 tokens. Warm
+    engine must (1) generate exactly the cold engine's tokens, (2) prefill
+    only A's prompt + B's suffix, (3) report the hit in prefix_hit_rate,
+    and (4) hold post-prefill logits identical to a cold prefill of B."""
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    pre = rng.integers(0, cfg.vocab_size, (24,))
+    full = np.concatenate([pre, rng.integers(0, cfg.vocab_size, (8,))])
+
+    cold = Engine(cfg, params, budget=64, max_batch=2)
+    ca, cb = cold.submit(pre, 6), cold.submit(full, 6)
+    cold.run()
+    assert cold.prefill_tokens == 24 + 32
+    assert cold.prefix_hit_rate == 0.0        # nobody opted in, no lookups
+
+    warm = Engine(cfg, params, budget=64, max_batch=2)
+    wa = warm.submit(pre, 6, cache_prefix=True)
+    wb = warm.submit(full, 6, cache_prefix=True)
+    warm.run()
+    np.testing.assert_array_equal(wa.tokens, ca.tokens)
+    np.testing.assert_array_equal(wb.tokens, cb.tokens)
+    assert warm.prefill_tokens == 24 + 8      # B prefilled only its suffix
+    assert warm.prefix_hit_rate == 0.5        # 2 lookups, 1 hit
+    assert warm.prefix_tokens_reused == 24
+
+    # logits-level: the snapshot stored for B's full prompt must match a
+    # cold dense prefill of the same prompt
+    entry = warm.prefix_cache.lookup(full)
+    assert entry is not None and entry.length == 32
+    cold_logits, _ = M.prefill(params, cfg, jnp.asarray(full)[None],
+                               n_slots=64)
+    np.testing.assert_allclose(np.asarray(entry.logits),
+                               np.asarray(cold_logits), atol=1e-4, rtol=1e-4)
+
+
+def test_exact_prefix_hit_costs_zero_prefill(small_model):
+    cfg, params = small_model
+    prompt = np.random.default_rng(1).integers(0, cfg.vocab_size, (20,))
+    eng = Engine(cfg, params, budget=64, max_batch=1)
+    a = eng.submit(prompt, 4, cache_prefix=True)
+    eng.run()
+    d0, t0 = eng.prefill_dispatches, eng.prefill_tokens
+    b = eng.submit(prompt, 4, cache_prefix=True)
+    eng.run()
+    assert eng.prefill_dispatches == d0 and eng.prefill_tokens == t0
+    np.testing.assert_array_equal(b.tokens, a.tokens)
+    assert eng.prefix_hit_rate == 0.5         # miss then exact hit
+
+
+def test_prefix_reuse_across_sibling_requests(small_model):
+    """One shared system prompt, N different tails — no prompt is a full
+    prefix of another, but block-boundary snapshots make siblings hit the
+    block-aligned part of the shared prefix (hit rate (N-1)/N)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, (30,))
+    eng = Engine(cfg, params, budget=64, max_batch=2, prefix_block=16)
+    n = 5
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, (4,))
+        eng.submit(np.concatenate([shared, tail]), 3, cache_prefix=True)
+    eng.run()
+    assert eng.prefix_hit_rate == (n - 1) / n
+    # first request prefills all 34 tokens; siblings reuse the 16-token
+    # block snapshot (30 rounded down to the block) and prefill the rest
+    assert eng.prefill_tokens == 34 + (n - 1) * 18
+    assert eng.prefix_tokens_reused == (n - 1) * 16
+
+
+def test_prefix_reuse_with_compaction_still_serves(small_model):
+    """Prompt exceeds the budget: snapshots are taken of *compacted* states
+    (position-exact because pos is stored per slot); reuse must keep
+    serving correct-length outputs."""
+    cfg, params = small_model
+    rng = np.random.default_rng(3)
+    pre = rng.integers(0, cfg.vocab_size, (50,))
+    full = np.concatenate([pre, rng.integers(0, cfg.vocab_size, (10,))])
+    eng = Engine(cfg, params, budget=32, max_batch=2)
+    a = eng.submit(pre, 4, cache_prefix=True)
+    b = eng.submit(full, 4, cache_prefix=True)
+    eng.run()
+    assert len(a.output_tokens) == 4 and len(b.output_tokens) == 4
+    assert eng.prefix_hit_rate == 0.5
+    assert eng.prefill_tokens == 50 + 10
+
+
+def test_prefix_opt_in_with_full_policy_long_prompt_falls_back(small_model):
+    """Regression: a non-evicting policy cannot stream a prompt longer than
+    the slot buffer through decode_chunk (append would clobber live slots).
+    Such requests must fall back to dense prefill and produce exactly the
+    non-cached tokens; prompts that fit still use the prefix cache."""
+    import dataclasses
+    cfg, params = small_model
+    cfg = dataclasses.replace(cfg, lacache=dataclasses.replace(
+        cfg.lacache, policy="full"))
+    rng = np.random.default_rng(8)
+    long_prompt = rng.integers(0, cfg.vocab_size, (50,))   # > budget 32
+    short_prompt = rng.integers(0, cfg.vocab_size, (20,))  # fits
+
+    ref = Engine(cfg, params, budget=32, max_batch=1)
+    r1, r2 = ref.submit(long_prompt, 4), ref.submit(short_prompt, 4)
+    ref.run()
+
+    eng = Engine(cfg, params, budget=32, max_batch=1)
+    w1 = eng.submit(long_prompt, 4, cache_prefix=True)
+    w2 = eng.submit(short_prompt, 4, cache_prefix=True)
+    eng.run()
+    np.testing.assert_array_equal(w1.tokens, r1.tokens)
+    np.testing.assert_array_equal(w2.tokens, r2.tokens)
+    # the long prompt bypassed the cache; the short one was snapshotted
+    # within the buffer limit
+    entry = eng.prefix_cache.lookup(short_prompt)
+    assert entry is not None and int(entry.state.pos) == 20
+    assert eng.prefix_cache.lookup(long_prompt) is None
+
+
+def test_no_opt_in_means_no_lookups(small_model):
+    cfg, params = small_model
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab_size, (12,))
+    eng = Engine(cfg, params, budget=64, max_batch=1)
+    eng.submit(prompt, 2)
+    eng.submit(prompt, 2)
+    eng.run()
+    assert eng.prefix_cache.lookups == 0 and len(eng.prefix_cache) == 0
+    assert eng.prefill_tokens == 24
+
+
+# --------------------------------------------------------------------------- #
+# Bucketed prefill
+# --------------------------------------------------------------------------- #
+def test_bucketed_prefill_matches_exact_dense(small_model):
+    """Padded-to-bucket prefill with traced true_len == exact prefill: same
+    last-token logits, and identical logits over 5 further decode steps."""
+    cfg, params = small_model
+    toks = np.random.default_rng(5).integers(0, cfg.vocab_size, (23,))
+    l_exact, s_exact = M.prefill(params, cfg, jnp.asarray(toks)[None],
+                                 n_slots=64)
+    padded = np.zeros((32,), np.int32)
+    padded[:23] = toks
+    l_buck, s_buck = M.prefill(params, cfg, jnp.asarray(padded)[None],
+                               n_slots=64, true_len=jnp.asarray(23, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l_exact), np.asarray(l_buck),
+                               atol=1e-4, rtol=1e-4)
+    assert int(s_buck.pos) == 23
+    nxt = np.random.default_rng(6).integers(0, cfg.vocab_size, (5,))
+    for i in range(5):
+        t = jnp.asarray(nxt[i:i + 1])[None]
+        a, s_exact = M.decode_step(params, cfg, s_exact, t)
+        b, s_buck = M.decode_step(params, cfg, s_buck, t)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_bucketed_prefill_matches_exact_localglobal():
+    """The ring-cache (sliding window) rebuild path under traced true_len."""
+    cfg = ModelConfig(
+        name="g", arch_type="dense", n_layers=6, local_global_pattern=2,
+        sliding_window=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab_size=97, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=64, policy="lacache", n_sink=2,
+                              n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(7).integers(0, 97, (21,))
+    l_exact, s_exact = M.prefill(params, cfg, jnp.asarray(toks)[None],
+                                 n_slots=64)
+    padded = np.zeros((32,), np.int32)
+    padded[:21] = toks
+    l_buck, s_buck = M.prefill(params, cfg, jnp.asarray(padded)[None],
+                               n_slots=64, true_len=jnp.asarray(21, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l_exact), np.asarray(l_buck),
+                               atol=1e-4, rtol=1e-4)
+    nxt = np.random.default_rng(8).integers(0, 97, (4,))
+    for i in range(4):
+        t = jnp.asarray(nxt[i:i + 1])[None]
+        a, s_exact = M.decode_step(params, cfg, s_exact, t)
+        b, s_buck = M.decode_step(params, cfg, s_buck, t)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_bucketed_prefill_rejects_mamba():
+    cfg = ModelConfig(
+        name="m", arch_type="hybrid", n_layers=8, attn_every=4, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=97, head_dim=16,
+        dtype="float32", lacache=LaCacheConfig(budget=64, policy="full"))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention-only"):
+        M.prefill(params, cfg, jnp.zeros((1, 16), jnp.int32), n_slots=64,
+                  true_len=jnp.asarray(9, jnp.int32))
+    # and the engine silently falls back to exact-length prefill
+    eng = Engine(cfg, params, budget=64, bucket_prefill=True)
+    assert not eng.bucket_prefill
+
+
+def test_engine_bucketing_shares_executables_and_matches(small_model):
+    """7 distinct prompt lengths in (16, 32] -> ONE prefill shape; tokens
+    must equal the exact-length engine's."""
+    cfg, params = small_model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,))
+               for n in (17, 19, 21, 23, 25, 29, 32)]
+    exact = Engine(cfg, params, budget=64, max_batch=2)
+    ref = [exact.submit(p, 3) for p in prompts]
+    exact.run()
+    bucketed = Engine(cfg, params, budget=64, max_batch=2,
+                      bucket_prefill=True)
+    out = [bucketed.submit(p, 3) for p in prompts]
+    bucketed.run()
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(o.tokens, r.tokens)
+    assert bucketed.prefill_shapes == {("prefill", 32)}
+    assert len(exact.prefill_shapes) == len(prompts)
+    # true token counts are tracked, not padded counts
+    assert bucketed.prefill_tokens == sum(p.shape[0] for p in prompts)

@@ -1,0 +1,161 @@
+"""Hypothesis property tests on the request scheduler, admission policies,
+and the shared-prefix prompt cache (guarded like test_properties.py: the
+suite skips cleanly when hypothesis is not installed)."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.models import model as M
+from repro.serving.admission import admission_names
+from repro.serving.engine import Engine, Request, Scheduler
+from repro.serving.prefix import PrefixCache
+
+BUILTIN_ADMISSIONS = ["fifo", "priority", "deadline"]
+
+
+def _req(n=4, **kw):
+    return Request(prompt=np.arange(n, dtype=np.int32), max_new_tokens=2,
+                   **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler invariants under churn, for every admission policy
+# --------------------------------------------------------------------------- #
+@given(
+    st.sampled_from(BUILTIN_ADMISSIONS),
+    st.integers(1, 5),
+    st.lists(st.tuples(st.sampled_from(["submit", "admit", "retire"]),
+                       st.integers(0, 7), st.integers(0, 100)),
+             min_size=1, max_size=60),
+)
+@settings(max_examples=50, deadline=None)
+def test_churn_preserves_slot_conservation(admission, n_slots, ops):
+    """Random submit/admit/retire churn: n_running + n_free == n_slots
+    always holds, no request is lost, none is served twice."""
+    s = Scheduler(n_slots, admission=admission)
+    submitted, served = [], []
+    for op, pri, dl in ops:
+        if op == "submit":
+            submitted.append(s.submit(_req(priority=pri, deadline=float(dl))))
+        elif op == "admit":
+            s.admit()
+        elif op == "retire" and s.running:
+            served.append(s.retire(sorted(s.running)[0]))
+        assert len(s.running) + len(s._free) == s.n_slots
+        assert set(s._free).isdisjoint(s.running)
+    # drain: everything submitted is served exactly once
+    while s.has_work:
+        s.admit()
+        served.append(s.retire(sorted(s.running)[0]))
+        assert len(s.running) + len(s._free) == s.n_slots
+    assert {id(r) for r in served} == {id(r) for r in submitted}
+    assert len(served) == len(submitted)
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_priority_admission_order_is_sorted(priorities):
+    """Admission order under 'priority' == stable sort by (-priority, seq)."""
+    s = Scheduler(len(priorities), admission="priority")
+    reqs = [s.submit(_req(priority=p)) for p in priorities]
+    admitted = [r for _, r in s.admit()]
+    expect = [reqs[i] for _, i in sorted(
+        (-r.priority, i) for i, r in enumerate(reqs))]
+    assert admitted == expect
+
+
+@given(st.lists(st.one_of(st.none(), st.floats(0, 100)), min_size=1,
+                max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_deadline_admission_none_sorts_last(deadlines):
+    s = Scheduler(len(deadlines), admission="deadline")
+    reqs = [s.submit(_req(deadline=d)) for d in deadlines]
+    admitted = [r for _, r in s.admit()]
+    keys = [(float("inf") if r.deadline is None else r.deadline)
+            for r in admitted]
+    assert keys == sorted(keys)
+    # every submitted request admitted exactly once
+    assert {id(r) for r in admitted} == {id(r) for r in reqs}
+
+
+def test_builtin_admissions_subset_of_registry():
+    assert set(BUILTIN_ADMISSIONS) <= set(admission_names())
+
+
+# --------------------------------------------------------------------------- #
+# PrefixCache: longest-match is really longest-match
+# --------------------------------------------------------------------------- #
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sets(st.integers(1, 40), min_size=1, max_size=8),
+    st.integers(1, 40),
+)
+@settings(max_examples=60, deadline=None)
+def test_prefix_cache_longest_match_property(seed, cached_lengths, qlen):
+    base = np.random.default_rng(seed).integers(0, 1000, (40,)).astype(np.int32)
+    pc = PrefixCache()
+    payload = {"x": np.zeros((2,), np.float32)}
+    logits = np.zeros((1, 3), np.float32)
+    for length in cached_lengths:
+        pc.insert(base[:length], payload, logits)
+    hit = pc.lookup(base[:qlen])
+    matching = [length for length in cached_lengths if length <= qlen]
+    if matching:
+        assert hit is not None and hit.length == max(matching)
+    else:
+        assert hit is None
+    # an unrelated query never matches
+    assert pc.lookup(base[:max(cached_lengths)] + 1000) is None
+
+
+# --------------------------------------------------------------------------- #
+# Random shared prefixes: prefix-cached prefill == cold prefill logits
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=1)
+def _tiny_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=2, d_model=48, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab_size=89, head_dim=12, dtype="float32",
+        lacache=LaCacheConfig(budget=64, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(8, 24), st.integers(1, 8))
+@settings(max_examples=3, deadline=None)
+def test_random_shared_prefix_logits_match_cold_prefill(seed, plen, slen):
+    """Two random requests sharing a random-length prefix: the snapshot the
+    warm engine stores for the extended prompt must carry logits identical
+    to a cold dense prefill of that prompt (and identical greedy tokens)."""
+    import jax.numpy as jnp
+    cfg, params = _tiny_model()
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, (plen,))
+    full = np.concatenate([pre, rng.integers(0, cfg.vocab_size, (slen,))])
+
+    warm = Engine(cfg, params, budget=64, max_batch=2, prefix_block=8)
+    wa = warm.submit(pre, 2, cache_prefix=True)
+    wb = warm.submit(full, 2, cache_prefix=True)
+    warm.run()
+    assert warm.prefix_hit_rate > 0.0
+
+    cold = Engine(cfg, params, budget=64, max_batch=2)
+    ca = cold.submit(pre, 2)
+    cb = cold.submit(full, 2)
+    cold.run()
+    np.testing.assert_array_equal(wa.tokens, ca.tokens)
+    np.testing.assert_array_equal(wb.tokens, cb.tokens)
+
+    entry = warm.prefix_cache.lookup(full)
+    assert entry is not None and entry.length == full.shape[0]
+    cold_logits, _ = M.prefill(params, cfg, jnp.asarray(full)[None],
+                               n_slots=64)
+    np.testing.assert_allclose(np.asarray(entry.logits),
+                               np.asarray(cold_logits), atol=1e-4, rtol=1e-4)
