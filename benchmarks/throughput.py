@@ -69,6 +69,47 @@ def prefix_reuse(cfg, params, budget=96, n_requests=6, prefix_len=192,
     }
 
 
+def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
+                   tail_len=16, max_new=8):
+    """Shared-prefix traffic served by the dense vs the paged KV backend.
+
+    Same requests, same prompt cache semantics; the paged backend stores
+    block tables into one physical pool with copy-on-write sharing, so the
+    peak cached-KV footprint should collapse (every snapshot along one
+    prompt's lineage re-pays only its tail blocks) while tokens stay
+    identical. Reports tokens/s (wall, incl. compile on first run) and the
+    peak cached KV bytes of each backend plus the paged sharing telemetry.
+    """
+    c = common.with_policy(cfg, "lacache", budget)
+    co = common.corpus()
+    shared = co.stream(prefix_len, seed=910)
+    prompts = [np.concatenate([shared, co.stream(tail_len, seed=911 + i)])
+               for i in range(n_requests)]
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=budget, max_batch=4,
+                     kv_backend=kv_backend)
+        for p in prompts:
+            eng.submit(p, max_new, cache_prefix=True)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.output_tokens) for r in done)
+        return eng, [r.tokens.tolist() for r in done], n_tok / dt
+
+    dense_eng, dense_toks, dense_tps = serve("dense")
+    paged_eng, paged_toks, paged_tps = serve("paged")
+    assert dense_toks == paged_toks, "backends must agree token-for-token"
+    return {
+        "n_requests": n_requests, "prefix_len": prefix_len,
+        "tok_per_s_dense": dense_tps, "tok_per_s_paged": paged_tps,
+        "peak_kv_bytes_dense": dense_eng.prefix_cache.peak_bytes,
+        "peak_kv_bytes_paged": paged_eng.prefix_cache.peak_bytes,
+        "bytes_shared": paged_eng.bytes_shared,
+        "kv_bytes_in_use": paged_eng.kv_bytes_in_use,
+    }
+
+
 def main(quick: bool = False):
     cfg, params = common.bench_model()
     budget = 96
@@ -92,6 +133,16 @@ def main(quick: bool = False):
                       n_requests=4 if quick else 6,
                       prefix_len=128 if quick else 192)
     out["prefix_reuse"] = pr
+    pd = paged_vs_dense(cfg, params, budget=budget,
+                        n_requests=4 if quick else 6,
+                        prefix_len=128 if quick else 192)
+    out["paged_vs_dense"] = pd
+    print(f"{'paged-vs-dense':10s} peak KV bytes "
+          f"{pd['peak_kv_bytes_dense']/1e6:.2f} MB -> "
+          f"{pd['peak_kv_bytes_paged']/1e6:.2f} MB "
+          f"({pd['bytes_shared']/1e6:.2f} MB shared); "
+          f"{pd['tok_per_s_dense']:.1f} -> {pd['tok_per_s_paged']:.1f} tok/s "
+          f"incl. compile")
     print(f"{'prefix-reuse':10s} {pr['prefill_tokens_cold']:5d} -> "
           f"{pr['prefill_tokens_warm']:5d} prefill tokens "
           f"(hit rate {pr['prefix_hit_rate']:.2f}, "

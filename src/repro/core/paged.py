@@ -1,0 +1,587 @@
+"""Paged KV memory: global block pool, per-request block tables, CoW sharing.
+
+The dense :class:`~repro.core.cache.KVCache` gives every sequence its own
+contiguous ``[batch, n_slots, ...]`` buffer, so snapshotting a state (prefix
+cache) or parking a preempted request means copying whole buffers. This
+module is the standard remedy from the KV-cache-serving literature (vLLM-style
+paged attention, arXiv:2412.19442 survey): KV lives in one **global physical
+pool** of fixed-size blocks and each logical cache is a **block table** that
+maps logical slot ranges onto pool blocks. Two tables may point at the same
+physical block (shared prompt prefix); blocks are reference-counted and
+**copy-on-write** — writing into a block with ``ref > 1`` transparently
+allocates a fresh block from the free list and redirects the writer's table.
+
+Everything is a jit-compatible pytree of fixed-shape arrays:
+
+* :class:`PagedPool` — ``k``/``v`` ``[n_blocks, block_size, kv_heads,
+  head_dim]`` physical storage, ``ref`` ``[n_blocks]`` refcounts (0 = free)
+  and a ``free``/``n_free`` free-list stack (``free[:n_free]`` are free ids).
+* :class:`BlockTable` — ``blocks`` ``[max_blocks]`` physical ids (-1 =
+  unmapped) plus the same logical metadata a dense cache carries (``pos``,
+  ``length``, ``scores``) so eviction policies keep working unchanged.
+
+The dense-cache API is mirrored by shims (:func:`append`, :func:`truncate`,
+:func:`compact`, :func:`keep_mask`) that gather the logical view through the
+block table, run the exact dense computation (including
+``EvictionPolicy.keep_mask`` and ladder compaction with the cache-relative
+RoPE fixup) and write survivors back block-wise — CoW-allocating only the
+blocks whose content actually changes.
+
+:class:`PagedStateStore` lifts the pool to whole decode-state pytrees: every
+``KVCache`` node is swapped for block tables (structural sharing between
+snapshots that extend one another — verified by pos-prefix equality, so
+compaction reordering safely disables sharing instead of corrupting it) and
+all other leaves (ring windows, SSM states, positions) ride along dense.
+The serving layer builds the prefix cache and request preemption on top.
+
+All ops are pure functions (pool in, pool out) and traceable; when called
+eagerly (the serving layer's mode) they additionally raise
+:class:`PoolExhausted` instead of silently corrupting the free list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cachelib
+from repro.core.cache import KVCache
+from repro.core.ladder import LadderSpec
+from repro.core.policy import PolicyLike, get_policy
+
+
+class PoolExhausted(RuntimeError):
+    """The free list cannot satisfy an allocation (caller should evict)."""
+
+
+class PagedPool(NamedTuple):
+    """Global physical block pool (one per served model / layer group)."""
+
+    k: jnp.ndarray        # [n_blocks, block_size, kv_heads, head_dim]
+    v: jnp.ndarray        # [n_blocks, block_size, kv_heads, head_dim]
+    ref: jnp.ndarray      # [n_blocks] int32 refcount, 0 = free
+    free: jnp.ndarray     # [n_blocks] int32 free-list stack
+    n_free: jnp.ndarray   # scalar int32: free[:n_free] are free ids
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def block_bytes(self) -> int:
+        """Bytes of one physical block (K and V planes together)."""
+        per = self.block_size * self.k.shape[2] * self.k.shape[3]
+        return 2 * per * self.k.dtype.itemsize
+
+
+class BlockTable(NamedTuple):
+    """One logical cache: physical block ids + dense-cache metadata."""
+
+    blocks: jnp.ndarray             # [max_blocks] int32, -1 = unmapped
+    pos: jnp.ndarray                # [n_slots] int32 (-1 = empty), as KVCache
+    length: jnp.ndarray             # scalar int32 occupied prefix
+    scores: Optional[jnp.ndarray] = None   # [n_slots] float32 (H2O/TOVA)
+
+    @property
+    def n_slots(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.blocks.shape[0]
+
+
+def init_pool(n_blocks: int, block_size: int, kv_heads: int, head_dim: int,
+              dtype=jnp.bfloat16) -> PagedPool:
+    if n_blocks < 1 or block_size < 1:
+        raise ValueError("pool needs at least one block of at least one slot")
+    return PagedPool(
+        k=jnp.zeros((n_blocks, block_size, kv_heads, head_dim), dtype),
+        v=jnp.zeros((n_blocks, block_size, kv_heads, head_dim), dtype),
+        ref=jnp.zeros((n_blocks,), jnp.int32),
+        # stack holds ids top-down so block 0 is allocated first
+        free=jnp.arange(n_blocks - 1, -1, -1, dtype=jnp.int32),
+        n_free=jnp.asarray(n_blocks, jnp.int32))
+
+
+def blocks_for(n_slots: int, block_size: int) -> int:
+    """Logical blocks needed to cover ``n_slots`` slots (static)."""
+    return -(-n_slots // block_size)
+
+
+def new_table(n_slots: int, block_size: int,
+              with_scores: bool = False) -> BlockTable:
+    mb = blocks_for(n_slots, block_size)
+    return BlockTable(
+        blocks=jnp.full((mb,), -1, jnp.int32),
+        pos=jnp.full((n_slots,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+        scores=jnp.zeros((n_slots,), jnp.float32) if with_scores else None)
+
+
+# --------------------------------------------------------------------------- #
+# Refcount / free-list primitives (pure, traceable)
+# --------------------------------------------------------------------------- #
+def _concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _push_free(pool: PagedPool, freed_mask: jnp.ndarray) -> PagedPool:
+    """Push every block flagged in ``freed_mask`` onto the free stack."""
+    nb = pool.n_blocks
+    n_freed = freed_mask.sum().astype(jnp.int32)
+    # freed ids ascending, padded with the OOB sentinel nb
+    freed_sorted = jnp.sort(jnp.where(freed_mask, jnp.arange(nb), nb))
+    idx = jnp.arange(nb)
+    src = jnp.clip(idx - pool.n_free, 0, nb - 1)
+    new_free = jnp.where((idx >= pool.n_free) & (idx < pool.n_free + n_freed),
+                         freed_sorted[src], pool.free)
+    return pool._replace(free=new_free, n_free=pool.n_free + n_freed)
+
+
+def _decref(pool: PagedPool, ids: jnp.ndarray) -> PagedPool:
+    """Drop one reference per id (-1 entries are skipped); blocks reaching
+    refcount 0 return to the free list."""
+    nb = pool.n_blocks
+    valid = ids >= 0
+    idc = jnp.where(valid, ids, 0)
+    dec = jnp.zeros((nb,), jnp.int32).at[idc].add(valid.astype(jnp.int32))
+    ref = pool.ref - dec
+    freed = (dec > 0) & (ref <= 0) & (pool.ref > 0)
+    pool = pool._replace(ref=jnp.maximum(ref, 0))
+    return _push_free(pool, freed)
+
+
+def _incref(pool: PagedPool, ids: jnp.ndarray) -> PagedPool:
+    nb = pool.n_blocks
+    valid = ids >= 0
+    idc = jnp.where(valid, ids, 0)
+    inc = jnp.zeros((nb,), jnp.int32).at[idc].add(valid.astype(jnp.int32))
+    return pool._replace(ref=pool.ref + inc)
+
+
+def retain(pool: PagedPool, table: BlockTable) -> PagedPool:
+    """Add one reference to every block the table maps (sharing)."""
+    return _incref(pool, table.blocks)
+
+
+def release(pool: PagedPool, table: BlockTable) -> PagedPool:
+    """Drop the table's references; fully unreferenced blocks become free."""
+    return _decref(pool, table.blocks)
+
+
+# --------------------------------------------------------------------------- #
+# The write primitive: scatter a logical view into (possibly shared) blocks
+# --------------------------------------------------------------------------- #
+def _write(pool: PagedPool, blocks: jnp.ndarray, view_k: jnp.ndarray,
+           view_v: jnp.ndarray, start, length
+           ) -> Tuple[PagedPool, jnp.ndarray]:
+    """Write logical slots ``[start, length)`` of a padded view into blocks.
+
+    view_k/view_v: [max_blocks * block_size, kv_heads, head_dim] (no batch).
+    Per logical block: untouched blocks (fully before ``start``) keep their
+    mapping; written blocks are CoW-allocated when shared (ref > 1) or
+    unmapped; blocks fully at or past ``length`` are released. ``start`` /
+    ``length`` may be traced.
+    """
+    nb, bs = pool.n_blocks, pool.block_size
+    mb = blocks.shape[0]
+    bi = jnp.arange(mb)
+    lo, hi = bi * bs, (bi + 1) * bs
+    length = jnp.asarray(length, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    written = (lo < length) & (hi > start)
+    released = (lo >= length) & (blocks >= 0)
+    mapped = blocks >= 0
+    shared = mapped & (pool.ref[jnp.clip(blocks, 0)] > 1)
+    need_new = written & (~mapped | shared)
+
+    n_new = jnp.sum(need_new.astype(jnp.int32))
+    if _concrete(n_new) and _concrete(pool.n_free) \
+            and int(n_new) > int(pool.n_free):
+        raise PoolExhausted(
+            f"need {int(n_new)} blocks, {int(pool.n_free)} free")
+    rank = jnp.cumsum(need_new.astype(jnp.int32)) - 1
+    new_ids = pool.free[jnp.clip(pool.n_free - 1 - rank, 0, nb - 1)]
+    new_blocks = jnp.where(written,
+                           jnp.where(need_new, new_ids, blocks),
+                           jnp.where(released, -1, blocks))
+    # fresh allocations start at ref 1; CoW'd originals and released blocks
+    # each lose one reference
+    ref = pool.ref.at[jnp.where(need_new, new_ids, nb)].set(1, mode="drop")
+    pool = pool._replace(ref=ref, n_free=pool.n_free - n_new)
+    pool = _decref(pool, jnp.where((written & shared) | released, blocks, -1))
+
+    tgt = jnp.where(written, new_blocks, nb)     # OOB sentinel drops the row
+    ck = view_k.reshape(mb, bs, *view_k.shape[1:])
+    cv = view_v.reshape(mb, bs, *view_v.shape[1:])
+    pool = pool._replace(
+        k=pool.k.at[tgt].set(ck.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[tgt].set(cv.astype(pool.v.dtype), mode="drop"))
+    return pool, new_blocks
+
+
+def _padded_view(pool: PagedPool, table: BlockTable
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather [max_blocks * block_size, kv, hd] K/V through the table."""
+    ids = jnp.clip(table.blocks, 0)
+    shp = (table.max_blocks * pool.block_size,) + pool.k.shape[2:]
+    return pool.k[ids].reshape(shp), pool.v[ids].reshape(shp)
+
+
+def _pad_slots(x: jnp.ndarray, padded: int) -> jnp.ndarray:
+    """Right-pad axis 0 (slots) with zeros up to ``padded``."""
+    if x.shape[0] == padded:
+        return x
+    pad = [(0, padded - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+# --------------------------------------------------------------------------- #
+# Dense-cache bridge: the KVCache API mirrored through the block table
+# --------------------------------------------------------------------------- #
+def gather(pool: PagedPool, table: BlockTable) -> KVCache:
+    """Materialize the logical dense view (batch 1) of a block table.
+
+    Exact for every slot the dense semantics can observe (slots < length,
+    plus pos/scores metadata, which live in the table verbatim)."""
+    vk, vv = _padded_view(pool, table)
+    n = table.n_slots
+    return KVCache(k=vk[None, :n], v=vv[None, :n], pos=table.pos,
+                   length=table.length, scores=table.scores)
+
+
+def from_dense(pool: PagedPool, cache: KVCache, *,
+               parent: Optional[BlockTable] = None, shared_blocks: int = 0
+               ) -> Tuple[PagedPool, BlockTable]:
+    """Page a dense (batch-1) cache into the pool.
+
+    ``parent``/``shared_blocks``: the first ``shared_blocks`` logical blocks
+    are known-identical to the parent's (prefix lineage) — they are shared by
+    bumping refcounts instead of being copied. The caller is responsible for
+    the content claim; :func:`shared_prefix_blocks` computes the safe count.
+    """
+    if cache.k.shape[0] != 1:
+        raise ValueError("from_dense pages batch-1 caches (one table per "
+                         f"sequence); got batch {cache.k.shape[0]}")
+    bs = pool.block_size
+    n_slots = cache.pos.shape[0]
+    mb = blocks_for(n_slots, bs)
+    blocks = jnp.full((mb,), -1, jnp.int32)
+    if parent is not None and shared_blocks:
+        shared_blocks = min(shared_blocks, mb, parent.max_blocks)
+        # pre-check capacity before retaining parent blocks, so an
+        # exhausted pool raises without leaking references
+        if _concrete(cache.length) and _concrete(pool.n_free) and \
+                blocks_for(int(cache.length), bs) - shared_blocks \
+                > int(pool.n_free):
+            raise PoolExhausted(
+                f"need {blocks_for(int(cache.length), bs) - shared_blocks} "
+                f"blocks, {int(pool.n_free)} free")
+        blocks = blocks.at[:shared_blocks].set(parent.blocks[:shared_blocks])
+        pool = _incref(pool, parent.blocks[:shared_blocks])
+    padded = mb * bs
+    vk = _pad_slots(cache.k[0], padded)
+    vv = _pad_slots(cache.v[0], padded)
+    pool, blocks = _write(pool, blocks, vk, vv,
+                          start=shared_blocks * bs, length=cache.length)
+    return pool, BlockTable(blocks=blocks, pos=cache.pos,
+                            length=cache.length, scores=cache.scores)
+
+
+def shared_prefix_blocks(parent: BlockTable, cache: KVCache,
+                         block_size: int) -> int:
+    """Longest safely-shareable whole-block prefix of ``cache`` vs ``parent``.
+
+    A block is shareable iff it is entirely inside both occupied prefixes and
+    the per-slot positions agree over it — compaction that reorders slots
+    changes ``pos`` and therefore disables sharing for the affected blocks
+    instead of splicing stale content. Host-side (concrete arrays only).
+    """
+    limit = min(int(parent.length), int(cache.length)) // block_size
+    if limit <= 0:
+        return 0
+    ppos = np.asarray(parent.pos[:limit * block_size])
+    cpos = np.asarray(cache.pos[:limit * block_size])
+    agree = ppos == cpos
+    if agree.all():
+        return limit
+    first_bad = int(np.argmin(agree))
+    return first_bad // block_size
+
+
+def append(pool: PagedPool, table: BlockTable, k_new: jnp.ndarray,
+           v_new: jnp.ndarray, pos_new: jnp.ndarray
+           ) -> Tuple[PagedPool, BlockTable]:
+    """Append ``T_new`` tokens at the occupied prefix end (CoW-aware).
+
+    Mirrors :func:`repro.core.cache.append`; blocks before the append point
+    are untouched, the (possibly shared) straddled tail block is
+    copy-on-write'd, and new blocks come off the free list.
+    """
+    t_new = k_new.shape[1]
+    at = table.length
+    vk, vv = _padded_view(pool, table)
+    vk = jax.lax.dynamic_update_slice(vk, k_new[0].astype(vk.dtype), (at, 0, 0))
+    vv = jax.lax.dynamic_update_slice(vv, v_new[0].astype(vv.dtype), (at, 0, 0))
+    pos = jax.lax.dynamic_update_slice(table.pos,
+                                       pos_new.astype(jnp.int32), (at,))
+    new_len = at + t_new
+    pool, blocks = _write(pool, table.blocks, vk, vv, start=at, length=new_len)
+    return pool, table._replace(blocks=blocks, pos=pos, length=new_len)
+
+
+def truncate(pool: PagedPool, table: BlockTable, length
+              ) -> Tuple[PagedPool, BlockTable]:
+    """Mirror of :func:`repro.core.cache.truncate`: drop slots >= length and
+    release blocks that fall entirely past the new occupied prefix."""
+    length = jnp.minimum(table.length, jnp.asarray(length, jnp.int32))
+    live = jnp.arange(table.n_slots) < length
+    bi = jnp.arange(table.max_blocks)
+    dead = (bi * pool.block_size >= length) & (table.blocks >= 0)
+    pool = _decref(pool, jnp.where(dead, table.blocks, -1))
+    return pool, table._replace(
+        blocks=jnp.where(dead, -1, table.blocks),
+        pos=jnp.where(live, table.pos, -1),
+        length=length,
+        scores=None if table.scores is None
+        else jnp.where(live, table.scores, 0.0))
+
+
+def keep_mask(policy: PolicyLike, spec: LadderSpec, pool: PagedPool,
+              table: BlockTable, layer) -> jnp.ndarray:
+    """Eviction-policy survivor mask, evaluated on the gathered view —
+    policies keep working against paged storage with zero changes."""
+    return get_policy(policy).keep_mask(spec, gather(pool, table), layer)
+
+
+def compact(pool: PagedPool, table: BlockTable, spec: LadderSpec, layer,
+            policy: PolicyLike, rope_theta=None
+            ) -> Tuple[PagedPool, BlockTable]:
+    """One ladder compaction pass through the block table.
+
+    Gathers the logical view, runs the exact dense compaction (policy keep
+    mask, left-compaction, cache-relative RoPE fixup), then rewrites the
+    surviving prefix block-wise: uniquely-owned blocks are updated in place
+    (same physical id), shared blocks are CoW'd, and blocks past the new
+    length go back to the free list.
+    """
+    dense = gather(pool, table)
+    newc = cachelib.compact(dense, spec, layer, policy, rope_theta=rope_theta)
+    padded = table.max_blocks * pool.block_size
+    pool, blocks = _write(pool, table.blocks,
+                          _pad_slots(newc.k[0], padded),
+                          _pad_slots(newc.v[0], padded),
+                          start=0, length=newc.length)
+    return pool, BlockTable(blocks=blocks, pos=newc.pos, length=newc.length,
+                            scores=newc.scores)
+
+
+def fork(pool: PagedPool, table: BlockTable) -> Tuple[PagedPool, BlockTable]:
+    """Zero-copy clone: the clone shares every block (refcounts bumped);
+    subsequent appends/compactions CoW on first write."""
+    return retain(pool, table), table
+
+
+# --------------------------------------------------------------------------- #
+# Telemetry / invariants
+# --------------------------------------------------------------------------- #
+def blocks_in_use(pool: PagedPool) -> int:
+    return int((np.asarray(pool.ref) > 0).sum())
+
+
+def bytes_in_use(pool: PagedPool) -> int:
+    return blocks_in_use(pool) * pool.block_bytes
+
+
+def bytes_shared(pool: PagedPool) -> int:
+    """Bytes saved by sharing: every reference beyond the first to a block
+    is a dense copy that was never materialized."""
+    extra = np.clip(np.asarray(pool.ref) - 1, 0, None).sum()
+    return int(extra) * pool.block_bytes
+
+
+def check_invariants(pool: PagedPool) -> None:
+    """Host-side allocator invariants (tests): refcounts non-negative, the
+    free stack holds exactly the refcount-0 blocks, no duplicates."""
+    ref = np.asarray(pool.ref)
+    n_free = int(pool.n_free)
+    free = np.asarray(pool.free)[:n_free]
+    assert (ref >= 0).all(), "negative refcount"
+    assert len(np.unique(free)) == n_free, "duplicate ids on the free stack"
+    assert (ref[free] == 0).all(), "free-stack block with live references"
+    assert int((ref > 0).sum()) + n_free == pool.n_blocks, \
+        "leaked block: neither referenced nor on the free stack"
+
+
+# =========================================================================== #
+# PagedStateStore: whole decode-state snapshots with structural sharing
+# =========================================================================== #
+@dataclasses.dataclass(eq=False)
+class _TableSet:
+    """Block tables replacing one KVCache node (len > 1 <=> stacked node)."""
+
+    tables: List[BlockTable]
+    stacked: bool
+
+
+@dataclasses.dataclass(eq=False)
+class PagedSnapshot:
+    """One stored pytree: dense leaves by reference, KV content as tables."""
+
+    leaves: List[Any]
+    treedef: Any
+    owned_bytes: int          # newly-allocated block bytes + dense leaf bytes
+    dense_bytes: int = 0      # the dense (non-KV-block) share of owned_bytes
+    released: bool = False
+
+
+def _is_kv(x) -> bool:
+    return isinstance(x, KVCache)
+
+
+def _unstack_kv(node: KVCache) -> Tuple[List[KVCache], bool]:
+    """A stacked node (leaves [n_full, 1, n_slots, ...]) -> unit caches."""
+    if node.length.ndim == 0:
+        return [node], False
+    n = node.length.shape[0]
+    units = [KVCache(
+        k=node.k[i], v=node.v[i], pos=node.pos[i], length=node.length[i],
+        scores=None if node.scores is None else node.scores[i])
+        for i in range(n)]
+    return units, True
+
+
+def _restack_kv(units: List[KVCache], stacked: bool) -> KVCache:
+    if not stacked:
+        return units[0]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+
+class PagedStateStore:
+    """Content store for decode-state pytrees over one global block pool.
+
+    ``put`` swaps every :class:`KVCache` node for block tables (sharing
+    whole-block prefixes with a parent snapshot when the positions agree —
+    the lineage produced by chunked prefill snapshots), ``get`` gathers a
+    dense state back (bit-exact for everything the dense semantics observe),
+    ``release`` returns the snapshot's references to the pool. Raises
+    :class:`PoolExhausted` (pre-checked, no partial mutation) when the free
+    list cannot hold a snapshot — callers evict and retry.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.pool = init_pool(n_blocks, block_size, kv_heads, head_dim, dtype)
+        self.puts = 0
+        self.gets = 0
+        self.peak_bytes = 0
+
+    @property
+    def block_size(self) -> int:
+        return self.pool.block_size
+
+    @property
+    def bytes_in_use(self) -> int:
+        return bytes_in_use(self.pool)
+
+    @property
+    def bytes_shared(self) -> int:
+        return bytes_shared(self.pool)
+
+    @property
+    def free_blocks(self) -> int:
+        return int(self.pool.n_free)
+
+    def put(self, tree, parent: Optional[PagedSnapshot] = None
+            ) -> Tuple[PagedSnapshot, int]:
+        """Store a pytree; returns (snapshot, owned_bytes). ``owned_bytes``
+        counts only newly-allocated blocks plus dense (non-KV) leaves — the
+        unique cost of this snapshot at insert time."""
+        leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_kv)
+        pleaves = None
+        if parent is not None and not parent.released \
+                and treedef == parent.treedef:
+            pleaves = parent.leaves
+        bs = self.pool.block_size
+        # plan pass: compute sharing + total demand before touching the pool
+        plan, needed = [], 0
+        for i, leaf in enumerate(leaves):
+            if not _is_kv(leaf):
+                continue
+            units, stacked = _unstack_kv(leaf)
+            ptabs = None
+            if pleaves is not None and isinstance(pleaves[i], _TableSet) \
+                    and len(pleaves[i].tables) == len(units):
+                ptabs = pleaves[i].tables
+            entry = []
+            for j, unit in enumerate(units):
+                shared = 0
+                if ptabs is not None:
+                    shared = shared_prefix_blocks(ptabs[j], unit, bs)
+                want = blocks_for(max(int(unit.length), 0), bs) if \
+                    int(unit.length) > 0 else 0
+                needed += max(want - shared, 0)
+                entry.append((unit, None if ptabs is None else ptabs[j],
+                              shared))
+            plan.append((i, entry, stacked))
+        if needed > self.free_blocks:
+            raise PoolExhausted(
+                f"snapshot needs {needed} blocks, {self.free_blocks} free")
+
+        out = list(leaves)
+        for i, entry, stacked in plan:
+            tables = []
+            for unit, ptab, shared in entry:
+                self.pool, table = from_dense(
+                    self.pool, unit, parent=ptab, shared_blocks=shared)
+                tables.append(table)
+            out[i] = _TableSet(tables=tables, stacked=stacked)
+        dense_bytes = sum(int(leaf.size) * leaf.dtype.itemsize
+                          for leaf in leaves
+                          if not _is_kv(leaf) and hasattr(leaf, "dtype"))
+        owned = needed * self.pool.block_bytes + dense_bytes
+        self.puts += 1
+        self.peak_bytes = max(self.peak_bytes, self.bytes_in_use)
+        return PagedSnapshot(leaves=out, treedef=treedef, owned_bytes=owned,
+                             dense_bytes=dense_bytes), owned
+
+    def get(self, snap: PagedSnapshot):
+        """Materialize the stored pytree (gathers KV through the tables)."""
+        if snap.released:
+            raise ValueError("snapshot was released back to the pool")
+        leaves = [
+            _restack_kv([gather(self.pool, t) for t in leaf.tables],
+                        leaf.stacked)
+            if isinstance(leaf, _TableSet) else leaf
+            for leaf in snap.leaves]
+        self.gets += 1
+        return jax.tree.unflatten(snap.treedef, leaves)
+
+    def release(self, snap: PagedSnapshot) -> None:
+        """Return the snapshot's block references to the pool (idempotent)."""
+        if snap.released:
+            return
+        for leaf in snap.leaves:
+            if isinstance(leaf, _TableSet):
+                for t in leaf.tables:
+                    self.pool = release(self.pool, t)
+        snap.released = True
+
+    def snapshot_refcounts(self, snap: PagedSnapshot) -> np.ndarray:
+        """Pool refcounts of every block the snapshot maps (telemetry)."""
+        ids: List[int] = []
+        for leaf in snap.leaves:
+            if isinstance(leaf, _TableSet):
+                for t in leaf.tables:
+                    b = np.asarray(t.blocks)
+                    ids.extend(b[b >= 0].tolist())
+        return np.asarray(self.pool.ref)[np.asarray(ids, np.int64)] \
+            if ids else np.zeros((0,), np.int32)

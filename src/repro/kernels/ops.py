@@ -147,6 +147,24 @@ def _xla_decode_attention(q, k, v, length, *, sm_scale=None):
 
 
 # --------------------------------------------------------------------------- #
+# Paged decode attention (block-table cache; repro.core.paged)
+# --------------------------------------------------------------------------- #
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           sm_scale=None, impl: Optional[str] = None):
+    """Decode attention through a per-sequence block table over a global
+    physical block pool. q: [b, h, d]; k_pool/v_pool: [n_blocks, bs, kv, d];
+    block_tables: [b, max_blocks] (-1 unmapped); lengths: [b]."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import paged_attention as pa
+        return pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         lengths, sm_scale=sm_scale,
+                                         interpret=_interpret())
+    return _ref.paged_decode_attention_reference(
+        q, k_pool, v_pool, block_tables, lengths, sm_scale=sm_scale)
+
+
+# --------------------------------------------------------------------------- #
 # Gather-compaction (LaCache iterative compaction)
 # --------------------------------------------------------------------------- #
 def gather_compact(x, perm, new_length, *, impl: Optional[str] = None):

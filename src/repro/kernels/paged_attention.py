@@ -1,0 +1,125 @@
+"""Paged flash-decode attention: one query token vs a block-table cache.
+
+The dense decode kernel (:mod:`repro.kernels.decode_attention`) assumes each
+sequence owns a contiguous slot buffer. Under the paged KV subsystem
+(:mod:`repro.core.paged`) a sequence's KV lives in non-contiguous physical
+blocks of a global pool, addressed through a per-sequence block table — so
+the kernel must translate logical slot blocks to physical pool blocks while
+it streams.
+
+This is the classic scalar-prefetch pattern: the block tables and lengths
+ride in SMEM via ``PrefetchScalarGridSpec`` so the *index maps* can read
+them — each (batch, kv_head, logical-block) grid step DMAs exactly the
+physical K/V block the table names, straight from the pool, with no
+gather-to-dense materialization. GQA groups fold into query rows as in the
+dense kernel; online softmax accumulates across the logical-block grid
+dimension; masking is per-request ``lengths[b]`` plus the table's unmapped
+(-1) sentinel, so ragged batches share one launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, sm_scale: float, block_size: int,
+                  max_blocks: int):
+    """Grid: (batch, kv_heads, max_blocks).
+
+    tables_ref: [b, max_blocks] SMEM; lengths_ref: [b] SMEM;
+    q_ref/o_ref: [group, d]; k_ref/v_ref: [block_size, d] — the physical
+    block the index map selected via the table.
+    """
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale           # [g, d]
+    k = k_ref[...].astype(jnp.float32)                      # [bs, d]
+    s = q @ k.T                                             # [g, bs]
+    slot = si * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (slot < lengths_ref[bi]) & (tables_ref[bi, si] >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+    s = jnp.where(jnp.isnan(s), NEG_INF, s)  # OOB grid padding (NaN fill)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    col_valid = ((si * block_size +
+                  jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)
+                  ) < lengths_ref[bi]) & (tables_ref[bi, si] >= 0)
+    vv = jnp.where(col_valid, v_ref[...].astype(jnp.float32), 0.0)
+    acc_scr[...] = acc_scr[...] * alpha + p @ vv
+    m_scr[...] = m_new
+
+    @pl.when(si == max_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           lengths: jnp.ndarray, *,
+                           sm_scale: Optional[float] = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
+    block_tables: [b, max_blocks] int32 (-1 = unmapped);
+    lengths: [b] int32 valid-prefix lengths  ->  [b, h, d].
+    """
+    b, h, d = q.shape
+    n_blocks, block_size, kvh = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = h // kvh
+    mb = block_tables.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
+    qr = q.reshape(b, kvh, g, d)
+
+    def q_map(bi, hi, si, tables_ref, lengths_ref):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, si, tables_ref, lengths_ref):
+        # translate logical block -> physical pool block through the table;
+        # unmapped (-1) clamps to 0 and is masked out inside the kernel
+        return (jnp.maximum(tables_ref[bi, si], 0), 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, mb),
+        in_specs=[
+            pl.BlockSpec((None, None, g, d), q_map),
+            pl.BlockSpec((None, block_size, None, d), kv_map),
+            pl.BlockSpec((None, block_size, None, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, sm_scale=sm_scale,
+                          block_size=block_size, max_blocks=mb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qr, k_pool, v_pool)
+    return out.reshape(b, h, d)

@@ -75,6 +75,33 @@ def decode_attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out[:, 0]
 
 
+def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                     v_pool: jnp.ndarray,
+                                     block_tables: jnp.ndarray,
+                                     lengths: jnp.ndarray, *,
+                                     sm_scale: Optional[float] = None
+                                     ) -> jnp.ndarray:
+    """Single-token decode attention through a paged block table.
+
+    q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
+    block_tables: [b, max_blocks] int32 (-1 = unmapped); lengths: [b] int32.
+    Gathers the logical view per sequence, then runs the dense reference with
+    a per-batch validity mask — the semantics contract for the Pallas paged
+    kernel (which never materializes the gather).
+    """
+    b = q.shape[0]
+    block_size = k_pool.shape[1]
+    mb = block_tables.shape[1]
+    ids = jnp.clip(block_tables, 0)                       # [b, mb]
+    k = k_pool[ids].reshape(b, mb * block_size, *k_pool.shape[2:])
+    v = v_pool[ids].reshape(b, mb * block_size, *v_pool.shape[2:])
+    slot = jnp.arange(mb * block_size)
+    mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
+    valid = (slot[None, :] < lengths[:, None]) & mapped    # [b, mb*bs]
+    return mha_reference(q[:, None], k, v, causal=False, kv_valid=valid,
+                         sm_scale=sm_scale)[:, 0]
+
+
 def gather_compact_reference(x: jnp.ndarray, perm: jnp.ndarray,
                              new_length: jnp.ndarray) -> jnp.ndarray:
     """Permute slots (axis 1) by ``perm`` and zero slots >= new_length.

@@ -56,6 +56,14 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="request-mode: print tokens as they are sampled "
                          "(on_token)")
+    ap.add_argument("--kv-backend", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV memory backend: 'paged' stores prefix "
+                         "snapshots as block tables into one physical pool "
+                         "(copy-on-write sharing) and enables preemption "
+                         "of RUNNING requests under admission pressure")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged backend: slots per physical block")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -76,8 +84,10 @@ def main():
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
     eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch,
                  admission=args.admission,
-                 bucket_prefill=args.bucket_prefill)
+                 bucket_prefill=args.bucket_prefill,
+                 kv_backend=args.kv_backend, page_size=args.page_size)
     print(f"policy={args.policy} admission={args.admission} "
+          f"kv-backend={args.kv_backend} "
           f"budget={args.budget} prompt={args.prompt_len} new={args.max_new}")
 
     if args.request_mode:
@@ -112,6 +122,10 @@ def main():
               f"{len(eng.prefill_shapes)} distinct shapes; "
               f"prefix hit rate {eng.prefix_hit_rate:.2f} "
               f"({eng.prefix_tokens_reused} tokens reused)")
+        if args.kv_backend == "paged":
+            print(f"paged pool: {eng.kv_bytes_in_use/1e6:.2f} MB live, "
+                  f"{eng.bytes_shared/1e6:.2f} MB deduplicated by block "
+                  f"sharing; {eng.preemptions} preemptions")
         print("sample:", done[0].tokens[:32].tolist())
     else:
         prompts = np.stack([corpus.stream(args.prompt_len, seed=i)

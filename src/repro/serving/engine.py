@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import paged as pagedlib
 from repro.models import model as M
 from repro.serving import sampling
 from repro.serving.admission import AdmissionLike, get_admission
@@ -110,6 +111,8 @@ class Request:
     cache_prefix: bool = False          # opt into the shared-prefix cache
     on_token: Optional[Callable[["Request", int], None]] = None
     _key: Any = None                    # per-request PRNG chain (runtime)
+    _resume: Any = None                 # (PagedSnapshot, last token) while
+    #                                     preempted; None otherwise
 
     @property
     def prompt_len(self) -> int:
@@ -153,6 +156,10 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return sorted(self._free)
 
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
     def pending_requests(self) -> List[Request]:
         """Pending requests in admission order (non-destructive)."""
         return [r for _, _, r in sorted(self.pending)]
@@ -183,6 +190,19 @@ class Scheduler:
         self._free.append(slot)
         return req
 
+    def requeue(self, slot: int) -> Request:
+        """Preemption: move a RUNNING request back to the pending heap and
+        free its slot. The request re-enters admission with a fresh sequence
+        number, so its admission key (deadline / priority) decides when it
+        comes back — not its original submission position."""
+        req = self.running.pop(slot)
+        req.status, req.slot = PENDING, -1
+        self._free.append(slot)
+        heapq.heappush(self.pending,
+                       (self.admission.key(req, self._seq), self._seq, req))
+        self._seq += 1
+        return req
+
 
 # --------------------------------------------------------------------------- #
 # Engine
@@ -191,11 +211,18 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None,
                  max_batch: int = 8, *, admission: AdmissionLike = "fifo",
                  prefix_cache_bytes: int = 256 << 20, prefix_block: int = 16,
-                 bucket_prefill: bool = False, min_bucket: int = 16):
+                 bucket_prefill: bool = False, min_bucket: int = 16,
+                 kv_backend: str = "dense", page_size: int = 16,
+                 pool_blocks: Optional[int] = None,
+                 preempt: Optional[bool] = None):
+        if kv_backend not in ("dense", "paged"):
+            raise ValueError(
+                f"kv_backend must be 'dense' or 'paged', got {kv_backend!r}")
         self.cfg = cfg
         self.params = params
         self.budget = budget if budget is not None else cfg.lacache.budget
         self.max_batch = max_batch
+        self.kv_backend = kv_backend
         self._decode = jax.jit(functools.partial(M.decode_step, cfg=cfg))
         self._decode_score = jax.jit(self._decode_and_score)
         self._decode_chunk = jax.jit(functools.partial(M.decode_chunk, cfg=cfg))
@@ -215,7 +242,28 @@ class Engine:
                     F, o.astype(F.dtype), slot, 0), full, one),
             donate_argnums=(0,))
         self.scheduler = Scheduler(max_batch, admission=admission)
-        self.prefix_cache = PrefixCache(max_bytes=prefix_cache_bytes)
+        # paged backend: one global physical block pool; prefix snapshots
+        # and preempted requests share blocks by refcount instead of
+        # holding independent dense copies.
+        self.kv_store = None
+        if kv_backend == "paged":
+            n_kv_layers = max(1, sum(
+                1 for s in cfg.layer_specs()
+                if s.kind == "attn" and s.attn == "global"))
+            per_seq = pagedlib.blocks_for(self.budget, page_size)
+            if pool_blocks is None:
+                # room for every batch slot plus a healthy prefix
+                # working set; the prefix cache evicts LRU under pool
+                # pressure, so this is a soft ceiling, not a failure mode.
+                pool_blocks = n_kv_layers * per_seq * max(8, 4 * max_batch)
+            self.kv_store = pagedlib.PagedStateStore(
+                pool_blocks, page_size, cfg.n_kv_heads, cfg.head_dim_,
+                jnp.dtype(cfg.dtype))
+        self.preempt_enabled = (preempt if preempt is not None
+                                else kv_backend == "paged")
+        self.preemptions = 0
+        self.prefix_cache = PrefixCache(max_bytes=prefix_cache_bytes,
+                                        store=self.kv_store)
         self.prefix_block = max(1, prefix_block)
         self._policy_evicts = M.eviction_policy(cfg).evicts
         # bucketing pads the prompt; exact only for attention layers (SSM
@@ -240,6 +288,17 @@ class Engine:
     def prefix_hit_rate(self) -> float:
         """Fraction of prefix-cache lookups that found a reusable prefix."""
         return self.prefix_cache.hit_rate
+
+    @property
+    def bytes_shared(self) -> int:
+        """Physical KV bytes deduplicated by block sharing (paged backend;
+        0 under the dense backend)."""
+        return self.prefix_cache.bytes_shared
+
+    @property
+    def kv_bytes_in_use(self) -> int:
+        """Physical bytes of live pool blocks (paged backend)."""
+        return self.kv_store.bytes_in_use if self.kv_store is not None else 0
 
     # ------------------------------------------------------------------ #
     # Lockstep (batch) layer
@@ -454,17 +513,28 @@ class Engine:
         if entry is not None:
             self.prefix_tokens_reused += entry.length
             if entry.length == req.prompt_len:
-                return entry.logits, entry.state     # zero prefill compute
+                # zero prefill compute; paged entries gather a fresh
+                # working state, the stored blocks stay shared
+                return self.prefix_cache.restore(entry)
         start = entry.length if entry is not None else 0
-        state = entry.state if entry is not None else self.new_state(1)
+        if entry is not None:
+            _, state = self.prefix_cache.restore(entry)
+        else:
+            state = self.new_state(1)
         prompt, t = req.prompt, req.prompt_len
         block = self.prefix_block
         logits, off = None, start
+        parent = entry   # each snapshot extends the previous one: under the
+        #                  paged backend the store shares their whole-block
+        #                  prefix instead of copying it
         while off < t:
             nxt = min(t, (off // block + 1) * block)
             logits, state = self._chunk_prefill(state, prompt[off:nxt])
             off = nxt
-            self.prefix_cache.insert(prompt[:off], state, logits)
+            new_entry = self.prefix_cache.insert(prompt[:off], state, logits,
+                                                 parent=parent)
+            if new_entry is not None:
+                parent = new_entry
         return logits, state
 
     def _sample_next(self, req: Request, logits_row) -> int:
@@ -483,6 +553,56 @@ class Engine:
         if req.on_token is not None:
             req.on_token(req, tok)
 
+    # -- preemption (paged backend) -------------------------------------- #
+    def preempt(self, slot: int) -> Optional[Request]:
+        """Swap a RUNNING request out of its batch slot into the block pool.
+
+        The request's per-slot decode state is paged into the store (KV
+        blocks; small dense leaves ride along), its slot is freed, and it
+        re-enters the pending heap under its admission key. On re-admission
+        the exact state is gathered back, so the continuation is token-for-
+        token identical to never having been preempted. Returns None (and
+        leaves the request running) when the pool cannot hold the snapshot
+        even after evicting every prefix-cache entry."""
+        if self.kv_store is None:
+            raise RuntimeError("preemption requires kv_backend='paged' "
+                               "(a dense slot state has no pool to park in)")
+        req = self.scheduler.running[slot]
+        one = jax.tree.map(lambda x: x[slot], self._slot_states)
+        while True:
+            try:
+                snap, _ = self.kv_store.put(one)
+                break
+            except pagedlib.PoolExhausted:
+                # prefix snapshots are recomputable; a live request is not
+                if not self.prefix_cache.evict_lru():
+                    return None
+        req._resume = (snap, int(self._slot_tokens[slot]))
+        self.scheduler.requeue(slot)
+        self.preemptions += 1
+        return req
+
+    def _maybe_preempt(self) -> None:
+        """Deadline-pressure preemption: while a pending request outranks a
+        RUNNING one under the admission policy and no slot is free, swap the
+        worst-ranked running request out to the pool. Running requests are
+        compared at sequence -1, so a pending request must *strictly* beat
+        them — FIFO never preempts, and ties always favour the incumbent."""
+        if not self.preempt_enabled or self.kv_store is None \
+                or self._slot_states is None:
+            return
+        sch = self.scheduler
+        while sch.pending and sch.n_free == 0 and sch.running:
+            best_pending = sch.pending[0][0]       # heap root: O(1)
+            worst_slot, worst_key = max(
+                ((s, sch.admission.key(r, -1))
+                 for s, r in sch.running.items()),
+                key=lambda sk: sk[1])
+            if not best_pending < worst_key:
+                break
+            if self.preempt(worst_slot) is None:
+                break
+
     def step(self) -> List[Request]:
         """One engine tick. Returns the requests that finished this tick.
 
@@ -497,9 +617,22 @@ class Engine:
            ``max_new_tokens`` retire and free their slot immediately.
         """
         self._ensure_slot_states()
+        self._maybe_preempt()
         finished: List[Request] = []
 
         for slot, req in self.scheduler.admit():
+            if req._resume is not None:
+                # preempted request: gather the parked state back from the
+                # pool and continue decoding exactly where it stopped (the
+                # last sampled token re-enters the vmapped decode below)
+                snap, tok = req._resume
+                state1 = self.kv_store.get(snap)
+                self.kv_store.release(snap)
+                req._resume = None
+                self._slot_states = self._splice(self._slot_states, state1,
+                                                 jnp.asarray(slot, jnp.int32))
+                self._slot_tokens[slot] = tok
+                continue
             logits, state1 = self._prefill_request(req)
             self._slot_states = self._splice(self._slot_states, state1,
                                              jnp.asarray(slot, jnp.int32))

@@ -13,6 +13,26 @@ longest matching snapshot and prefills only the remainder through
 system prefix hit each other even when neither is a full prefix of the
 other.
 
+Two storage backends:
+
+* **dense** (default, ``store=None``): each entry holds the decode-state
+  pytree by reference — snapshots that extend one another still occupy
+  independent buffers.
+* **paged** (``store=``:class:`repro.core.paged.PagedStateStore`): entries
+  hold *block tables* into the global physical pool. Snapshots along one
+  prompt's lineage physically share their whole-block prefix (refcounts,
+  copy-on-write), so N block-boundary snapshots of one long prompt cost
+  ~one prompt of KV instead of N. The LRU byte budget then charges each
+  entry only its **uniquely-owned** bytes (newly allocated blocks + dense
+  non-KV leaves) — charging full copies would evict shared-heavy entries
+  that cost almost nothing; ``bytes_shared`` exposes the savings. Evicting
+  an entry uncharges only the bytes that actually leave residency (blocks
+  kept alive by a descendant's reference transfer their charge to the
+  survivors), so the budget bounds resident pool bytes, not a stale
+  insert-time estimate. When the physical pool itself runs out of free
+  blocks, least-recently-used entries are evicted until the new snapshot
+  fits.
+
 Correctness notes:
 
 * Snapshots are position-exact even after compaction: each ``KVCache``
@@ -20,8 +40,8 @@ Correctness notes:
   the absolute next position, so continuing from a snapshot is
   indistinguishable from having decoded through it.
 * JAX arrays are immutable and the engine's donating dispatches never
-  donate a snapshot, so entries are shared by reference — a hit costs no
-  copy.
+  donate a snapshot, so dense entries are shared by reference and paged
+  entries gather fresh working copies — a hit never mutates the cache.
 * Lookup is longest-match: hashes of every cached length are probed from
   the longest candidate down, and the stored tokens are compared on a hash
   hit, so a digest collision can never splice the wrong state.
@@ -41,6 +61,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.paged import PagedStateStore, PoolExhausted
+
 
 def _digest(tokens: np.ndarray) -> bytes:
     return hashlib.sha1(
@@ -55,13 +77,15 @@ def tree_bytes(tree) -> int:
 @dataclasses.dataclass(eq=False)
 class PrefixEntry:
     """One cached prefix: the tokens it covers, the batch-1 decode state
-    snapshot positioned just past them, and the last-token logits (so an
-    exact-match request can sample its first token with zero compute)."""
+    snapshot positioned just past them (dense pytree *or* a paged-store
+    snapshot of block tables), and the last-token logits (so an exact-match
+    request can sample its first token with zero compute)."""
 
     tokens: np.ndarray          # [length] int32
-    state: Any                  # DecodeState, batch = 1, pos == length
+    state: Any                  # DecodeState (dense backend) or None (paged)
     logits: Any                 # [1, V] logits of tokens[-1]
-    nbytes: int
+    nbytes: int                 # uniquely-owned bytes (see module docstring)
+    snap: Any = None            # PagedSnapshot (paged backend) or None
 
     @property
     def length(self) -> int:
@@ -71,13 +95,16 @@ class PrefixEntry:
 class PrefixCache:
     """LRU map from token-prefix hashes to decode-state snapshots."""
 
-    def __init__(self, max_bytes: int = 256 << 20):
+    def __init__(self, max_bytes: int = 256 << 20,
+                 store: Optional[PagedStateStore] = None):
         if max_bytes < 1:
             raise ValueError("prefix cache needs a positive byte budget")
         self.max_bytes = int(max_bytes)
+        self.store = store
         self._entries: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
         self._len_count: dict = {}     # distinct entry lengths -> #entries
         self._nbytes = 0
+        self.peak_bytes = 0
         self.lookups = 0
         self.hits = 0
         self.insertions = 0
@@ -89,6 +116,11 @@ class PrefixCache:
     @property
     def nbytes(self) -> int:
         return self._nbytes
+
+    @property
+    def bytes_shared(self) -> int:
+        """Physical bytes deduplicated by block sharing (paged backend)."""
+        return self.store.bytes_shared if self.store is not None else 0
 
     @property
     def hit_rate(self) -> float:
@@ -112,31 +144,98 @@ class PrefixCache:
                 return entry
         return None
 
-    def insert(self, tokens, state, logits) -> bool:
-        """Snapshot ``state``/``logits`` under ``tokens``; returns False when
-        the entry alone exceeds the byte budget (and is not cached)."""
+    def restore(self, entry: PrefixEntry):
+        """(logits, decode state) of an entry; dense entries return their
+        stored pytree by reference, paged entries gather a fresh working
+        state through the block tables (the pool copy stays shared)."""
+        if entry.snap is not None:
+            return entry.logits, self.store.get(entry.snap)
+        return entry.logits, entry.state
+
+    def insert(self, tokens, state, logits,
+               parent: Optional[PrefixEntry] = None) -> Optional[PrefixEntry]:
+        """Snapshot ``state``/``logits`` under ``tokens``; returns the new
+        entry, or None when it cannot be cached (alone exceeds the byte
+        budget, or the paged pool cannot fit it even after evicting every
+        other entry). ``parent`` (paged backend) names the snapshot this
+        state extends — its whole-block prefix is shared, not copied."""
         tokens = np.array(tokens, np.int32).reshape(-1)
-        nbytes = tree_bytes(state) + tree_bytes(logits)
-        if nbytes > self.max_bytes:
-            return False
+        if self.store is not None:
+            entry = self._insert_paged(tokens, state, logits, parent)
+        else:
+            nbytes = tree_bytes(state) + tree_bytes(logits)
+            if nbytes > self.max_bytes:
+                return None
+            entry = PrefixEntry(tokens=tokens, state=state, logits=logits,
+                                nbytes=nbytes)
+        if entry is None:
+            return None
         h = _digest(tokens)
         old = self._entries.pop(h, None)
         if old is not None:
-            self._nbytes -= old.nbytes
-            self._drop_len(old.length)
-        entry = PrefixEntry(tokens=tokens, state=state, logits=logits,
-                            nbytes=nbytes)
+            self._drop_entry(old)
         self._entries[h] = entry
         self._len_count[entry.length] = self._len_count.get(entry.length,
                                                             0) + 1
-        self._nbytes += nbytes
+        self._nbytes += entry.nbytes
         self.insertions += 1
         while self._nbytes > self.max_bytes:
             _, evicted = self._entries.popitem(last=False)
-            self._nbytes -= evicted.nbytes
-            self._drop_len(evicted.length)
+            self._drop_entry(evicted)
             self.evictions += 1
+        # one basis for both backends: bytes the cache holds resident
+        # (paged: live blocks charged to entries + dense overhead; dense:
+        # full snapshot copies) — so peak_bytes is comparable across
+        # kv_backend settings (benchmarks/throughput.py paged_vs_dense)
+        self.peak_bytes = max(self.peak_bytes, self._nbytes)
+        return entry
+
+    def evict_lru(self) -> bool:
+        """Evict the least-recently-used entry (used for pool-pressure
+        relief as well as the byte budget); False when already empty."""
+        if not self._entries:
+            return False
+        _, evicted = self._entries.popitem(last=False)
+        self._drop_entry(evicted)
+        self.evictions += 1
         return True
+
+    def _insert_paged(self, tokens, state, logits, parent):
+        """Page ``state`` into the store, evicting LRU entries while the
+        free list cannot hold it. The put happens *before* any same-hash
+        replacement is disposed, so an entry may safely parent its own
+        replacement (the shared blocks are retained first)."""
+        while True:
+            try:
+                snap, owned = self.store.put(
+                    state, parent=None if parent is None else parent.snap)
+                break
+            except PoolExhausted:
+                if not self.evict_lru():
+                    return None
+        nbytes = owned + tree_bytes(logits)
+        if nbytes > self.max_bytes:
+            self.store.release(snap)
+            return None
+        return PrefixEntry(tokens=tokens, state=None, logits=logits,
+                           nbytes=nbytes, snap=snap)
+
+    def _drop_entry(self, entry: PrefixEntry) -> None:
+        if entry.snap is not None:
+            # uncharge only the bytes that actually left residency: pool
+            # blocks whose last reference this entry held, plus its dense
+            # overhead (non-KV leaves + logits). Blocks that survive in a
+            # descendant snapshot stay charged — ownership transfers to the
+            # survivors, so the byte budget keeps bounding resident KV even
+            # as ancestors of a snapshot lineage evict first (LRU order).
+            before = self.store.bytes_in_use
+            self.store.release(entry.snap)
+            freed = before - self.store.bytes_in_use
+            self._nbytes -= freed + entry.snap.dense_bytes \
+                + tree_bytes(entry.logits)
+        else:
+            self._nbytes -= entry.nbytes
+        self._drop_len(entry.length)
 
     def _drop_len(self, length: int) -> None:
         n = self._len_count.get(length, 0) - 1
@@ -146,6 +245,9 @@ class PrefixCache:
             self._len_count[length] = n
 
     def clear(self) -> None:
+        for entry in self._entries.values():
+            if entry.snap is not None:
+                self.store.release(entry.snap)
         self._entries.clear()
         self._len_count.clear()
         self._nbytes = 0

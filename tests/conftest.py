@@ -16,6 +16,10 @@ def pytest_configure(config):
         "markers",
         "timeout(seconds): soft per-test time budget (enforced only when "
         "pytest-timeout is installed)")
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test excluded from the CI fast lane "
+        "(-m 'not slow'); the full tier-1 job still runs it")
 
 
 @pytest.fixture(autouse=True, scope="module")

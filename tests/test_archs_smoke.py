@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # one jitted prefill+decode per assigned architecture
+
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig

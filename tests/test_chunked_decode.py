@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # chunk-vs-stepwise sweeps dominate suite wall time
+
 from repro.configs.base import LaCacheConfig, ModelConfig
 from repro.models import model as M
 

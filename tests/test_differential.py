@@ -13,7 +13,15 @@ agree:
     ``generate`` token-for-token — both without compaction (batch 3) and
     with compaction firing (single request, prompt > budget; batch 1 keeps
     the batch-uniform score accumulation of score-based policies
-    identical between the two paths).
+    identical between the two paths). Both request-mode tests iterate
+    ``kv_backend`` as well: the paged backend must not perturb the base
+    decode path,
+(c) the *paged* KV backend matches the *dense* backend token-for-token
+    when requests actually exercise the paged machinery (shared-prefix
+    prompt caching: snapshots page into the block pool and gather back on
+    every hit) — with and without compaction firing, for every policy.
+    This is the gather/scatter/CoW exactness contract of
+    ``repro.core.paged`` at the serving level.
 """
 import dataclasses
 
@@ -28,6 +36,7 @@ from repro.serving.engine import Engine
 
 # snapshot at collection: the harness must cover every registered policy
 POLICIES = policy_names()
+BACKENDS = ("dense", "paged")
 
 
 @pytest.fixture(scope="module")
@@ -74,14 +83,16 @@ def test_chunked_scoring_overflow_finite(policy, small_model):
     assert np.isfinite(nc).all()
 
 
+@pytest.mark.parametrize("kv_backend", BACKENDS)
 @pytest.mark.parametrize("policy", POLICIES)
-def test_request_mode_matches_lockstep(policy, small_model):
-    """(b) uniform batch of 3 requests == lockstep generate, per policy."""
+def test_request_mode_matches_lockstep(policy, kv_backend, small_model):
+    """(b) uniform batch of 3 requests == lockstep generate, per policy and
+    per KV backend (the backend must not perturb the base decode path)."""
     cfg, params = small_model
     c = with_policy(cfg, policy, 48)
     prompts = np.random.default_rng(2).integers(0, cfg.vocab_size, (3, 20))
     ref = Engine(c, params, budget=48).generate(prompts, 8)
-    eng = Engine(c, params, budget=48, max_batch=4)
+    eng = Engine(c, params, budget=48, max_batch=4, kv_backend=kv_backend)
     reqs = [eng.submit(prompts[i], 8) for i in range(3)]
     done = eng.run()
     assert [r.request_id for r in done] == [r.request_id for r in reqs]
@@ -89,8 +100,11 @@ def test_request_mode_matches_lockstep(policy, small_model):
         np.testing.assert_array_equal(r.tokens, ref[i])
 
 
+@pytest.mark.slow   # compaction fires every few tokens: heaviest sweep here
+@pytest.mark.parametrize("kv_backend", BACKENDS)
 @pytest.mark.parametrize("policy", POLICIES)
-def test_request_mode_matches_lockstep_with_compaction(policy, small_model):
+def test_request_mode_matches_lockstep_with_compaction(policy, kv_backend,
+                                                       small_model):
     """(b') prompt + new tokens overflow the budget, so prefill compaction
     and in-decode compaction both fire; a single request against a batch-1
     lockstep reference must still match token-for-token."""
@@ -100,7 +114,62 @@ def test_request_mode_matches_lockstep_with_compaction(policy, small_model):
     n_slots = 80 if policy == "full" else budget   # full never evicts
     prompt = np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 44))
     ref = Engine(c, params, budget=n_slots).generate(prompt, 6)
-    eng = Engine(c, params, budget=n_slots, max_batch=2)
+    eng = Engine(c, params, budget=n_slots, max_batch=2,
+                 kv_backend=kv_backend)
     req = eng.submit(prompt[0], 6)
     eng.run()
     np.testing.assert_array_equal(req.tokens, ref[0])
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_backend_matches_dense_prefix_sharing(policy, small_model):
+    """(c) shared-prefix traffic through the prompt cache: every snapshot
+    pages into the block pool (structural sharing) and every hit gathers a
+    working state back — dense and paged backends must agree
+    token-for-token under every policy."""
+    cfg, params = small_model
+    c = with_policy(cfg, policy, 48)
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab_size, (20,))
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, (4 + i,))])
+               for i in range(3)]
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=48, max_batch=2,
+                     kv_backend=kv_backend)
+        reqs = [eng.submit(p, 6, cache_prefix=True) for p in prompts]
+        eng.run()
+        return eng, reqs
+
+    _, dense_reqs = serve("dense")
+    paged_eng, paged_reqs = serve("paged")
+    for d, p in zip(dense_reqs, paged_reqs):
+        np.testing.assert_array_equal(p.tokens, d.tokens)
+    assert paged_eng.bytes_shared > 0     # the paged path actually engaged
+
+
+@pytest.mark.slow   # over-budget prompts: chunked prefill compacts per chunk
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_backend_matches_dense_with_compaction(policy, small_model):
+    """(c') prompts longer than the budget: snapshots are taken of
+    *compacted* states (pos reordering disables block sharing instead of
+    corrupting it) — backends must still agree token-for-token."""
+    cfg, params = small_model
+    budget = 32
+    c = with_policy(cfg, policy, budget)
+    n_slots = 96 if policy == "full" else budget   # full never evicts
+    rng = np.random.default_rng(5)
+    pre = rng.integers(0, cfg.vocab_size, (40,))
+    prompts = [np.concatenate([pre, rng.integers(0, cfg.vocab_size, (6,))])
+               for _ in range(2)]
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=n_slots, max_batch=2,
+                     kv_backend=kv_backend)
+        reqs = [eng.submit(p, 5, cache_prefix=True) for p in prompts]
+        eng.run()
+        return [r.tokens for r in reqs]
+
+    for d, p in zip(serve("dense"), serve("paged")):
+        np.testing.assert_array_equal(p, d)

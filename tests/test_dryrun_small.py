@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 8-device host mesh
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 SCRIPT = r"""

@@ -1,0 +1,425 @@
+"""Paged KV memory subsystem: allocator, CoW, kernel, store, engine, preempt.
+
+Four layers of coverage, bottom-up:
+
+* **allocator** — refcount / free-list invariants under random churn
+  (hypothesis property test; skips cleanly without hypothesis),
+* **dense-API shims** — gather/from_dense roundtrip, CoW isolation between
+  two tables sharing a prefix, truncate block release, and ``compact``
+  parity against the dense ladder compaction for every registered policy,
+* **kernel** — the Pallas paged-decode kernel (interpret mode), the
+  pure-JAX paged reference and the dense decode kernel agree to <= 1e-5,
+* **serving** — the acceptance criteria: two requests with a shared prefix
+  physically share blocks (refcounts > 1, ``bytes_shared`` > 0) while
+  matching the dense backend token-for-token, unique-bytes LRU accounting,
+  and a preempted RUNNING request resuming with identical continuation
+  tokens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.core import cache as cachelib
+from repro.core import ladder, paged
+from repro.core.policy import policy_names
+from repro.kernels import decode_attention as dense_kernel
+from repro.kernels import ops as kops
+from repro.kernels import paged_attention as paged_kernel
+from repro.kernels import ref as kref
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+KVH, HD = 2, 8
+
+
+def rand_cache(rng, n_slots, length, with_scores=False):
+    pos = np.full((n_slots,), -1, np.int32)
+    pos[:length] = np.arange(length)
+    return cachelib.KVCache(
+        k=jnp.asarray(rng.normal(size=(1, n_slots, KVH, HD)), jnp.float32),
+        v=jnp.asarray(rng.normal(size=(1, n_slots, KVH, HD)), jnp.float32),
+        pos=jnp.asarray(pos),
+        length=jnp.asarray(length, jnp.int32),
+        scores=jnp.asarray(rng.random(n_slots), jnp.float32)
+        if with_scores else None)
+
+
+# --------------------------------------------------------------------------- #
+# Dense-API shims: roundtrip, CoW, truncate, compact parity
+# --------------------------------------------------------------------------- #
+def test_from_dense_gather_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    pool = paged.init_pool(16, 4, KVH, HD, jnp.float32)
+    c = rand_cache(rng, 10, 7, with_scores=True)
+    pool, t = paged.from_dense(pool, c)
+    paged.check_invariants(pool)
+    # only blocks covering the occupied prefix are mapped
+    assert np.asarray(t.blocks >= 0).sum() == 2
+    g = paged.gather(pool, t)
+    np.testing.assert_array_equal(np.asarray(g.k[0, :7]),
+                                  np.asarray(c.k[0, :7]))
+    np.testing.assert_array_equal(np.asarray(g.v[0, :7]),
+                                  np.asarray(c.v[0, :7]))
+    np.testing.assert_array_equal(np.asarray(g.pos), np.asarray(c.pos))
+    np.testing.assert_array_equal(np.asarray(g.scores), np.asarray(c.scores))
+    assert int(g.length) == 7
+
+
+def test_copy_on_write_isolates_forked_tables():
+    """Acceptance: a fork shares every block; appending through one table
+    CoWs the straddled shared block and never perturbs the other."""
+    rng = np.random.default_rng(1)
+    pool = paged.init_pool(16, 4, KVH, HD, jnp.float32)
+    c = rand_cache(rng, 12, 7)
+    pool, ta = paged.from_dense(pool, c)
+    pool, tb = paged.fork(pool, ta)
+    assert paged.bytes_shared(pool) == 2 * pool.block_bytes
+    kn = jnp.asarray(rng.normal(size=(1, 3, KVH, HD)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(1, 3, KVH, HD)), jnp.float32)
+    pool, tb = paged.append(pool, tb, kn, vn, jnp.arange(7, 10))
+    paged.check_invariants(pool)
+    ga, gb = paged.gather(pool, ta), paged.gather(pool, tb)
+    np.testing.assert_array_equal(np.asarray(ga.k[0, :7]),
+                                  np.asarray(c.k[0, :7]))   # A untouched
+    np.testing.assert_array_equal(np.asarray(gb.k[0, 7:10]), np.asarray(kn[0]))
+    np.testing.assert_array_equal(np.asarray(gb.k[0, :7]),
+                                  np.asarray(c.k[0, :7]))   # B kept prefix
+    # the fully-shared first block stays shared; the straddled one was CoW'd
+    assert int(np.asarray(ta.blocks)[0]) == int(np.asarray(tb.blocks)[0])
+    assert int(np.asarray(ta.blocks)[1]) != int(np.asarray(tb.blocks)[1])
+    pool = paged.release(pool, ta)
+    pool = paged.release(pool, tb)
+    paged.check_invariants(pool)
+    assert paged.blocks_in_use(pool) == 0
+
+
+def test_truncate_releases_dead_blocks():
+    rng = np.random.default_rng(2)
+    pool = paged.init_pool(16, 4, KVH, HD, jnp.float32)
+    pool, t = paged.from_dense(pool, rand_cache(rng, 12, 11))
+    assert paged.blocks_in_use(pool) == 3
+    pool, t = paged.truncate(pool, t, 5)
+    paged.check_invariants(pool)
+    assert paged.blocks_in_use(pool) == 2   # block covering slots 8..11 freed
+    assert int(t.length) == 5
+    assert (np.asarray(t.pos)[5:] == -1).all()
+
+
+@pytest.mark.parametrize("policy", policy_names())
+def test_compact_parity_with_dense(policy):
+    """paged.compact == dense cachelib.compact through the block table, for
+    every registered eviction policy (scores ride in the table)."""
+    from repro.core.policy import get_policy
+    if not get_policy(policy).evicts:
+        pytest.skip("non-evicting policy never compacts")
+    rng = np.random.default_rng(3)
+    lspec = ladder.make_spec(
+        LaCacheConfig(budget=16, n_sink=2, n_recent=4, chunk=2).resolve(4), 4)
+    needs_scores = get_policy(policy).needs_scores
+    c = rand_cache(rng, 16, 16, with_scores=needs_scores)
+    pool = paged.init_pool(32, 4, KVH, HD, jnp.float32)
+    pool, t = paged.from_dense(pool, c)
+    ref = cachelib.compact(c, lspec, 1, policy)
+    pool, t2 = paged.compact(pool, t, lspec, 1, policy)
+    paged.check_invariants(pool)
+    g = paged.gather(pool, t2)
+    L = int(ref.length)
+    assert int(g.length) == L
+    np.testing.assert_array_equal(np.asarray(g.k[0, :L]),
+                                  np.asarray(ref.k[0, :L]))
+    np.testing.assert_array_equal(np.asarray(g.pos), np.asarray(ref.pos))
+    if needs_scores:
+        np.testing.assert_array_equal(np.asarray(g.scores),
+                                      np.asarray(ref.scores))
+
+
+def test_pool_exhaustion_raises_eagerly():
+    rng = np.random.default_rng(4)
+    pool = paged.init_pool(2, 4, KVH, HD, jnp.float32)
+    with pytest.raises(paged.PoolExhausted):
+        paged.from_dense(pool, rand_cache(rng, 16, 12))
+
+
+# --------------------------------------------------------------------------- #
+# Allocator invariants under churn (hypothesis)
+# --------------------------------------------------------------------------- #
+def test_allocator_invariants_random_churn():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(st.sampled_from(["new", "fork", "append", "release",
+                                    "truncate", "compact"]),
+                   st.integers(0, 15), st.integers(1, 12))
+
+    lspec = ladder.make_spec(
+        LaCacheConfig(budget=12, n_sink=1, n_recent=3, chunk=2).resolve(3), 3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(op, min_size=1, max_size=20))
+    def run(ops):
+        rng = np.random.default_rng(5)
+        pool = paged.init_pool(24, 4, KVH, HD, jnp.float32)
+        tables = []
+        for name, sel, arg in ops:
+            try:
+                if name == "new":
+                    pool, t = paged.from_dense(pool, rand_cache(rng, 12, arg))
+                    tables.append(t)
+                elif tables:
+                    i = sel % len(tables)
+                    if name == "fork":
+                        pool, t = paged.fork(pool, tables[i])
+                        tables.append(t)
+                    elif name == "append":
+                        t = tables[i]
+                        room = 12 - int(t.length)
+                        n = min(arg, room)
+                        if n > 0:
+                            kn = jnp.asarray(
+                                rng.normal(size=(1, n, KVH, HD)), jnp.float32)
+                            pool, tables[i] = paged.append(
+                                pool, t, kn, kn,
+                                jnp.arange(int(t.length),
+                                           int(t.length) + n))
+                    elif name == "release":
+                        pool = paged.release(pool, tables.pop(i))
+                    elif name == "truncate":
+                        pool, tables[i] = paged.truncate(
+                            pool, tables[i], arg)
+                    elif name == "compact":
+                        pool, tables[i] = paged.compact(
+                            pool, tables[i], lspec, 0, "lacache")
+            except paged.PoolExhausted:
+                pass   # legal outcome; pool must still be consistent
+            paged.check_invariants(pool)
+        for t in tables:
+            pool = paged.release(pool, t)
+        paged.check_invariants(pool)
+        assert paged.blocks_in_use(pool) == 0
+
+    run()
+
+
+# --------------------------------------------------------------------------- #
+# Kernel: Pallas paged decode vs paged reference vs dense decode
+# --------------------------------------------------------------------------- #
+def _paged_layout(rng, b, n_slots, bs, kvh, d, lengths):
+    """Scatter per-sequence dense KV rows into a shuffled physical pool."""
+    mb = n_slots // bs
+    kd = jnp.asarray(rng.normal(size=(b, n_slots, kvh, d)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(b, n_slots, kvh, d)), jnp.float32)
+    n_blocks = b * mb + 3
+    pool_k = jnp.zeros((n_blocks, bs, kvh, d), jnp.float32)
+    pool_v = jnp.zeros((n_blocks, bs, kvh, d), jnp.float32)
+    perm = rng.permutation(n_blocks)
+    tables = np.full((b, mb), -1, np.int32)
+    pi = 0
+    for bi in range(b):
+        for j in range(-(-int(lengths[bi]) // bs)):
+            pid = int(perm[pi]); pi += 1
+            tables[bi, j] = pid
+            pool_k = pool_k.at[pid].set(kd[bi, j * bs:(j + 1) * bs])
+            pool_v = pool_v.at[pid].set(vd[bi, j * bs:(j + 1) * bs])
+    return kd, vd, pool_k, pool_v, jnp.asarray(tables)
+
+
+def test_paged_kernel_matches_reference_and_dense():
+    """Acceptance: Pallas paged decode (interpret), the pure-JAX paged
+    reference and the dense decode kernel agree to <= 1e-5."""
+    rng = np.random.default_rng(6)
+    b, h, kvh, d, bs, n_slots = 3, 4, 2, 16, 8, 32
+    lengths = jnp.asarray([32, 13, 27], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    kd, vd, pk, pv, tables = _paged_layout(rng, b, n_slots, bs, kvh, d,
+                                           lengths)
+    ref = kref.paged_decode_attention_reference(q, pk, pv, tables, lengths)
+    pal = paged_kernel.paged_decode_attention(q, pk, pv, tables, lengths,
+                                              interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # per-sequence, the paged output equals the dense kernel on the same KV
+    for bi in range(b):
+        dense = dense_kernel.decode_attention(
+            q[bi:bi + 1], kd[bi:bi + 1], vd[bi:bi + 1], lengths[bi],
+            interpret=True)
+        np.testing.assert_allclose(np.asarray(pal[bi:bi + 1]),
+                                   np.asarray(dense), atol=1e-5, rtol=1e-5)
+        dref = kref.decode_attention_reference(
+            q[bi:bi + 1], kd[bi:bi + 1], vd[bi:bi + 1], lengths[bi])
+        np.testing.assert_allclose(np.asarray(pal[bi:bi + 1]),
+                                   np.asarray(dref), atol=1e-5, rtol=1e-5)
+
+
+def test_paged_kernel_dispatch_and_gqa():
+    """ops dispatcher: xla path == pallas path; MQA-style grouping works."""
+    rng = np.random.default_rng(7)
+    b, h, kvh, d, bs, n_slots = 2, 8, 1, 8, 4, 16
+    lengths = jnp.asarray([9, 16], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    _, _, pk, pv, tables = _paged_layout(rng, b, n_slots, bs, kvh, d, lengths)
+    a = kops.paged_decode_attention(q, pk, pv, tables, lengths, impl="xla")
+    p = kops.paged_decode_attention(q, pk, pv, tables, lengths, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p),
+                               atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# Serving: store + engine acceptance
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=48, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_store_roundtrip_and_lineage_sharing(small_model):
+    """DecodeState pages in and gathers back bit-exactly (identical next
+    logits); a child snapshot extending a parent shares whole blocks."""
+    cfg, params = small_model
+    toks = jnp.asarray(
+        np.random.default_rng(8).integers(0, cfg.vocab_size, (1, 20)))
+    _, state = M.prefill(params, cfg, toks, n_slots=48)
+    store = paged.PagedStateStore(64, 16, cfg.n_kv_heads, cfg.head_dim_,
+                                  jnp.float32)
+    snap, owned = store.put(state)
+    assert owned > 0 and store.bytes_shared == 0
+    t = jnp.asarray([[5]])
+    a, _ = M.decode_step(params, cfg, state, t)
+    b, _ = M.decode_step(params, cfg, store.get(snap), t)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    more = jnp.asarray(
+        np.random.default_rng(9).integers(0, cfg.vocab_size, (1, 8)))
+    _, state2 = M.decode_chunk(params, cfg, state, more)
+    snap2, owned2 = store.put(state2, parent=snap)
+    assert store.bytes_shared > 0
+    assert (store.snapshot_refcounts(snap2) > 1).any()
+    assert owned2 < owned          # the shared block prefix was not re-paid
+    c, _ = M.decode_step(params, cfg, state2, t)
+    d, _ = M.decode_step(params, cfg, store.get(snap2), t)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+    store.release(snap)
+    store.release(snap2)
+    paged.check_invariants(store.pool)
+    assert store.bytes_in_use == 0
+
+
+def test_engine_shared_prefix_blocks_and_accounting(small_model):
+    """Acceptance: two paged requests with a shared prefix physically share
+    blocks (refcounts > 1, bytes_shared > 0), match the dense backend
+    token-for-token, and the LRU budget charges only unique bytes."""
+    cfg, params = small_model
+    rng = np.random.default_rng(10)
+    shared = rng.integers(0, cfg.vocab_size, (24,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, (6,))])
+               for _ in range(2)]
+
+    def serve(backend):
+        eng = Engine(cfg, params, budget=48, max_batch=2, kv_backend=backend)
+        reqs = [eng.submit(p, 5, cache_prefix=True) for p in prompts]
+        eng.run()
+        return eng, reqs
+
+    dense_eng, dense_reqs = serve("dense")
+    paged_eng, paged_reqs = serve("paged")
+    for a, b in zip(dense_reqs, paged_reqs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert paged_eng.bytes_shared > 0
+    assert (np.asarray(paged_eng.kv_store.pool.ref) > 1).any()
+    assert dense_eng.bytes_shared == 0
+    # unique-bytes accounting: the paged budget charge must be well below
+    # the dense full-copy charge for the same snapshot set
+    assert paged_eng.prefix_cache.nbytes < dense_eng.prefix_cache.nbytes
+    assert paged_eng.prefix_cache.peak_bytes <= dense_eng.prefix_cache.peak_bytes
+    paged.check_invariants(paged_eng.kv_store.pool)
+
+
+def test_paged_accounting_tracks_residency_under_eviction(small_model):
+    """Evicting an ancestor snapshot must not uncharge blocks a descendant
+    still holds: the cache's nbytes tracks resident pool bytes plus dense
+    overhead exactly, through any eviction order (ownership transfers to
+    survivors instead of vanishing)."""
+    from repro.serving.prefix import tree_bytes
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged")
+    prompt = np.random.default_rng(13).integers(0, cfg.vocab_size, (40,))
+    eng.submit(prompt, 2, cache_prefix=True)   # snapshots at 16, 32, 40
+    eng.run()
+    pc, store = eng.prefix_cache, eng.kv_store
+    assert len(pc) == 3
+
+    def attributable():
+        return store.bytes_in_use + sum(
+            e.snap.dense_bytes + tree_bytes(e.logits)
+            for e in pc._entries.values())
+
+    assert pc.nbytes == attributable()
+    while len(pc) > 0:           # LRU evicts the shared ancestors first
+        assert pc.evict_lru()
+        assert pc.nbytes == attributable()
+        paged.check_invariants(store.pool)
+    assert pc.nbytes == 0 and store.bytes_in_use == 0
+
+
+def test_preemption_resumes_exactly(small_model):
+    """Acceptance: a RUNNING request preempted under deadline pressure
+    resumes with continuation tokens identical to an uninterrupted run."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    pa, pb = rng.integers(0, cfg.vocab_size, (20,)), \
+        rng.integers(0, cfg.vocab_size, (12,))
+
+    ref = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    ra = ref.submit(pa, 10, deadline=10.0)
+    ref.run()
+
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    a = eng.submit(pa, 10, deadline=10.0)
+    for _ in range(4):
+        eng.step()
+    n_before = len(a.output_tokens)
+    assert a.status == "running" and 0 < n_before < 10
+    b = eng.submit(pb, 3, deadline=1.0)     # earlier deadline -> preempts A
+    eng.step()
+    assert a.status == "pending" and b.status == "running"
+    assert eng.preemptions == 1
+    eng.run()
+    np.testing.assert_array_equal(a.tokens, ra.tokens)
+    assert b.status == "finished" and len(b.output_tokens) == 3
+    paged.check_invariants(eng.kv_store.pool)
+
+
+def test_fifo_never_preempts_and_dense_preempt_rejected(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(12)
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged")
+    eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 6)
+    eng.step()
+    eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2)
+    eng.step()
+    assert eng.preemptions == 0             # FIFO: incumbents always win
+    eng.run()
+
+    dense = Engine(cfg, params, budget=48, max_batch=1)
+    dense.submit(rng.integers(0, cfg.vocab_size, (8,)), 4)
+    dense.step()
+    with pytest.raises(RuntimeError, match="paged"):
+        dense.preempt(0)
+    dense.run()
+
+
+def test_bad_backend_rejected(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="kv_backend"):
+        Engine(cfg, params, budget=48, kv_backend="virtual")

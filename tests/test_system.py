@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end train/decode equivalence
+
 from repro.configs.base import LaCacheConfig, ModelConfig
 from repro.data.pipeline import CorpusConfig, SyntheticCorpus, lm_batches, needle_episode
 from repro.models import model as M
