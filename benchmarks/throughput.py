@@ -73,40 +73,64 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
                    tail_len=16, max_new=8):
     """Shared-prefix traffic served by the dense vs the paged KV backend.
 
-    Same requests, same prompt cache semantics; the paged backend stores
-    block tables into one physical pool with copy-on-write sharing, so the
-    peak cached-KV footprint should collapse (every snapshot along one
-    prompt's lineage re-pays only its tail blocks) while tokens stay
-    identical. Reports tokens/s (wall, incl. compile on first run) and the
-    peak cached KV bytes of each backend plus the paged sharing telemetry.
+    Same requests, same prompt cache semantics; the paged backend decodes
+    *in-model* through block tables in one physical pool — prefix hits
+    splice shared blocks into the live state, snapshots are refcount forks
+    — so the peak cached-KV footprint collapses while tokens stay
+    identical. Each backend serves the mix twice with a fresh engine: the
+    first pass pays jit compilation, the second measures the steady-state
+    serving rate (the regression-tracked number — PR 3's paged backend
+    lost 3x wall-clock to eager per-snapshot pool scatters that in-model
+    decode eliminates). Machine-readable trajectory in
+    ``results/BENCH_paged.json``.
     """
     c = common.with_policy(cfg, "lacache", budget)
     co = common.corpus()
     shared = co.stream(prefix_len, seed=910)
-    prompts = [np.concatenate([shared, co.stream(tail_len, seed=911 + i)])
-               for i in range(n_requests)]
+
+    def wave(seed0):
+        return [np.concatenate([shared, co.stream(tail_len,
+                                                  seed=seed0 + i)])
+                for i in range(n_requests)]
 
     def serve(kv_backend):
         eng = Engine(c, params, budget=budget, max_batch=4,
                      kv_backend=kv_backend)
-        for p in prompts:
+        # wave 1 (cold): pays jit compilation and builds the shared-prefix
+        # cache — the one-time cost of bringing a serving process up
+        for p in wave(911):
             eng.submit(p, max_new, cache_prefix=True)
+        t0 = time.perf_counter()
+        done = eng.run()
+        cold = sum(len(r.output_tokens) for r in done) \
+            / (time.perf_counter() - t0)
+        # wave 2 (steady state): fresh requests over the warm engine — the
+        # continuous-serving regime the fixed-budget cache targets (prefix
+        # hits splice the cached system prompt, tails prefill, decode runs
+        # through the per-backend hot path). Generation runs 4x longer
+        # than wave 1 so the decode loop dominates the window — a few
+        # dozen tokens is pure scheduler noise on a shared CPU.
+        for p in wave(931):
+            eng.submit(p, 4 * max_new, cache_prefix=True)
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0
         n_tok = sum(len(r.output_tokens) for r in done)
-        return eng, [r.tokens.tolist() for r in done], n_tok / dt
+        return eng, [r.tokens.tolist() for r in done], cold, n_tok / dt
 
-    dense_eng, dense_toks, dense_tps = serve("dense")
-    paged_eng, paged_toks, paged_tps = serve("paged")
+    dense_eng, dense_toks, dense_cold, dense_tps = serve("dense")
+    paged_eng, paged_toks, paged_cold, paged_tps = serve("paged")
     assert dense_toks == paged_toks, "backends must agree token-for-token"
     return {
         "n_requests": n_requests, "prefix_len": prefix_len,
         "tok_per_s_dense": dense_tps, "tok_per_s_paged": paged_tps,
+        "tok_per_s_dense_incl_compile": dense_cold,
+        "tok_per_s_paged_incl_compile": paged_cold,
         "peak_kv_bytes_dense": dense_eng.prefix_cache.peak_bytes,
         "peak_kv_bytes_paged": paged_eng.prefix_cache.peak_bytes,
         "bytes_shared": paged_eng.bytes_shared,
         "kv_bytes_in_use": paged_eng.kv_bytes_in_use,
+        "paged_in_model": paged_eng._paged_in_model,
     }
 
 
@@ -142,7 +166,28 @@ def main(quick: bool = False):
           f"{pd['peak_kv_bytes_paged']/1e6:.2f} MB "
           f"({pd['bytes_shared']/1e6:.2f} MB shared); "
           f"{pd['tok_per_s_dense']:.1f} -> {pd['tok_per_s_paged']:.1f} tok/s "
-          f"incl. compile")
+          f"steady-state ({pd['tok_per_s_dense_incl_compile']:.1f} -> "
+          f"{pd['tok_per_s_paged_incl_compile']:.1f} incl. compile)")
+    # machine-readable perf trajectory: tok/s + peak KV bytes per backend,
+    # so paged regressions are tracked across PRs instead of rediscovered
+    with open(os.path.join(common.RESULTS, "BENCH_paged.json"), "w") as f:
+        json.dump({
+            "scenario": "paged_vs_dense",
+            "paged_in_model": pd["paged_in_model"],
+            "tok_per_s": {"dense": pd["tok_per_s_dense"],
+                          "paged": pd["tok_per_s_paged"]},
+            "tok_per_s_incl_compile": {
+                "dense": pd["tok_per_s_dense_incl_compile"],
+                "paged": pd["tok_per_s_paged_incl_compile"]},
+            "peak_kv_bytes": {"dense": pd["peak_kv_bytes_dense"],
+                              "paged": pd["peak_kv_bytes_paged"]},
+            "paged_over_dense_tok_per_s":
+                pd["tok_per_s_paged"] / max(pd["tok_per_s_dense"], 1e-9),
+            "paged_over_dense_peak_kv":
+                pd["peak_kv_bytes_paged"]
+                / max(pd["peak_kv_bytes_dense"], 1),
+            "bytes_shared": pd["bytes_shared"],
+        }, f, indent=1)
     print(f"{'prefix-reuse':10s} {pr['prefill_tokens_cold']:5d} -> "
           f"{pr['prefill_tokens_warm']:5d} prefill tokens "
           f"(hit rate {pr['prefix_hit_rate']:.2f}, "

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as cachelib
+from repro.core import ladder
 from repro.core.cache import KVCache
 from repro.core.ladder import LadderSpec
 from repro.core.policy import PolicyLike, get_policy
@@ -135,7 +136,9 @@ def _concrete(x) -> bool:
 
 def _push_free(pool: PagedPool, freed_mask: jnp.ndarray) -> PagedPool:
     """Push every block flagged in ``freed_mask`` onto the free stack."""
-    nb = pool.n_blocks
+    # sized off the refcount array, not the planes: the in-model engine may
+    # have detached the pool's K/V planes (see PagedStateStore.detach_planes)
+    nb = pool.ref.shape[0]
     n_freed = freed_mask.sum().astype(jnp.int32)
     # freed ids ascending, padded with the OOB sentinel nb
     freed_sorted = jnp.sort(jnp.where(freed_mask, jnp.arange(nb), nb))
@@ -149,7 +152,7 @@ def _push_free(pool: PagedPool, freed_mask: jnp.ndarray) -> PagedPool:
 def _decref(pool: PagedPool, ids: jnp.ndarray) -> PagedPool:
     """Drop one reference per id (-1 entries are skipped); blocks reaching
     refcount 0 return to the free list."""
-    nb = pool.n_blocks
+    nb = pool.ref.shape[0]
     valid = ids >= 0
     idc = jnp.where(valid, ids, 0)
     dec = jnp.zeros((nb,), jnp.int32).at[idc].add(valid.astype(jnp.int32))
@@ -160,7 +163,7 @@ def _decref(pool: PagedPool, ids: jnp.ndarray) -> PagedPool:
 
 
 def _incref(pool: PagedPool, ids: jnp.ndarray) -> PagedPool:
-    nb = pool.n_blocks
+    nb = pool.ref.shape[0]
     valid = ids >= 0
     idc = jnp.where(valid, ids, 0)
     inc = jnp.zeros((nb,), jnp.int32).at[idc].add(valid.astype(jnp.int32))
@@ -417,8 +420,298 @@ def check_invariants(pool: PagedPool) -> None:
     assert (ref >= 0).all(), "negative refcount"
     assert len(np.unique(free)) == n_free, "duplicate ids on the free stack"
     assert (ref[free] == 0).all(), "free-stack block with live references"
-    assert int((ref > 0).sum()) + n_free == pool.n_blocks, \
+    assert int((ref > 0).sum()) + n_free == ref.shape[0], \
         "leaked block: neither referenced nor on the free stack"
+
+
+# =========================================================================== #
+# In-model paged decode: traced table ops over the pool's K/V planes
+# =========================================================================== #
+# The serving-layer shims above run eagerly (refcount bookkeeping, free-list
+# pops, PoolExhausted). The decode hot loop cannot afford any of that: it is
+# one jitted step, so every op below is a *pure traced function* over
+#
+#   * :class:`PoolKV`       — just the pool's K/V planes (refcounts and the
+#     free list stay host-side in :class:`PagedStateStore`, the allocator),
+#   * :class:`PagedKVCache` — one attention layer's *batched* per-lane block
+#     tables plus the dense-cache metadata (per-lane ``pos``/``length``/
+#     ``scores``).
+#
+# Allocation is pre-staged: each engine lane owns a fixed set of ``owned``
+# physical blocks (reserved host-side, refcount 1, for the lane's lifetime).
+# A table entry is writable iff ``blocks[i] == owned[i]``; entries spliced
+# from a prefix snapshot (or handed over by preemption) fail the test and are
+# **copy-on-write redirected** to the lane's reserved block on first write —
+# all inside the trace, with zero free-list traffic. Compaction rewrites the
+# block table and applies the cache-relative RoPE slot-delta fixup through
+# pool-row gather/scatter (never materializing a dense working copy), gated
+# behind ``lax.cond(any(need))`` so steps without overflow pay nothing.
+class PoolKV(NamedTuple):
+    """The pool's traced K/V planes (allocator state stays host-side)."""
+
+    k: jnp.ndarray        # [n_blocks, block_size, kv_heads, head_dim]
+    v: jnp.ndarray
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[1]
+
+
+class PagedKVCache(NamedTuple):
+    """Batched in-model paged layer cache: per-lane tables + metadata.
+
+    Leaves carry a leading lane axis (and optionally a stacked-layer axis in
+    front of it, for the lax.scan over periods): ``blocks``/``owned``
+    ``[..., b, max_blocks]``, ``pos``/``scores`` ``[..., b, n_slots]``,
+    ``length`` ``[..., b]``. ``owned`` never changes inside the trace — it
+    is the lane's reserved CoW destination set, managed by the engine.
+    """
+
+    blocks: jnp.ndarray               # [..., b, max_blocks] int32, -1 unmapped
+    owned: jnp.ndarray                # [..., b, max_blocks] int32 reserved ids
+    pos: jnp.ndarray                  # [..., b, n_slots] int32, -1 empty
+    length: jnp.ndarray               # [..., b] int32 occupied prefix
+    scores: Optional[jnp.ndarray] = None   # [..., b, n_slots] float32
+
+    @property
+    def n_slots(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.blocks.shape[-1]
+
+
+def _flat_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """[n_blocks, bs, ...] -> [n_blocks * bs, ...] row-addressable view."""
+    return x.reshape((-1,) + x.shape[2:])
+
+
+def paged_gather_view(kv: PoolKV, st: PagedKVCache, n_slots: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Logical [b, n_slots, kv, hd] K/V view through the tables (traced).
+
+    Unmapped slots read block 0 garbage — callers mask by ``length``."""
+    bs = kv.block_size
+    n_slots = n_slots if n_slots is not None else st.n_slots
+    slot = jnp.arange(n_slots)
+    blk = jnp.take(st.blocks, slot // bs, axis=-1)          # [b, n_slots]
+    row = jnp.clip(blk, 0) * bs + slot % bs
+    return _flat_rows(kv.k)[row], _flat_rows(kv.v)[row]
+
+
+def paged_append(kv: PoolKV, st: PagedKVCache, k_new: jnp.ndarray,
+                 v_new: jnp.ndarray, pos_new: jnp.ndarray
+                 ) -> Tuple[PoolKV, PagedKVCache]:
+    """Append ``T`` tokens per lane at each lane's occupied prefix end.
+
+    k_new/v_new: [b, T, kv, hd]; pos_new: [b, T] int32. Mirrors
+    :func:`repro.core.cache.append` lane-wise: the caller (maybe-compact)
+    guarantees ``length + T <= n_slots``. Blocks touched by the append are
+    redirected to the lane's ``owned`` reserved blocks; a shared straddled
+    first block gets its live prefix rows copied (copy-on-write) before the
+    new rows land. All scatters hit lane-owned blocks only, so concurrent
+    lanes never collide.
+    """
+    b, t = pos_new.shape
+    bs = kv.block_size
+    mb = st.max_blocks
+    nrows = kv.k.shape[0] * bs                       # OOB scatter sentinel
+    L = st.length                                    # [b]
+    # the dense twin's dynamic_update_slice clamps its start so the write
+    # fits the buffer (an overflowing append — a never-evicting policy at
+    # capacity, or a retired lane still ticking — overwrites the newest
+    # slots instead of escaping). Mirror that clamp exactly: it keeps the
+    # two backends token-for-token equal in the degenerate regime, and the
+    # copy-on-write redirect below keeps the clamped write safe — it can
+    # only ever land in the lane's own reserved blocks, never in a block a
+    # prefix snapshot shares.
+    start = jnp.clip(L, 0, max(st.n_slots - t, 0))   # [b]
+    kflat, vflat = _flat_rows(kv.k), _flat_rows(kv.v)
+
+    # --- copy-on-write the straddled first block when it is not ours ------ #
+    bi0 = jnp.clip(start // bs, 0, mb - 1)
+    off0 = start % bs
+    cur0 = jnp.take_along_axis(st.blocks, bi0[:, None], axis=1)[:, 0]  # [b]
+    own0 = jnp.take_along_axis(st.owned, bi0[:, None], axis=1)[:, 0]
+    r = jnp.arange(bs)
+    cow = (cur0 != own0)[:, None] & (r[None] < off0[:, None]) \
+        & (cur0 >= 0)[:, None]                                      # [b, bs]
+    src = jnp.clip(cur0, 0)[:, None] * bs + r[None]
+    dst = jnp.where(cow, own0[:, None] * bs + r[None], nrows)
+    copied_k, copied_v = kflat[src], vflat[src]
+    kflat = kflat.at[dst].set(copied_k, mode="drop")
+    vflat = vflat.at[dst].set(copied_v, mode="drop")
+
+    # --- redirect every touched logical block to the reserved set --------- #
+    bidx = jnp.arange(mb)
+    touched = (bidx[None] * bs < (start + t)[:, None]) \
+        & ((bidx[None] + 1) * bs > start[:, None])                  # [b, mb]
+    blocks = jnp.where(touched, st.owned, st.blocks)
+
+    # --- write the new rows ------------------------------------------------ #
+    slots = start[:, None] + jnp.arange(t)[None]                    # [b, T]
+    wblk = jnp.take_along_axis(blocks, jnp.clip(slots // bs, 0, mb - 1),
+                               axis=1)
+    wrow = jnp.where(slots < st.n_slots, wblk * bs + slots % bs, nrows)
+    kflat = kflat.at[wrow].set(k_new.astype(kflat.dtype), mode="drop")
+    vflat = vflat.at[wrow].set(v_new.astype(vflat.dtype), mode="drop")
+
+    lane = jnp.arange(b)[:, None]
+    pos = st.pos.at[lane, slots].set(pos_new.astype(jnp.int32), mode="drop")
+    return (PoolKV(k=kflat.reshape(kv.k.shape), v=vflat.reshape(kv.v.shape)),
+            st._replace(blocks=blocks, pos=pos, length=L + t))
+
+
+def paged_truncate(st: PagedKVCache, length, block_size: int) -> PagedKVCache:
+    """Lane-wise mirror of :func:`repro.core.cache.truncate` (metadata only:
+    blocks past the new occupied prefix are unmapped from the table; the
+    host reconciles any shared-block references at lane retirement)."""
+    length = jnp.minimum(st.length, jnp.asarray(length, jnp.int32))
+    live = jnp.arange(st.n_slots)[None] < length[:, None]
+    return st._replace(
+        blocks=jnp.where(_dead_blocks(st, length, block_size), -1, st.blocks),
+        pos=jnp.where(live, st.pos, -1),
+        length=length,
+        scores=None if st.scores is None
+        else jnp.where(live, st.scores, 0.0))
+
+
+def _dead_blocks(st: PagedKVCache, length, block_size: int) -> jnp.ndarray:
+    """bool[b, max_blocks]: logical blocks entirely past ``length``."""
+    return jnp.arange(st.max_blocks)[None] * block_size >= length[:, None]
+
+
+def _lane_keep_masks(policy, spec: LadderSpec, st: PagedKVCache, layer
+                     ) -> jnp.ndarray:
+    """vmap the (metadata-only) policy keep mask over lanes: bool[b, s]."""
+    dummy = jnp.zeros((1, st.n_slots, 1, 1), jnp.float32)
+
+    def one(pos, length, scores):
+        c = KVCache(k=dummy, v=dummy, pos=pos, length=length, scores=scores)
+        return policy.keep_mask(spec, c, layer)
+
+    if st.scores is None:
+        return jax.vmap(lambda p, l: one(p, l, None))(st.pos, st.length)
+    return jax.vmap(one)(st.pos, st.length, st.scores)
+
+
+def _force_keep_masks(spec: LadderSpec, st: PagedKVCache, n_incoming: int
+                      ) -> jnp.ndarray:
+    """Lane-wise mirror of the dense recency-truncation fallback."""
+    slot = jnp.arange(st.n_slots)[None]
+    target = st.n_slots - n_incoming
+    return ((slot < spec.n_sink)
+            | (slot >= (st.length - (target - spec.n_sink))[:, None])) \
+        & (slot < st.length[:, None])
+
+
+def _compact_pass(kv: PoolKV, st: PagedKVCache, keep: jnp.ndarray,
+                  active: jnp.ndarray, rope_theta
+                  ) -> Tuple[PoolKV, PagedKVCache]:
+    """One physical compaction pass for the lanes flagged ``active``.
+
+    Survivor rows are gathered through the *old* table, re-rotated by the
+    slot delta when keys are stored cache-relative (R(a)R(b) = R(a+b) — the
+    same fixup the dense path applies), and scattered into the lane's
+    ``owned`` blocks, which become the new table. Inactive lanes are
+    untouched (their scatter rows drop, their metadata passes through).
+    """
+    b, n_slots = st.pos.shape[0], st.n_slots
+    bs = kv.block_size
+    nrows = kv.n_blocks * bs
+    perm, new_len = jax.vmap(ladder.compaction_perm)(keep)   # [b, s], [b]
+    slot = jnp.arange(n_slots)[None]                         # [1, s]
+    live = slot < new_len[:, None]
+
+    src_blk = jnp.take_along_axis(st.blocks, perm // bs, axis=1)
+    src_row = jnp.clip(src_blk, 0) * bs + perm % bs
+    kflat, vflat = _flat_rows(kv.k), _flat_rows(kv.v)
+    rows_k = kflat[src_row]                                  # [b, s, kv, hd]
+    rows_v = vflat[src_row]
+    if rope_theta is not None:
+        from repro.models.common import apply_rope
+        delta = jnp.where(live, slot - perm, 0)
+        rows_k = apply_rope(rows_k, delta, rope_theta)
+
+    dst_blk = jnp.take(st.owned, slot[0] // bs, axis=1)      # [b, s]
+    write = live & (src_blk >= 0) & active[:, None]
+    dst_row = jnp.where(write, dst_blk * bs + slot % bs, nrows)
+    kflat = kflat.at[dst_row].set(rows_k.astype(kflat.dtype), mode="drop")
+    vflat = vflat.at[dst_row].set(rows_v.astype(vflat.dtype), mode="drop")
+
+    blocks = jnp.where(active[:, None],
+                       jnp.where(_dead_blocks(st, new_len, bs),
+                                 -1, st.owned),
+                       st.blocks)
+    pos = jnp.where(active[:, None],
+                    jnp.where(live, jnp.take_along_axis(st.pos, perm, axis=1),
+                              -1),
+                    st.pos)
+    scores = st.scores
+    if scores is not None:
+        scores = jnp.where(active[:, None],
+                           jnp.where(live,
+                                     jnp.take_along_axis(scores, perm, axis=1),
+                                     0.0),
+                           scores)
+    length = jnp.where(active, new_len, st.length)
+    return (PoolKV(k=kflat.reshape(kv.k.shape), v=vflat.reshape(kv.v.shape)),
+            st._replace(blocks=blocks, pos=pos, length=length, scores=scores))
+
+
+def paged_maybe_compact(kv: PoolKV, st: PagedKVCache, spec: LadderSpec, layer,
+                        policy: PolicyLike, n_incoming: int = 1,
+                        rope_theta=None) -> Tuple[PoolKV, PagedKVCache]:
+    """Lane-wise mirror of :func:`repro.core.cache.maybe_compact`.
+
+    Lanes whose buffer would overflow run the policy compaction pass (and,
+    when that frees nothing, the forced recency pass) — the identical
+    two-stage composition the dense path applies, so paged and dense decode
+    stay token-for-token equal. Gated on ``lax.cond(any(need))``: the common
+    no-overflow step skips the gather/scatter entirely.
+    """
+    policy = get_policy(policy)
+    if not policy.evicts:
+        return kv, st
+    need = st.length + n_incoming > st.n_slots               # [b]
+
+    def do(args):
+        kv, st = args
+        keep = _lane_keep_masks(policy, spec, st, layer)
+        kv, st = _compact_pass(kv, st, keep, need, rope_theta)
+        still = st.length + n_incoming > st.n_slots
+
+        def force(args2):
+            kv2, st2 = args2
+            keep2 = _force_keep_masks(spec, st2, n_incoming)
+            return _compact_pass(kv2, st2, keep2, still, rope_theta)
+
+        return jax.lax.cond(jnp.any(still), force, lambda a: a, (kv, st))
+
+    return jax.lax.cond(jnp.any(need), do, lambda a: a, (kv, st))
+
+
+def paged_observe(policy, st: PagedKVCache, probs: jnp.ndarray
+                  ) -> PagedKVCache:
+    """Lane-wise ``policy.observe``: fold per-lane attention probabilities
+    ``[b, heads, q, n_slots]`` into per-lane score accumulators — the exact
+    per-lane computation the vmapped dense path performs."""
+    if st.scores is None:
+        return st
+    dummy = jnp.zeros((1, st.n_slots, 1, 1), jnp.float32)
+    dpos = jnp.full((st.n_slots,), -1, jnp.int32)
+
+    def one(sc, p):
+        c = KVCache(k=dummy, v=dummy, pos=dpos,
+                    length=jnp.zeros((), jnp.int32), scores=sc)
+        return policy.observe(c, p[None]).scores
+
+    return st._replace(scores=jax.vmap(one)(st.scores, probs))
 
 
 # =========================================================================== #
@@ -441,6 +734,33 @@ class PagedSnapshot:
     owned_bytes: int          # newly-allocated block bytes + dense leaf bytes
     dense_bytes: int = 0      # the dense (non-KV-block) share of owned_bytes
     released: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class TableSnapshot:
+    """An in-model snapshot: a refcount *fork* of a live lane's block tables.
+
+    No K/V bytes are copied at snapshot time — the snapshot is the concrete
+    per-layer table/metadata arrays plus one pool reference per mapped block
+    (taken by the engine via :meth:`PagedStateStore.retain_blocks`). The
+    structure of ``tables`` mirrors the decode state: ``{"blocks": {key:
+    layer}, "tail": {key: layer}}`` where each layer is a dict of numpy
+    arrays ``blocks``/``pos``/``length``/``scores`` (stacked over the
+    period-scan instances for "blocks" entries).
+    """
+
+    tables: dict
+    state_pos: "np.ndarray"       # the lane's absolute next-token position
+    dense_bytes: int = 0          # metadata bytes riding along (pos/scores)
+    released: bool = False
+
+    def block_ids(self) -> "np.ndarray":
+        ids: List[int] = []
+        for section in self.tables.values():
+            for layer in section.values():
+                blk = np.asarray(layer["blocks"]).reshape(-1)
+                ids.extend(blk[blk >= 0].tolist())
+        return np.asarray(ids, np.int64)
 
 
 def _is_kv(x) -> bool:
@@ -483,6 +803,7 @@ class PagedStateStore:
         self.puts = 0
         self.gets = 0
         self.peak_bytes = 0
+        self.planes_detached = False
 
     @property
     def block_size(self) -> int:
@@ -500,11 +821,64 @@ class PagedStateStore:
     def free_blocks(self) -> int:
         return int(self.pool.n_free)
 
+    # -- host-side allocator API for the in-model paged path --------------- #
+    # The traced decode step never touches refcounts or the free list; the
+    # engine pre-stages ownership through these eager primitives (lane
+    # reserved sets, snapshot forks, preemption handoffs).
+    def detach_planes(self) -> "PoolKV":
+        """Hand the pool's K/V planes over to the in-model decode state.
+
+        The in-model path keeps all KV content in the traced
+        :class:`PoolKV` (updated in place via buffer donation) and uses the
+        store purely as the allocator — keeping a second full-size set of
+        planes here would silently double the largest allocation in the
+        system. The store retains a 1-block stub (shape metadata for
+        ``block_bytes``); the content paths (:meth:`put`/:meth:`get`)
+        refuse afterwards.
+        """
+        if self.planes_detached:
+            raise RuntimeError("pool planes already detached")
+        kvp = PoolKV(k=self.pool.k, v=self.pool.v)
+        self.pool = self.pool._replace(k=self.pool.k[:1], v=self.pool.v[:1])
+        self.planes_detached = True
+        return kvp
+
+    def alloc_blocks(self, n: int) -> np.ndarray:
+        """Pop ``n`` fresh block ids off the free stack (refcount 1)."""
+        if n == 0:
+            return np.zeros((0,), np.int64)
+        free = int(self.pool.n_free)
+        if n > free:
+            raise PoolExhausted(f"need {n} blocks, {free} free")
+        ids = np.asarray(self.pool.free)[free - n:free][::-1].astype(np.int64)
+        self.pool = self.pool._replace(
+            ref=self.pool.ref.at[jnp.asarray(ids)].set(1),
+            n_free=jnp.asarray(free - n, jnp.int32))
+        self.peak_bytes = max(self.peak_bytes, self.bytes_in_use)
+        return ids
+
+    def retain_blocks(self, ids) -> None:
+        """Add one reference per id (snapshot fork / prefix splice)."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size:
+            self.pool = _incref(self.pool, jnp.asarray(ids, jnp.int32))
+
+    def release_blocks(self, ids) -> None:
+        """Drop one reference per id; blocks reaching 0 return to the
+        free stack."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size:
+            self.pool = _decref(self.pool, jnp.asarray(ids, jnp.int32))
+
     def put(self, tree, parent: Optional[PagedSnapshot] = None
             ) -> Tuple[PagedSnapshot, int]:
         """Store a pytree; returns (snapshot, owned_bytes). ``owned_bytes``
         counts only newly-allocated blocks plus dense (non-KV) leaves — the
         unique cost of this snapshot at insert time."""
+        if self.planes_detached:
+            raise RuntimeError("pool planes were detached (in-model paged "
+                               "decode owns the content); put/get are the "
+                               "store-backed fallback's API")
         leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_kv)
         pleaves = None
         if parent is not None and not parent.released \
@@ -555,6 +929,9 @@ class PagedStateStore:
 
     def get(self, snap: PagedSnapshot):
         """Materialize the stored pytree (gathers KV through the tables)."""
+        if self.planes_detached:
+            raise RuntimeError("pool planes were detached (in-model paged "
+                               "decode owns the content)")
         if snap.released:
             raise ValueError("snapshot was released back to the pool")
         leaves = [
@@ -565,9 +942,16 @@ class PagedStateStore:
         self.gets += 1
         return jax.tree.unflatten(snap.treedef, leaves)
 
-    def release(self, snap: PagedSnapshot) -> None:
-        """Return the snapshot's block references to the pool (idempotent)."""
+    def release(self, snap) -> None:
+        """Return the snapshot's block references to the pool (idempotent).
+
+        Accepts both :class:`PagedSnapshot` (paged-out pytrees) and
+        :class:`TableSnapshot` (in-model lane forks)."""
         if snap.released:
+            return
+        if isinstance(snap, TableSnapshot):
+            self.release_blocks(snap.block_ids())
+            snap.released = True
             return
         for leaf in snap.leaves:
             if isinstance(leaf, _TableSet):

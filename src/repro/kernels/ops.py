@@ -129,17 +129,28 @@ def _xla_decode_attention(q, k, v, length, *, sm_scale=None):
     Keeping the kv-head axis intact (no jnp.repeat) lets GSPMD partition the
     slot-sharded cache with partial-softmax all-reduces instead of
     all-gathering the cache (§Perf iter 1c)."""
+    valid = (jnp.arange(k.shape[1]) < length)[None, :]
+    return _masked_decode_attention(q, k, v, valid, sm_scale=sm_scale)
+
+
+def _masked_decode_attention(q, k, v, valid, *, sm_scale=None):
+    """The shared decode-attention core over an explicit slot-validity mask.
+
+    q: [b, h, d]; k/v: [b, s, kv, d]; valid: bool broadcastable to [b, s].
+    Both the dense (scalar/vector ``length``) and the paged (gathered block
+    view) decode paths reduce to this exact computation, which is what keeps
+    the two backends token-for-token equal."""
     b, h, d = q.shape
-    s, kvh = k.shape[1], k.shape[2]
+    kvh = k.shape[2]
     g = h // kvh
     sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
     q4 = (q.reshape(b, kvh, g, d).astype(jnp.float32)) * sm_scale
     scores = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
-    valid = (jnp.arange(s) < length)[None, None, None, :]
-    scores = jnp.where(valid, scores, NEG_INF)
+    vmask = valid[:, None, None, :]
+    scores = jnp.where(vmask, scores, NEG_INF)
     m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
     p = jnp.exp(scores - m)
-    p = jnp.where(valid, p, 0.0)
+    p = jnp.where(vmask, p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     p = p / jnp.where(l == 0.0, 1.0, l)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
@@ -150,18 +161,45 @@ def _xla_decode_attention(q, k, v, length, *, sm_scale=None):
 # Paged decode attention (block-table cache; repro.core.paged)
 # --------------------------------------------------------------------------- #
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                           sm_scale=None, impl: Optional[str] = None):
+                           sm_scale=None, impl: Optional[str] = None,
+                           n_slots: Optional[int] = None,
+                           return_probs: bool = False):
     """Decode attention through a per-sequence block table over a global
     physical block pool. q: [b, h, d]; k_pool/v_pool: [n_blocks, bs, kv, d];
-    block_tables: [b, max_blocks] (-1 unmapped); lengths: [b]."""
+    block_tables: [b, max_blocks] (-1 unmapped); lengths: [b].
+
+    ``n_slots`` crops the logical view to the layer's slot-buffer size
+    (max_blocks * block_size rounds up), so the in-model paged decode path
+    computes over exactly the same shapes as the dense path — the bitwise
+    contract behind the paged-vs-dense differential harness.
+    ``return_probs`` (H2O/TOVA) forces the XLA reference path, mirroring the
+    dense kernel's FlashAttention-incompatibility argument.
+    """
+    if return_probs:
+        return _ref.paged_decode_attention_reference(
+            q, k_pool, v_pool, block_tables, lengths, sm_scale=sm_scale,
+            n_slots=n_slots, return_probs=True)
     impl = impl or default_impl()
     if impl == "pallas":
         from repro.kernels import paged_attention as pa
         return pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
                                          lengths, sm_scale=sm_scale,
+                                         n_slots=n_slots,
                                          interpret=_interpret())
-    return _ref.paged_decode_attention_reference(
-        q, k_pool, v_pool, block_tables, lengths, sm_scale=sm_scale)
+    return _xla_paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                       lengths, sm_scale=sm_scale,
+                                       n_slots=n_slots)
+
+
+def _xla_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                                sm_scale=None, n_slots=None):
+    """XLA paged decode: gather the logical view through the table (fused by
+    XLA — the Pallas kernel streams blocks instead), then run the *same*
+    masked decode core as the dense path so logits agree bit-for-bit. The
+    view semantics live in one place (:func:`ref.paged_logical_view`)."""
+    k, v, valid = _ref.paged_logical_view(k_pool, v_pool, block_tables,
+                                          lengths, n_slots)
+    return _masked_decode_attention(q, k, v, valid, sm_scale=sm_scale)
 
 
 # --------------------------------------------------------------------------- #

@@ -31,12 +31,14 @@ NEG_INF = -1.0e30
 
 def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, sm_scale: float, block_size: int,
-                  max_blocks: int):
+                  max_blocks: int, n_slots: int):
     """Grid: (batch, kv_heads, max_blocks).
 
     tables_ref: [b, max_blocks] SMEM; lengths_ref: [b] SMEM;
     q_ref/o_ref: [group, d]; k_ref/v_ref: [block_size, d] — the physical
-    block the index map selected via the table.
+    block the index map selected via the table. ``n_slots`` (static) crops
+    the last logical block's padding rows (max_blocks * block_size rounds
+    the slot buffer up), matching the in-model dense-path semantics.
     """
     bi = pl.program_id(0)
     si = pl.program_id(2)
@@ -51,7 +53,8 @@ def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
     k = k_ref[...].astype(jnp.float32)                      # [bs, d]
     s = q @ k.T                                             # [g, bs]
     slot = si * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = (slot < lengths_ref[bi]) & (tables_ref[bi, si] >= 0)
+    valid = (slot < lengths_ref[bi]) & (slot < n_slots) \
+        & (tables_ref[bi, si] >= 0)
     s = jnp.where(valid, s, NEG_INF)
     s = jnp.where(jnp.isnan(s), NEG_INF, s)  # OOB grid padding (NaN fill)
 
@@ -78,10 +81,14 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                            lengths: jnp.ndarray, *,
                            sm_scale: Optional[float] = None,
+                           n_slots: Optional[int] = None,
                            interpret: bool = True) -> jnp.ndarray:
     """q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
     block_tables: [b, max_blocks] int32 (-1 = unmapped);
     lengths: [b] int32 valid-prefix lengths  ->  [b, h, d].
+
+    ``n_slots`` (static) masks the padding rows of the last logical block
+    when the layer's slot buffer is not a block-size multiple.
     """
     b, h, d = q.shape
     n_blocks, block_size, kvh = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
@@ -117,7 +124,9 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, sm_scale=sm_scale,
-                          block_size=block_size, max_blocks=mb),
+                          block_size=block_size, max_blocks=mb,
+                          n_slots=n_slots if n_slots is not None
+                          else mb * block_size),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         interpret=interpret,

@@ -75,21 +75,21 @@ def decode_attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out[:, 0]
 
 
-def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
-                                     v_pool: jnp.ndarray,
-                                     block_tables: jnp.ndarray,
-                                     lengths: jnp.ndarray, *,
-                                     sm_scale: Optional[float] = None
-                                     ) -> jnp.ndarray:
-    """Single-token decode attention through a paged block table.
+def paged_logical_view(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                       block_tables: jnp.ndarray, lengths: jnp.ndarray,
+                       n_slots: Optional[int] = None):
+    """Gather the logical (k, v, valid) view through a block table.
 
-    q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
-    block_tables: [b, max_blocks] int32 (-1 = unmapped); lengths: [b] int32.
-    Gathers the logical view per sequence, then runs the dense reference with
-    a per-batch validity mask — the semantics contract for the Pallas paged
-    kernel (which never materializes the gather).
+    k_pool/v_pool: [n_blocks, block_size, kv, d]; block_tables:
+    [b, max_blocks] int32 (-1 = unmapped); lengths: [b] int32. Returns
+    k/v [b, S, kv, d] and a bool validity mask [b, S] (occupied AND
+    mapped), with ``S = n_slots`` when given (cropping the padding rows of
+    the last logical block) else ``max_blocks * block_size``. The single
+    source of truth for paged-view semantics — both the XLA decode path
+    (:func:`repro.kernels.ops.paged_decode_attention`) and the oracle
+    below consume it, so they can never drift apart.
     """
-    b = q.shape[0]
+    b = block_tables.shape[0]
     block_size = k_pool.shape[1]
     mb = block_tables.shape[1]
     ids = jnp.clip(block_tables, 0)                       # [b, mb]
@@ -98,8 +98,39 @@ def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
     slot = jnp.arange(mb * block_size)
     mapped = jnp.repeat(block_tables >= 0, block_size, axis=1)
     valid = (slot[None, :] < lengths[:, None]) & mapped    # [b, mb*bs]
-    return mha_reference(q[:, None], k, v, causal=False, kv_valid=valid,
-                         sm_scale=sm_scale)[:, 0]
+    if n_slots is not None:
+        k, v, valid = k[:, :n_slots], v[:, :n_slots], valid[:, :n_slots]
+    return k, v, valid
+
+
+def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                     v_pool: jnp.ndarray,
+                                     block_tables: jnp.ndarray,
+                                     lengths: jnp.ndarray, *,
+                                     sm_scale: Optional[float] = None,
+                                     n_slots: Optional[int] = None,
+                                     return_probs: bool = False):
+    """Single-token decode attention through a paged block table.
+
+    q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
+    block_tables: [b, max_blocks] int32 (-1 = unmapped); lengths: [b] int32.
+    Gathers the logical view per sequence, then runs the dense reference with
+    a per-batch validity mask — the semantics contract for the Pallas paged
+    kernel (which never materializes the gather).
+
+    ``n_slots`` crops the padded view to the layer's slot-buffer size;
+    ``return_probs`` additionally returns [b, h, 1, n_slots] attention
+    probabilities (H2O/TOVA score accumulation — identical math to
+    :func:`decode_attention_reference` with ``return_probs=True``).
+    """
+    k, v, valid = paged_logical_view(k_pool, v_pool, block_tables, lengths,
+                                     n_slots)
+    out = mha_reference(q[:, None], k, v, causal=False, kv_valid=valid,
+                        sm_scale=sm_scale, return_probs=return_probs)
+    if return_probs:
+        o, p = out
+        return o[:, 0], p
+    return out[:, 0]
 
 
 def gather_compact_reference(x: jnp.ndarray, perm: jnp.ndarray,

@@ -58,10 +58,13 @@ def main():
                          "(on_token)")
     ap.add_argument("--kv-backend", default="dense",
                     choices=("dense", "paged"),
-                    help="KV memory backend: 'paged' stores prefix "
-                         "snapshots as block tables into one physical pool "
-                         "(copy-on-write sharing) and enables preemption "
-                         "of RUNNING requests under admission pressure")
+                    help="KV memory backend: 'paged' decodes through "
+                         "per-request block tables into one physical pool "
+                         "(in-model paged decode on eligible all-attention "
+                         "archs: prefix hits splice shared blocks, "
+                         "snapshots are refcount forks, preemption is a "
+                         "table handoff; other archs fall back to "
+                         "store-backed snapshots with dense decode)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged backend: slots per physical block")
     ap.add_argument("--ckpt", default=None)
@@ -123,7 +126,11 @@ def main():
               f"prefix hit rate {eng.prefix_hit_rate:.2f} "
               f"({eng.prefix_tokens_reused} tokens reused)")
         if args.kv_backend == "paged":
-            print(f"paged pool: {eng.kv_bytes_in_use/1e6:.2f} MB live, "
+            mode = ("in-model (decode through block tables)"
+                    if eng._paged_in_model
+                    else "store-backed (dense decode, pooled snapshots)")
+            print(f"paged pool [{mode}]: {eng.kv_bytes_in_use/1e6:.2f} MB "
+                  f"live ({eng.lane_owned_bytes/1e6:.2f} MB lane reserve), "
                   f"{eng.bytes_shared/1e6:.2f} MB deduplicated by block "
                   f"sharing; {eng.preemptions} preemptions")
         print("sample:", done[0].tokens[:32].tolist())

@@ -12,6 +12,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
 from repro.core import cache as cachelib
+from repro.core import paged as pagedlib
 from repro.core.cache import CrossKVCache, KVCache, MambaState
 from repro.core.ladder import LadderSpec
 from repro.core.policy import PolicyLike, get_policy
@@ -162,6 +163,61 @@ def attention_decode(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
                                   impl=impl)
     y = o.reshape(b, 1, h * hd) @ w["wo"]
     return shard(y, "batch", "seq", "residual"), kv_cache
+
+
+def attention_decode_paged(w, cfg: ModelConfig, x, st: "pagedlib.PagedKVCache",
+                           kvp: "pagedlib.PoolKV", *, spec: LadderSpec,
+                           layer_ord, policy: PolicyLike, true_pos,
+                           impl: Optional[str] = None):
+    """Single-token decode against an *in-model paged* slot cache.
+
+    The lane-batched twin of :func:`attention_decode`: ``st`` holds per-lane
+    block tables into the shared pool planes ``kvp``; compaction rewrites
+    the table (with the cache-relative RoPE slot-delta fixup applied through
+    pool-row gather/scatter) and the append copy-on-writes shared blocks
+    into the lane's reserved set — no dense working copy is ever gathered in
+    this path; attention consumes the table via
+    :func:`repro.kernels.ops.paged_decode_attention`.
+
+    ``true_pos``: per-lane absolute positions [b] (each lane advances on its
+    own clock). Returns (y, st, kvp).
+    """
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim_
+    policy = get_policy(policy)
+    cache_rope = (cfg.pos_emb == "rope" and cfg.lacache.rope_mode == "cache"
+                  and not cfg.mrope)
+    q, k_new, v_new = _qkv(w, cfg, x)           # t == 1
+
+    kvp, st = pagedlib.paged_maybe_compact(
+        kvp, st, spec, layer_ord, policy, 1,
+        rope_theta=cfg.rope_theta if cache_rope else None)
+    true_pos = jnp.asarray(true_pos, jnp.int32).reshape(-1)   # [b]
+    if cfg.pos_emb == "rope":
+        if cache_rope:
+            slots = st.length[:, None]          # per-lane append target slot
+            k_store = common.apply_rope(k_new, slots, cfg.rope_theta)
+            qq = common.apply_rope(q, slots, cfg.rope_theta)
+        else:
+            k_store = common.apply_rope(k_new, true_pos[:, None],
+                                        cfg.rope_theta)
+            qq = common.apply_rope(q, true_pos[:, None], cfg.rope_theta)
+    else:
+        k_store, qq = k_new, q
+    kvp, st = pagedlib.paged_append(kvp, st, k_store, v_new,
+                                    true_pos[:, None])
+
+    if policy.needs_scores:
+        o, probs = kops.paged_decode_attention(
+            qq[:, 0], kvp.k, kvp.v, st.blocks, st.length,
+            n_slots=st.n_slots, return_probs=True)
+        st = pagedlib.paged_observe(policy, st, probs)
+    else:
+        o = kops.paged_decode_attention(
+            qq[:, 0], kvp.k, kvp.v, st.blocks, st.length,
+            n_slots=st.n_slots, impl=impl)
+    y = o.reshape(b, 1, h * hd) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), st, kvp
 
 
 def attention_decode_ring(w, cfg: ModelConfig, x, ring: RingKVCache, *,
@@ -469,6 +525,57 @@ def attention_decode_chunk(w, cfg: ModelConfig, x, kv_cache: KVCache, *,
                            q_offset=q_off, kv_valid=valid)
     y = o.reshape(b, tc, h * cfg.head_dim_) @ w["wo"]
     return shard(y, "batch", "seq", "residual"), kv_cache
+
+
+def attention_decode_chunk_paged(w, cfg: ModelConfig, x,
+                                 st: "pagedlib.PagedKVCache",
+                                 kvp: "pagedlib.PoolKV", *, spec: LadderSpec,
+                                 layer_ord, policy: PolicyLike, start_pos):
+    """Chunk decode (streaming prefill) against an in-model paged cache.
+
+    The lane-batched twin of :func:`attention_decode_chunk`: the chunk is
+    appended through the block table (CoW into the lane's reserved blocks),
+    then attention runs causally over the gathered logical view with a
+    per-lane ``q_offset`` — bit-for-bit the dense chunk computation, because
+    the gathered view is exactly the dense slot buffer. ``start_pos``:
+    per-lane absolute position of the chunk's first token [b].
+    Returns (y, st, kvp).
+    """
+    b, tc, _ = x.shape
+    h = cfg.n_heads
+    policy = get_policy(policy)
+    cache_rope = (cfg.pos_emb == "rope" and cfg.lacache.rope_mode == "cache"
+                  and not cfg.mrope)
+    q, k_new, v_new = _qkv(w, cfg, x)
+
+    kvp, st = pagedlib.paged_maybe_compact(
+        kvp, st, spec, layer_ord, policy, tc,
+        rope_theta=cfg.rope_theta if cache_rope else None)
+    start = jnp.asarray(start_pos, jnp.int32).reshape(-1)     # [b]
+    if cfg.pos_emb == "rope":
+        if cache_rope:
+            slots = st.length[:, None] + jnp.arange(tc)[None]  # [b, tc]
+            k_store = common.apply_rope(k_new, slots, cfg.rope_theta)
+            qq = common.apply_rope(q, slots, cfg.rope_theta)
+        else:
+            posns = start[:, None] + jnp.arange(tc)[None]
+            k_store = common.apply_rope(k_new, posns, cfg.rope_theta)
+            qq = common.apply_rope(q, posns, cfg.rope_theta)
+    else:
+        k_store, qq = k_new, q
+    q_off = st.length                                          # [b]
+    kvp, st = pagedlib.paged_append(
+        kvp, st, k_store, v_new,
+        (start[:, None] + jnp.arange(tc)[None]).astype(jnp.int32))
+
+    from repro.kernels import ref as kref
+    kk, vv = pagedlib.paged_gather_view(kvp, st, st.n_slots)
+    valid = jnp.arange(st.n_slots)[None] < st.length[:, None]  # [b, s]
+    o = jax.vmap(lambda qi, ki, vi, offi, vldi: kref.mha_reference(
+        qi[None], ki[None], vi[None], causal=True, q_offset=offi,
+        kv_valid=vldi[None])[0])(qq, kk, vv, q_off, valid)
+    y = o.reshape(b, tc, h * cfg.head_dim_) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), st, kvp
 
 
 def mamba_chunk(w, cfg: ModelConfig, x, state: MambaState

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.core import cache as cachelib
 from repro.core import ladder
+from repro.core import paged as pagedlib
 from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.core.paged import PagedKVCache, PoolKV
 from repro.core.policy import EvictionPolicy
 from repro.launch.axes import shard
 from repro.models import common, layers
@@ -373,12 +375,19 @@ class DecodeState(NamedTuple):
     """Typed decode-state pytree threaded through prefill / decode_step /
     decode_chunk (replaces the raw string-keyed dict).
 
-    * ``pos``: scalar int32 — absolute position of the next token,
+    * ``pos``: absolute position of the next token — a scalar for dense
+      (lockstep) states, a per-lane ``[b]`` vector for in-model paged
+      states (each serving lane advances on its own clock),
     * ``blocks``: per-period-position layer states, leaves stacked
       ``[n_full, ...]`` for the lax.scan over periods,
     * ``tail``: per-tail-layer states (unrolled remainder layers),
     * ``cross_blocks``/``cross_tail``: static encoder cross-attention KV
-      (whisper), ``None`` for decoder-only models.
+      (whisper), ``None`` for decoder-only models,
+    * ``kv_pool``: ``None`` for dense states; a
+      :class:`repro.core.paged.PoolKV` for in-model paged states — the
+      global pool's K/V planes, threaded through every layer of
+      ``decode_step``/``decode_chunk`` so attention consumes block tables
+      directly (refcounts and the free list stay host-side in the engine).
 
     NamedTuple => automatically a registered pytree with stable field-name
     key paths, so jit boundaries, sharding rules and engine code address
@@ -390,6 +399,7 @@ class DecodeState(NamedTuple):
     tail: Dict[str, Any]
     cross_blocks: Any = None
     cross_tail: Any = None
+    kv_pool: Any = None
 
 
 def _empty_layer_state(cfg: ModelConfig, spec: LayerSpec, batch: int,
@@ -429,6 +439,107 @@ def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
         cb, ct = _cross_caches(params, cfg, enc_out)
     return DecodeState(pos=jnp.zeros((), jnp.int32), blocks=blocks, tail=tail,
                        cross_blocks=cb, cross_tail=ct)
+
+
+def paged_decode_eligible(cfg: ModelConfig) -> bool:
+    """Whether the in-model paged decode path supports this architecture:
+    every layer must be global attention (ring windows and SSM states carry
+    batch-uniform metadata the per-lane paged step cannot express yet) and
+    positions must be 1-D (no M-RoPE), with no encoder cross-attention."""
+    return (all(s.kind == "attn" and s.attn == "global"
+                for s in cfg.layer_specs())
+            and not cfg.cross_attention and not cfg.mrope)
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, n_slots: int,
+                            page_size: int, pool_kv: PoolKV,
+                            alloc_fn) -> DecodeState:
+    """Empty in-model paged decode state over ``pool_kv``.
+
+    ``alloc_fn(n)`` is the engine's host-side allocator: it returns ``n``
+    fresh physical block ids (refcount 1, reserved for the lifetime of this
+    state). Each lane of each attention layer gets ``blocks_for(n_slots,
+    page_size)`` reserved blocks — its copy-on-write destination set — so
+    the jitted decode loop never needs an allocation.
+    """
+    import numpy as _np
+    layout = cache_positions(cfg)
+    if not paged_decode_eligible(cfg):
+        raise ValueError("in-model paged decode requires an all-global-"
+                         "attention, non-cross, non-mrope architecture")
+    mb = pagedlib.blocks_for(n_slots, page_size)
+    with_scores = eviction_policy(cfg).needs_scores
+
+    def mk(stack: Tuple[int, ...]) -> PagedKVCache:
+        shape = stack + (batch,)
+        n = int(_np.prod(shape, dtype=int)) if shape else 1
+        ids = _np.asarray(alloc_fn(n * mb)).reshape(shape + (mb,))
+        return PagedKVCache(
+            blocks=jnp.full(shape + (mb,), -1, jnp.int32),
+            owned=jnp.asarray(ids, jnp.int32),
+            pos=jnp.full(shape + (n_slots,), -1, jnp.int32),
+            length=jnp.zeros(shape, jnp.int32),
+            scores=jnp.zeros(shape + (n_slots,), jnp.float32)
+            if with_scores else None)
+
+    blocks = {f"p{p}": mk((layout["n_full"],))
+              for p in range(layout["period"])} if layout["n_full"] else {}
+    tail = {f"t{i}": mk(()) for i in range(len(layout["tail_specs"]))}
+    return DecodeState(pos=jnp.zeros((batch,), jnp.int32), blocks=blocks,
+                       tail=tail, kv_pool=pool_kv)
+
+
+def _page_in_node(kvp: PoolKV, pkc: PagedKVCache, dkc: KVCache, bs: int
+                  ) -> Tuple[PoolKV, PagedKVCache]:
+    """Scatter one dense (batch-1 per lane) layer cache into the lane's
+    reserved blocks; the table maps exactly the occupied prefix."""
+    lane_shape = pkc.length.shape
+    n = 1
+    for d in lane_shape:
+        n *= d
+    s, mb = pkc.n_slots, pkc.max_blocks
+    owned = pkc.owned.reshape(n, mb)
+    k = dkc.k.reshape((n, s) + dkc.k.shape[-2:])
+    v = dkc.v.reshape((n, s) + dkc.v.shape[-2:])
+    dlen = jnp.reshape(dkc.length, (n,))
+    slot = jnp.arange(s)
+    live = slot[None] < dlen[:, None]
+    dstblk = jnp.take(owned, slot // bs, axis=1)             # [n, s]
+    oob = kvp.n_blocks * bs
+    dst = jnp.where(live, dstblk * bs + slot % bs, oob)
+    kflat = pagedlib._flat_rows(kvp.k).at[dst].set(
+        k.astype(kvp.k.dtype), mode="drop")
+    vflat = pagedlib._flat_rows(kvp.v).at[dst].set(
+        v.astype(kvp.v.dtype), mode="drop")
+    blocks = jnp.where(jnp.arange(mb)[None] * bs < dlen[:, None], owned, -1)
+    return (PoolKV(k=kflat.reshape(kvp.k.shape), v=vflat.reshape(kvp.v.shape)),
+            pkc._replace(blocks=blocks.reshape(lane_shape + (mb,)),
+                         pos=jnp.reshape(dkc.pos, lane_shape + (s,)),
+                         length=dlen.reshape(lane_shape),
+                         scores=None if pkc.scores is None
+                         else jnp.reshape(dkc.scores, lane_shape + (s,))))
+
+
+def page_in_dense_state(paged_state: DecodeState, dense_state: DecodeState,
+                        page_size: int) -> DecodeState:
+    """Move a dense (batch-1) post-prefill state into an empty in-model
+    paged state: every layer's K/V rows scatter into the lane's reserved
+    blocks (one traced dispatch — the once-per-admission cost of a cold
+    prefill under the paged backend; prefix hits skip this entirely by
+    splicing shared tables instead)."""
+    kvp = paged_state.kv_pool
+    blocks = {}
+    for key, pkc in paged_state.blocks.items():
+        kvp, blocks[key] = _page_in_node(kvp, pkc, dense_state.blocks[key],
+                                         page_size)
+    tail = {}
+    for key, pkc in paged_state.tail.items():
+        kvp, tail[key] = _page_in_node(kvp, pkc, dense_state.tail[key],
+                                       page_size)
+    pos = jnp.broadcast_to(jnp.asarray(dense_state.pos, jnp.int32).reshape(-1),
+                           paged_state.pos.shape)
+    return paged_state._replace(pos=pos, blocks=blocks, tail=tail,
+                                kv_pool=kvp)
 
 
 def _build_layer_cache_from_prefill(cfg: ModelConfig, spec: LayerSpec, extra,
@@ -579,8 +690,20 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
 # =========================================================================== #
 # Decode step
 # =========================================================================== #
+def _state_budget(state: DecodeState) -> Optional[int]:
+    """The per-layer slot-buffer size carried by the state (dense or paged);
+    None when the state holds no global-attention cache."""
+    for v in list(state.blocks.values()) + list(state.tail.values()):
+        if isinstance(v, (KVCache, PagedKVCache)):
+            return v.n_slots
+    return None
+
+
 def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
-                        lspec, layer_ord, policy, true_pos, cross=None):
+                        lspec, layer_ord, policy, true_pos, cross=None,
+                        kvp=None):
+    """Returns (x, st, kvp): paged layer states additionally thread the
+    shared pool planes through the layer (dense states pass them along)."""
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     if spec.kind == "mamba":
         y, st = layers.mamba_decode(p["mamba"], cfg, h, st)
@@ -588,6 +711,11 @@ def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
     elif spec.attn == "local":
         y, st = layers.attention_decode_ring(
             p["attn"], cfg, h, st, window=cfg.sliding_window)
+        x = x + y
+    elif isinstance(st, PagedKVCache):
+        y, st, kvp = layers.attention_decode_paged(
+            p["attn"], cfg, h, st, kvp, spec=lspec, layer_ord=layer_ord,
+            policy=policy, true_pos=true_pos)
         x = x + y
     else:
         y, st = layers.attention_decode(
@@ -598,7 +726,7 @@ def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
         hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
         x = x + layers.cross_attention(p["cross"], cfg, hc, cross)
     x, _ = _apply_ffn(p, cfg, x, jnp.zeros((), jnp.float32))
-    return x, st
+    return x, st, kvp
 
 
 def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
@@ -607,25 +735,36 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
 
     Runs LaCache iterative compaction in-step (lax.cond inside each layer)
     whenever a layer's budget is full — the paper's Sec. 3.3 mechanism.
+
+    With ``state.kv_pool`` set (in-model paged decode), layer caches are
+    per-lane block tables into the shared pool: attention dispatches to the
+    paged kernel, compaction rewrites tables in place, and ``state.pos`` is
+    a per-lane ``[b]`` vector so ragged serving batches decode in ONE call
+    instead of a per-lane vmap (the pool is shared, so lanes cannot be
+    vmapped without duplicating it).
     """
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg)
     policy = eviction_policy(cfg)
-    if state.blocks:
-        any_kv = [v for k, v in state.blocks.items()
-                  if isinstance(v, KVCache)]
-        if any_kv:
-            lspec = lspec._replace(budget=any_kv[0].n_slots)
-    pos = state.pos
+    budget = _state_budget(state)
+    if budget is not None:
+        lspec = lspec._replace(budget=budget)
+    paged = state.kv_pool is not None
+    pos = state.pos                        # scalar (dense) or [b] (paged)
     x = _embed_tokens(params, cfg, tokens)
     if cfg.pos_emb == "abs":
-        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+        if paged:
+            rows = jax.vmap(lambda p_: _sinusoid_at(p_, cfg.d_model))(pos)
+            x = x + rows[:, None].astype(x.dtype)
+        else:
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
     gpp = layout["gpp"]
 
+    kvp = state.kv_pool
     new_blocks = state.blocks
     if layout["n_full"]:
         def body(carry, xs):
-            h = carry
+            h, kvp = carry
             pblock, caches, pidx = xs["params"], xs["caches"], xs["idx"]
             cross_b = xs.get("cross")
             new_caches = {}
@@ -637,18 +776,19 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
                            if layout["pspecs"][q].attn == "global")
                 ordl = pidx * gpp + rank
                 cr = cross_b.get(key) if cross_b else None
-                h, st_new = _apply_layer_decode(
+                h, st_new, kvp = _apply_layer_decode(
                     pblock[key], cfg, spec, h, st, lspec=lspec,
-                    layer_ord=ordl, policy=policy, true_pos=pos, cross=cr)
+                    layer_ord=ordl, policy=policy, true_pos=pos, cross=cr,
+                    kvp=kvp)
                 if st is not None:
                     new_caches[key] = st_new
-            return h, new_caches
+            return (h, kvp), new_caches
 
         xs = {"params": params["blocks"], "caches": state.blocks,
               "idx": jnp.arange(layout["n_full"])}
         if state.cross_blocks is not None:
             xs["cross"] = state.cross_blocks
-        x, new_blocks = jax.lax.scan(body, x, xs)
+        (x, kvp), new_blocks = jax.lax.scan(body, (x, kvp), xs)
 
     n_tail_base = layout["n_full"] * gpp
     tr = 0
@@ -662,16 +802,17 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
         else:
             ordl = 0
         cr = (state.cross_tail or {}).get(key)
-        x, st_new = _apply_layer_decode(
+        x, st_new, kvp = _apply_layer_decode(
             params["tail"][key], cfg, spec, x, st, lspec=lspec,
-            layer_ord=ordl, policy=policy, true_pos=pos, cross=cr)
+            layer_ord=ordl, policy=policy, true_pos=pos, cross=cr, kvp=kvp)
         if st is not None:
             new_tail[key] = st_new
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = shard(x @ head, "batch", "seq", "model")
-    new_state = state._replace(pos=pos + 1, blocks=new_blocks, tail=new_tail)
+    new_state = state._replace(pos=pos + 1, blocks=new_blocks,
+                               tail=new_tail, kv_pool=kvp)
     return logits[:, 0], new_state
 
 
@@ -711,26 +852,36 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg)
     policy = eviction_policy(cfg)
-    any_kv = [v for v in state.blocks.values() if isinstance(v, KVCache)] \
-        + [v for v in state.tail.values() if isinstance(v, KVCache)]
-    if any_kv:
-        lspec = lspec._replace(budget=any_kv[0].n_slots)
-    pos0 = state.pos
+    budget = _state_budget(state)
+    if budget is not None:
+        lspec = lspec._replace(budget=budget)
+    paged = state.kv_pool is not None
+    pos0 = state.pos                       # scalar (dense) or [b] (paged)
     tc = tokens.shape[1]
     x = _embed_tokens(params, cfg, tokens)
     if cfg.pos_emb == "abs":
-        rows = jax.vmap(lambda p: _sinusoid_at(p, cfg.d_model))(
-            pos0 + jnp.arange(tc))
-        x = x + rows[None].astype(x.dtype)
+        if paged:
+            rows = jax.vmap(lambda p: jax.vmap(
+                lambda q: _sinusoid_at(q, cfg.d_model))(p + jnp.arange(tc))
+                )(pos0)
+            x = x + rows.astype(x.dtype)
+        else:
+            rows = jax.vmap(lambda p: _sinusoid_at(p, cfg.d_model))(
+                pos0 + jnp.arange(tc))
+            x = x + rows[None].astype(x.dtype)
     gpp = layout["gpp"]
 
-    def apply_one(p, spec, h, st, ordl, cross):
+    def apply_one(p, spec, h, st, ordl, cross, kvp):
         hh = rms_norm(h, p["norm"], cfg.norm_eps)
         if spec.kind == "mamba":
             y, st = layers.mamba_chunk(p["mamba"], cfg, hh, st)
         elif spec.attn == "local":
             y, st = layers.ring_chunk(p["attn"], cfg, hh, st,
                                       window=cfg.sliding_window)
+        elif isinstance(st, PagedKVCache):
+            y, st, kvp = layers.attention_decode_chunk_paged(
+                p["attn"], cfg, hh, st, kvp, spec=lspec, layer_ord=ordl,
+                policy=policy, start_pos=pos0)
         else:
             y, st = layers.attention_decode_chunk(
                 p["attn"], cfg, hh, st, spec=lspec, layer_ord=ordl,
@@ -740,12 +891,13 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
             hc = rms_norm(h, p["cross_norm"], cfg.norm_eps)
             h = h + layers.cross_attention(p["cross"], cfg, hc, cross)
         h, _ = _apply_ffn(p, cfg, h, jnp.zeros((), jnp.float32))
-        return h, st
+        return h, st, kvp
 
+    kvp = state.kv_pool
     new_blocks = state.blocks
     if layout["n_full"]:
         def body(carry, xs):
-            h = carry
+            h, kvp = carry
             pblock, caches, pidx = xs["params"], xs["caches"], xs["idx"]
             cross_b = xs.get("cross")
             new_caches = {}
@@ -757,16 +909,17 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
                            if layout["pspecs"][qq].attn == "global")
                 ordl = pidx * gpp + rank
                 cr = cross_b.get(key) if cross_b else None
-                h, st_new = apply_one(pblock[key], spec, h, st, ordl, cr)
+                h, st_new, kvp = apply_one(pblock[key], spec, h, st, ordl,
+                                           cr, kvp)
                 if st is not None:
                     new_caches[key] = st_new
-            return h, new_caches
+            return (h, kvp), new_caches
 
         xs = {"params": params["blocks"], "caches": state.blocks,
               "idx": jnp.arange(layout["n_full"])}
         if state.cross_blocks is not None:
             xs["cross"] = state.cross_blocks
-        x, new_blocks = jax.lax.scan(body, x, xs)
+        (x, kvp), new_blocks = jax.lax.scan(body, (x, kvp), xs)
 
     n_tail_base = layout["n_full"] * gpp
     tr = 0
@@ -778,7 +931,8 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
         if spec.attn == "global":
             tr += 1
         cr = (state.cross_tail or {}).get(key)
-        x, st_new = apply_one(params["tail"][key], spec, x, st, ordl, cr)
+        x, st_new, kvp = apply_one(params["tail"][key], spec, x, st, ordl,
+                                   cr, kvp)
         if st is not None:
             new_tail[key] = st_new
 
@@ -786,5 +940,5 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = shard(x @ head, "batch", "seq", "model")
     new_state = state._replace(pos=pos0 + tc, blocks=new_blocks,
-                               tail=new_tail)
+                               tail=new_tail, kv_pool=kvp)
     return logits, new_state

@@ -65,6 +65,66 @@ from repro.serving.prefix import PrefixCache
 
 
 # --------------------------------------------------------------------------- #
+# In-model paged helpers (pure; jitted once per engine)
+# --------------------------------------------------------------------------- #
+def _lane_take(state: M.DecodeState, slot):
+    """Extract one lane of a batched in-model paged state as a batch-1 sub-
+    state. The pool planes *move* into the sub (the batched remainder comes
+    back poolless) so the take/chunk-prefill/put chain keeps a single owner
+    for the big buffers and every jit in the chain can donate them."""
+    blocks = jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
+        state.blocks)
+    tail = jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=0),
+        state.tail)
+    pos = jax.lax.dynamic_slice_in_dim(state.pos, slot, 1, axis=0)
+    return (state._replace(kv_pool=None),
+            state._replace(pos=pos, blocks=blocks, tail=tail))
+
+
+def _lane_put(state: M.DecodeState, sub: M.DecodeState, slot) -> M.DecodeState:
+    """Write a batch-1 sub-state back into its lane; the sub's pool planes
+    (advanced by prefill) replace the batched state's wholesale."""
+    blocks = jax.tree.map(
+        lambda F, o: jax.lax.dynamic_update_slice_in_dim(
+            F, o.astype(F.dtype), slot, axis=1), state.blocks, sub.blocks)
+    tail = jax.tree.map(
+        lambda F, o: jax.lax.dynamic_update_slice_in_dim(
+            F, o.astype(F.dtype), slot, axis=0), state.tail, sub.tail)
+    pos = jax.lax.dynamic_update_slice_in_dim(state.pos, sub.pos, slot, axis=0)
+    return state._replace(pos=pos, blocks=blocks, tail=tail,
+                          kv_pool=sub.kv_pool)
+
+
+def _lane_reset(sub: M.DecodeState) -> M.DecodeState:
+    """Empty a lane's logical state (tables unmapped, metadata cleared)
+    while keeping its reserved ``owned`` block set intact."""
+    def rp(leaf: pagedlib.PagedKVCache) -> pagedlib.PagedKVCache:
+        return leaf._replace(
+            blocks=jnp.full_like(leaf.blocks, -1),
+            pos=jnp.full_like(leaf.pos, -1),
+            length=jnp.zeros_like(leaf.length),
+            scores=None if leaf.scores is None
+            else jnp.zeros_like(leaf.scores))
+
+    return sub._replace(
+        pos=jnp.zeros_like(sub.pos),
+        blocks={k: rp(v) for k, v in sub.blocks.items()},
+        tail={k: rp(v) for k, v in sub.tail.items()})
+
+
+@dataclasses.dataclass(eq=False)
+class _LaneParcel:
+    """A preempted request's parked state: the table fork plus every pool
+    reference the request holds (transferred from its former lane)."""
+
+    snap: pagedlib.TableSnapshot
+    held: np.ndarray           # block ids whose references travel with it
+    held_charged: np.ndarray   # the subset charged to prefix-cache entries
+
+
+# --------------------------------------------------------------------------- #
 # Requests
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
@@ -242,10 +302,16 @@ class Engine:
                     F, o.astype(F.dtype), slot, 0), full, one),
             donate_argnums=(0,))
         self.scheduler = Scheduler(max_batch, admission=admission)
-        # paged backend: one global physical block pool; prefix snapshots
-        # and preempted requests share blocks by refcount instead of
-        # holding independent dense copies.
+        # paged backend: one global physical block pool. Eligible
+        # architectures decode *through* the pool (in-model paged decode:
+        # RUNNING requests' KV lives in block tables end-to-end, prefix
+        # hits splice shared blocks, snapshots are refcount forks and
+        # preemption is a table handoff); other architectures fall back to
+        # the store-backed mode where the pool holds snapshots/preemptions
+        # and the decode loop stays dense.
         self.kv_store = None
+        self._paged_in_model = False
+        self.page_size = page_size
         if kv_backend == "paged":
             n_kv_layers = max(1, sum(
                 1 for s in cfg.layer_specs()
@@ -259,6 +325,32 @@ class Engine:
             self.kv_store = pagedlib.PagedStateStore(
                 pool_blocks, page_size, cfg.n_kv_heads, cfg.head_dim_,
                 jnp.dtype(cfg.dtype))
+            self._paged_in_model = M.paged_decode_eligible(cfg)
+            self._lane_shared = [np.zeros((0,), np.int64)
+                                 for _ in range(max_batch)]
+            # the subset of _lane_shared charged to prefix-cache entries:
+            # when the lane's release is the one that actually frees such a
+            # block (its entry was evicted while the lane kept reading it),
+            # the cache's byte charge is settled at retirement.
+            self._lane_charged = [np.zeros((0,), np.int64)
+                                  for _ in range(max_batch)]
+            self._lane_owned_blocks = 0
+            # the in-model hot path donates its state so XLA updates the
+            # pool planes in place instead of copying them every dispatch
+            # (the engine holds the only live reference: snapshots are
+            # refcount forks of *tables*, never of pool buffers)
+            self._paged_step = jax.jit(
+                functools.partial(M.decode_step, cfg=cfg),
+                donate_argnames=("state",))
+            self._paged_chunk = jax.jit(
+                functools.partial(M.decode_chunk, cfg=cfg),
+                donate_argnames=("state",))
+            self._lane_take = jax.jit(_lane_take, donate_argnums=(0,))
+            self._lane_put = jax.jit(_lane_put, donate_argnums=(0, 1))
+            self._lane_reset = jax.jit(_lane_reset, donate_argnums=(0,))
+            self._page_in = jax.jit(functools.partial(
+                M.page_in_dense_state, page_size=page_size),
+                donate_argnums=(0,))
         self.preempt_enabled = (preempt if preempt is not None
                                 else kv_backend == "paged")
         self.preemptions = 0
@@ -433,12 +525,40 @@ class Engine:
         self._next_id += 1
         return self.scheduler.submit(req)
 
+    @property
+    def lane_owned_bytes(self) -> int:
+        """Permanent pool bytes reserved for the batch lanes' CoW destination
+        sets (in-model paged backend); constant for the engine's lifetime."""
+        if not self._paged_in_model or self.kv_store is None:
+            return 0
+        return self._lane_owned_blocks * self.kv_store.pool.block_bytes
+
     def _ensure_slot_states(self):
-        if self._slot_states is None:
-            one = self.new_state(1)
-            self._slot_states = jax.tree.map(
-                lambda x: jnp.broadcast_to(
-                    x[None], (self.max_batch,) + x.shape).copy(), one)
+        if self._slot_states is not None:
+            return
+        if self._paged_in_model:
+            # the serving state takes sole ownership of the pool's K/V
+            # planes (the store keeps a stub + the allocator: refcounts and
+            # the free list) so the donating hot path can update them in
+            # place without invalidating store-held references — and
+            # without keeping a dead second copy of the system's largest
+            # allocation alive.
+            kvp = self.kv_store.detach_planes()
+            allocated = [0]
+
+            def alloc(n):
+                allocated[0] += n
+                return self.kv_store.alloc_blocks(n)
+
+            self._slot_states = M.init_paged_decode_state(
+                self.cfg, self.max_batch, self.budget, self.page_size,
+                kvp, alloc)
+            self._lane_owned_blocks = allocated[0]
+            return
+        one = self.new_state(1)
+        self._slot_states = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (self.max_batch,) + x.shape).copy(), one)
 
     # -- prefill paths (cold / bucketed / prefix-reusing) ---------------- #
     @staticmethod
@@ -480,14 +600,18 @@ class Engine:
         cap = max(1, self.budget // 2)
         rem, off = int(suffix.shape[0]), 0
         logits = None
+        # paged sub-states go through the donating chunk jit (the pool
+        # planes update in place); dense states must NOT be donated — a
+        # prefix-cache hit hands us the cached pytree by reference.
+        chunk_fn = (self._paged_chunk if state.kv_pool is not None
+                    else self._decode_chunk)
         while rem:
             if self.bucket_prefill:
                 size = 1 << (min(rem, cap).bit_length() - 1)
             else:
                 size = min(rem, cap)
             seg = jnp.asarray(suffix[off:off + size])[None]
-            lseq, state = self._decode_chunk(self.params, state=state,
-                                             tokens=seg)
+            lseq, state = chunk_fn(self.params, state=state, tokens=seg)
             logits = lseq[:, -1]
             self._note_prefill("chunk", size, size)
             off, rem = off + size, rem - size
@@ -537,6 +661,182 @@ class Engine:
                 parent = new_entry
         return logits, state
 
+    # -- in-model paged prefill / snapshot / splice ----------------------- #
+    def _lane_layers(self, sub: M.DecodeState):
+        """Canonical (section, key, leaf) walk of a sub-state's paged layer
+        caches — the order snapshots and parcels serialize tables in."""
+        for key in sorted(sub.blocks):
+            yield "blocks", key, sub.blocks[key]
+        for key in sorted(sub.tail):
+            yield "tail", key, sub.tail[key]
+
+    def _set_lane_tables(self, sub: M.DecodeState,
+                         snap: pagedlib.TableSnapshot) -> M.DecodeState:
+        """Point a lane's tables at a snapshot's blocks (pure splice — no
+        refcount bookkeeping; callers manage holds). Every write through the
+        spliced table copy-on-writes into the lane's reserved blocks because
+        the spliced ids are not in its ``owned`` set."""
+        sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
+        for section, key, leaf in self._lane_layers(sub):
+            layer = snap.tables[section][key]
+            sections[section][key] = leaf._replace(
+                blocks=jnp.asarray(layer["blocks"], jnp.int32),
+                pos=jnp.asarray(layer["pos"], jnp.int32),
+                length=jnp.asarray(layer["length"], jnp.int32),
+                scores=None if leaf.scores is None
+                else jnp.asarray(layer["scores"], jnp.float32))
+        return sub._replace(pos=jnp.asarray(snap.state_pos, jnp.int32),
+                            blocks=sections["blocks"],
+                            tail=sections["tail"])
+
+    def _fork_lane_tables(self, sub: M.DecodeState, slot: int,
+                          retain: bool = True):
+        """Refcount-fork a lane's live tables (zero K/V copies).
+
+        Mapped blocks the lane *owns* are handed to the fork: the fork (and
+        the lane, which keeps reading them) each hold a reference, and the
+        lane's reserved set is refilled with fresh blocks so its next write
+        copy-on-writes away from the forked content. Returns
+        (TableSnapshot, newly_owned_block_bytes, updated sub) or None when
+        the pool cannot supply replacements even after evicting every
+        prefix-cache entry.
+
+        ``retain=False`` (preemption parcels): the fork takes no references
+        of its own — the request's existing holds travel with the parcel
+        instead, so discarding the parcel's snapshot needs no release.
+        """
+        plan = []
+        n_swap = 0
+        for section, key, leaf in self._lane_layers(sub):
+            blocks = np.asarray(leaf.blocks)
+            owned = np.asarray(leaf.owned)
+            swap = (blocks >= 0) & (blocks == owned)
+            plan.append((section, key, leaf, blocks, owned, swap))
+            n_swap += int(swap.sum())
+        while True:
+            try:
+                fresh = self.kv_store.alloc_blocks(n_swap)
+                break
+            except pagedlib.PoolExhausted:
+                if not self.prefix_cache.evict_lru():
+                    return None
+        fi = 0
+        tabs: Dict[str, Dict] = {"blocks": {}, "tail": {}}
+        taken: List[np.ndarray] = []
+        mapped_all: List[np.ndarray] = []
+        sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
+        dense_bytes = int(np.asarray(sub.pos).nbytes)
+        for section, key, leaf, blocks, owned, swap in plan:
+            k = int(swap.sum())
+            new_owned = owned.copy()
+            new_owned[swap] = fresh[fi:fi + k]
+            fi += k
+            taken.append(blocks[swap].astype(np.int64).reshape(-1))
+            mapped_all.append(blocks[blocks >= 0].astype(np.int64).reshape(-1))
+            layer = {"blocks": blocks.copy(),
+                     "pos": np.asarray(leaf.pos).copy(),
+                     "length": np.asarray(leaf.length).copy(),
+                     "scores": None if leaf.scores is None
+                     else np.asarray(leaf.scores).copy()}
+            dense_bytes += sum(a.nbytes for a in layer.values()
+                               if a is not None)
+            tabs[section][key] = layer
+            sections[section][key] = leaf._replace(
+                owned=jnp.asarray(new_owned, jnp.int32))
+        # the fork takes one reference per mapped block; the lane's original
+        # hold on the swapped blocks converts to a shared hold (released at
+        # retirement), so evicting the snapshot can never free blocks a
+        # RUNNING lane still reads.
+        if retain:
+            self.kv_store.retain_blocks(
+                np.concatenate(mapped_all) if mapped_all
+                else np.zeros(0, np.int64))
+        taken_ids = np.concatenate(taken) if taken else np.zeros(0, np.int64)
+        self._lane_shared[slot] = np.concatenate(
+            [self._lane_shared[slot], taken_ids])
+        snap = pagedlib.TableSnapshot(
+            tables=tabs, state_pos=np.asarray(sub.pos).copy(),
+            dense_bytes=dense_bytes)
+        owned_bytes = n_swap * self.kv_store.pool.block_bytes
+        sub = sub._replace(blocks=sections["blocks"], tail=sections["tail"])
+        return snap, owned_bytes, sub, taken_ids
+
+    def _release_lane(self, slot: int) -> None:
+        """Drop every pool reference the retiring lane's request held, and
+        settle the prefix cache's byte charge for any *charged* block whose
+        last reference the lane held (its entry was evicted mid-run: the
+        drop freed nothing then, so the charge waited for this moment —
+        without settling, the effective LRU budget would shrink forever).
+        A block still held by any entry has refcount >= 2 here and is
+        excluded, so the attribution is exact (modulo the rare
+        preempt-then-snapshot lineage, where settle's floor bounds it)."""
+        ids = self._lane_shared[slot]
+        if ids.size:
+            charged = self._lane_charged[slot]
+            if charged.size:
+                ref = np.asarray(self.kv_store.pool.ref)[ids]
+                freeing = ids[ref == 1]
+                n = int(np.isin(freeing, charged).sum())
+                if n:
+                    self.prefix_cache.settle(
+                        n * self.kv_store.pool.block_bytes)
+            self.kv_store.release_blocks(ids)
+        self._lane_shared[slot] = np.zeros((0,), np.int64)
+        self._lane_charged[slot] = np.zeros((0,), np.int64)
+
+    def _prefill_request_paged(self, req: Request, slot: int):
+        """In-model paged prefill: the request's KV goes straight into the
+        pool through its lane's block tables and never leaves.
+
+        Prefix hits splice the snapshot's shared blocks directly into the
+        live tables (no gather-to-dense working copy); the remainder streams
+        through the *paged* ``decode_chunk``; block-boundary snapshots are
+        refcount forks. Cold (or non-evicting over-budget) prompts take the
+        dense one-dispatch prefill and scatter into the lane's reserved
+        blocks once. Chunk boundaries are identical to the dense backend's,
+        which is what keeps the two backends token-for-token equal.
+        """
+        self._slot_states, sub = self._lane_take(
+            self._slot_states, jnp.asarray(slot, jnp.int32))
+        sub = self._lane_reset(sub)
+        if not req.cache_prefix or (not self._policy_evicts
+                                    and req.prompt_len > self.budget):
+            logits, dense_state = self._cold_prefill(req.prompt)
+            return logits, self._page_in(sub, dense_state)
+        entry = self.prefix_cache.lookup(req.prompt)
+        start, logits = 0, None
+        if entry is not None:
+            self.prefix_tokens_reused += entry.length
+            ids = entry.snap.block_ids()
+            self.kv_store.retain_blocks(ids)
+            self._lane_shared[slot] = np.concatenate(
+                [self._lane_shared[slot], ids])
+            # every snapshot-mapped block is charged to some entry along
+            # the lineage -> settle-eligible when the lane outlives them
+            self._lane_charged[slot] = np.concatenate(
+                [self._lane_charged[slot], ids])
+            sub = self._set_lane_tables(sub, entry.snap)
+            logits, start = entry.logits, entry.length
+            if entry.length == req.prompt_len:
+                return logits, sub
+        prompt, t = req.prompt, req.prompt_len
+        block = self.prefix_block
+        off = start
+        while off < t:
+            nxt = min(t, (off // block + 1) * block)
+            logits, sub = self._chunk_prefill(sub, prompt[off:nxt])
+            off = nxt
+            fork = self._fork_lane_tables(sub, slot)
+            if fork is not None:
+                snap, owned_bytes, sub, taken = fork
+                made = self.prefix_cache.insert_snapshot(prompt[:off], snap,
+                                                         logits, owned_bytes)
+                if made is not None and taken.size:
+                    # the blocks this entry took over are now cache-charged
+                    self._lane_charged[slot] = np.concatenate(
+                        [self._lane_charged[slot], taken])
+        return logits, sub
+
     def _sample_next(self, req: Request, logits_row) -> int:
         """Sample one token for a request from its [1, V] logits row."""
         sp = req.sampling
@@ -555,29 +855,55 @@ class Engine:
 
     # -- preemption (paged backend) -------------------------------------- #
     def preempt(self, slot: int) -> Optional[Request]:
-        """Swap a RUNNING request out of its batch slot into the block pool.
+        """Swap a RUNNING request out of its batch slot.
 
-        The request's per-slot decode state is paged into the store (KV
-        blocks; small dense leaves ride along), its slot is freed, and it
-        re-enters the pending heap under its admission key. On re-admission
-        the exact state is gathered back, so the continuation is token-for-
-        token identical to never having been preempted. Returns None (and
-        leaves the request running) when the pool cannot hold the snapshot
-        even after evicting every prefix-cache entry."""
+        In-model paged mode this is a pure **table handoff**: the request
+        parks its block tables (plus tiny metadata) in a parcel — its KV
+        never leaves the pool, no bytes are copied — and the lane's reserved
+        set is refilled so the next occupant's writes cannot touch the
+        parked blocks. The store-backed fallback pages the dense slot state
+        into the pool instead. Either way the request re-enters the pending
+        heap under its admission key and resumes token-for-token exactly.
+        Returns None (and leaves the request running) when the pool cannot
+        supply the handoff even after evicting every prefix-cache entry."""
         if self.kv_store is None:
             raise RuntimeError("preemption requires kv_backend='paged' "
                                "(a dense slot state has no pool to park in)")
         req = self.scheduler.running[slot]
-        one = jax.tree.map(lambda x: x[slot], self._slot_states)
-        while True:
-            try:
-                snap, _ = self.kv_store.put(one)
-                break
-            except pagedlib.PoolExhausted:
-                # prefix snapshots are recomputable; a live request is not
-                if not self.prefix_cache.evict_lru():
-                    return None
-        req._resume = (snap, int(self._slot_tokens[slot]))
+        if self._paged_in_model:
+            rest, sub = self._lane_take(self._slot_states,
+                                        jnp.asarray(slot, jnp.int32))
+            self._slot_states = rest
+            fork = self._fork_lane_tables(sub, slot, retain=False)
+            if fork is None:
+                # re-attach the lane untouched; the request keeps running
+                self._slot_states = self._lane_put(
+                    self._slot_states, sub, jnp.asarray(slot, jnp.int32))
+                return None
+            snap, _, sub, _ = fork
+            # the fork's holds AND the lane's shared holds all travel with
+            # the parcel; the lane starts its next occupancy clean.
+            held = self._lane_shared[slot]
+            held_charged = self._lane_charged[slot]
+            self._lane_shared[slot] = np.zeros((0,), np.int64)
+            self._lane_charged[slot] = np.zeros((0,), np.int64)
+            self._slot_states = self._lane_put(
+                self._slot_states, sub, jnp.asarray(slot, jnp.int32))
+            req._resume = (_LaneParcel(snap=snap, held=held,
+                                       held_charged=held_charged),
+                           int(self._slot_tokens[slot]))
+        else:
+            one = jax.tree.map(lambda x: x[slot], self._slot_states)
+            while True:
+                try:
+                    snap, _ = self.kv_store.put(one)
+                    break
+                except pagedlib.PoolExhausted:
+                    # prefix snapshots are recomputable; a live request
+                    # is not
+                    if not self.prefix_cache.evict_lru():
+                        return None
+            req._resume = (snap, int(self._slot_tokens[slot]))
         self.scheduler.requeue(slot)
         self.preemptions += 1
         return req
@@ -620,36 +946,71 @@ class Engine:
         self._maybe_preempt()
         finished: List[Request] = []
 
+        def retire(slot):
+            if self._paged_in_model:
+                self._release_lane(slot)
+            return self.scheduler.retire(slot)
+
         for slot, req in self.scheduler.admit():
             if req._resume is not None:
-                # preempted request: gather the parked state back from the
-                # pool and continue decoding exactly where it stopped (the
-                # last sampled token re-enters the vmapped decode below)
-                snap, tok = req._resume
-                state1 = self.kv_store.get(snap)
-                self.kv_store.release(snap)
+                # preempted request: continue exactly where it stopped (the
+                # last sampled token re-enters the batched decode below)
+                parked, tok = req._resume
                 req._resume = None
-                self._slot_states = self._splice(self._slot_states, state1,
-                                                 jnp.asarray(slot, jnp.int32))
+                if self._paged_in_model:
+                    # table handoff: point the lane at the parcel's blocks
+                    # (every write will CoW into the lane's reserved set)
+                    # and move the parcel's pool holds onto the lane
+                    self._slot_states, sub = self._lane_take(
+                        self._slot_states, jnp.asarray(slot, jnp.int32))
+                    sub = self._set_lane_tables(sub, parked.snap)
+                    self._lane_shared[slot] = np.concatenate(
+                        [self._lane_shared[slot], parked.held])
+                    self._lane_charged[slot] = np.concatenate(
+                        [self._lane_charged[slot], parked.held_charged])
+                    self._slot_states = self._lane_put(
+                        self._slot_states, sub, jnp.asarray(slot, jnp.int32))
+                else:
+                    state1 = self.kv_store.get(parked)
+                    self.kv_store.release(parked)
+                    self._slot_states = self._splice(
+                        self._slot_states, state1,
+                        jnp.asarray(slot, jnp.int32))
                 self._slot_tokens[slot] = tok
                 continue
-            logits, state1 = self._prefill_request(req)
-            self._slot_states = self._splice(self._slot_states, state1,
-                                             jnp.asarray(slot, jnp.int32))
+            if self._paged_in_model:
+                logits, sub = self._prefill_request_paged(req, slot)
+                self._slot_states = self._lane_put(
+                    self._slot_states, sub, jnp.asarray(slot, jnp.int32))
+            else:
+                logits, state1 = self._prefill_request(req)
+                self._slot_states = self._splice(self._slot_states, state1,
+                                                 jnp.asarray(slot, jnp.int32))
             self._record(req, self._sample_next(req, logits))
             if req.done:
-                finished.append(self.scheduler.retire(slot))
+                finished.append(retire(slot))
 
         if self.scheduler.running:
-            toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None, None]
-            logits, self._slot_states = self._slot_step(
-                self.params, self._slot_states, toks)
-            logits = np.asarray(logits)          # [max_batch, 1, V]
+            if self._paged_in_model:
+                # ONE batched paged decode step — the pool is shared across
+                # lanes, so the slot axis is real batch, not a vmap; each
+                # lane advances on its own pos/length clock.
+                toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None]
+                logits, self._slot_states = self._paged_step(
+                    self.params, state=self._slot_states, tokens=toks)
+                logits = np.asarray(logits)      # [max_batch, V]
+            else:
+                toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None, None]
+                logits, self._slot_states = self._slot_step(
+                    self.params, self._slot_states, toks)
+                logits = np.asarray(logits)      # [max_batch, 1, V]
             for slot in sorted(self.scheduler.running):
                 req = self.scheduler.running[slot]
-                self._record(req, self._sample_next(req, logits[slot]))
+                self._record(req,
+                             self._sample_next(req,
+                                               logits[slot].reshape(1, -1)))
                 if req.done:
-                    finished.append(self.scheduler.retire(slot))
+                    finished.append(retire(slot))
         return finished
 
     def run(self) -> List[Request]:

@@ -170,7 +170,29 @@ class PrefixCache:
                                 nbytes=nbytes)
         if entry is None:
             return None
-        h = _digest(tokens)
+        return self._register(entry)
+
+    def insert_snapshot(self, tokens, snap, logits,
+                        owned_bytes: int) -> Optional[PrefixEntry]:
+        """Register an already-built snapshot (the in-model paged engine's
+        refcount forks of live lane tables — :class:`repro.core.paged.
+        TableSnapshot`). ``owned_bytes`` is the snapshot's unique block cost
+        (the blocks whose ownership it took over); metadata and logits ride
+        on top. The snapshot arrives holding its own pool references; a
+        refused insert releases them."""
+        tokens = np.array(tokens, np.int32).reshape(-1)
+        nbytes = owned_bytes + snap.dense_bytes + tree_bytes(logits)
+        if nbytes > self.max_bytes:
+            self.store.release(snap)
+            return None
+        return self._register(PrefixEntry(tokens=tokens, state=None,
+                                          logits=logits, nbytes=nbytes,
+                                          snap=snap))
+
+    def _register(self, entry: PrefixEntry) -> PrefixEntry:
+        """LRU-register an entry (same-prefix replacement, byte-budget
+        eviction, peak tracking)."""
+        h = _digest(entry.tokens)
         old = self._entries.pop(h, None)
         if old is not None:
             self._drop_entry(old)
@@ -179,7 +201,12 @@ class PrefixCache:
                                                             0) + 1
         self._nbytes += entry.nbytes
         self.insertions += 1
-        while self._nbytes > self.max_bytes:
+        # the `self._entries` guard matters for in-model table snapshots:
+        # evicting an entry whose blocks a RUNNING lane still reads frees
+        # nothing yet (the charge stays until the lane retires and calls
+        # :meth:`settle`), so _nbytes can transiently exceed the budget
+        # with no entry left to evict.
+        while self._nbytes > self.max_bytes and self._entries:
             _, evicted = self._entries.popitem(last=False)
             self._drop_entry(evicted)
             self.evictions += 1
@@ -189,6 +216,18 @@ class PrefixCache:
         # kv_backend settings (benchmarks/throughput.py paged_vs_dense)
         self.peak_bytes = max(self.peak_bytes, self._nbytes)
         return entry
+
+    def settle(self, nbytes: int) -> None:
+        """Uncharge bytes that left residency *outside* an entry drop.
+
+        In-model paged serving: evicting a ``TableSnapshot`` entry while a
+        RUNNING lane still reads its blocks frees nothing at drop time —
+        the charge stays (bounding resident bytes), and the blocks only
+        free when the lane retires. The engine measures exactly those
+        bytes at retirement (charged blocks whose last reference the lane
+        held) and settles them here; without this, the charge would leak
+        and monotonically shrink the effective LRU budget."""
+        self._nbytes = max(0, self._nbytes - int(nbytes))
 
     def evict_lru(self) -> bool:
         """Evict the least-recently-used entry (used for pool-pressure

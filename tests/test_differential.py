@@ -18,10 +18,18 @@ agree:
     decode path,
 (c) the *paged* KV backend matches the *dense* backend token-for-token
     when requests actually exercise the paged machinery (shared-prefix
-    prompt caching: snapshots page into the block pool and gather back on
-    every hit) — with and without compaction firing, for every policy.
-    This is the gather/scatter/CoW exactness contract of
-    ``repro.core.paged`` at the serving level.
+    prompt caching) — with and without compaction firing, for every policy.
+    Since the in-model paged decode landed, the paged engine decodes
+    *through* the block tables end-to-end: prefix hits splice shared
+    blocks into the live state, snapshots are refcount forks, and there is
+    no gather-to-dense shim anywhere in the decode path — so (c) is the
+    CoW/compaction/attention exactness contract of the whole in-model
+    subsystem,
+(d) the dedicated in-model leg: for every policy x {compaction on, off},
+    paged-in-model serving equals dense serving token-for-token on mixed
+    cold + prefix-hit traffic, the engine verifiably decoded through
+    ``PagedKVCache`` tables (never a dense ``KVCache`` slot state), and
+    the pool's refcounts balance after every request retires.
 """
 import dataclasses
 
@@ -30,6 +38,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.core import paged as pagedlib
 from repro.core.policy import policy_names
 from repro.models import model as M
 from repro.serving.engine import Engine
@@ -147,6 +156,82 @@ def test_paged_backend_matches_dense_prefix_sharing(policy, small_model):
     for d, p in zip(dense_reqs, paged_reqs):
         np.testing.assert_array_equal(p.tokens, d.tokens)
     assert paged_eng.bytes_shared > 0     # the paged path actually engaged
+
+
+@pytest.mark.parametrize("compaction", [False, True],
+                         ids=["no-compaction", "compaction"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_in_model_matches_dense(policy, compaction, small_model):
+    """(d) the in-model leg: mixed traffic (two prefix-sharing cached
+    requests + one cold request) served by ``kv_backend="paged"`` must
+    equal the dense backend token-for-token for every registered policy,
+    with and without compaction firing mid-stream — while provably
+    decoding through block tables (no dense ``KVCache`` in the slot
+    states, so no gather shim can hide in the path) and conserving pool
+    refcounts once every request retires."""
+    cfg, params = small_model
+    budget = 24 if compaction else 48
+    c = with_policy(cfg, policy, budget)
+    # "full" never evicts: give it room so over-budget prompts still fit
+    n_slots = 96 if (compaction and policy == "full") else budget
+    rng = np.random.default_rng(6)
+    base = 30 if compaction else 12     # > budget => prefill compaction
+    shared = rng.integers(0, cfg.vocab_size, (base,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                                    (3 + i,))])
+               for i in range(2)]
+    prompts.append(rng.integers(0, cfg.vocab_size, (base + 7,)))  # cold
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=n_slots, max_batch=2,
+                     kv_backend=kv_backend)
+        reqs = [eng.submit(p, 6, cache_prefix=(i < 2))
+                for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, reqs
+
+    _, dense_reqs = serve("dense")
+    eng, paged_reqs = serve("paged")
+    for d, p in zip(dense_reqs, paged_reqs):
+        np.testing.assert_array_equal(p.tokens, d.tokens)
+    # the engine really decoded in-model: every slot-state layer cache is a
+    # block table, the shared pool planes ride in the state, and no dense
+    # KVCache exists anywhere in the serving state
+    assert eng._paged_in_model
+    leaves = list(eng._slot_states.blocks.values()) \
+        + list(eng._slot_states.tail.values())
+    assert leaves and all(isinstance(v, pagedlib.PagedKVCache)
+                          for v in leaves)
+    assert not any(isinstance(v, M.KVCache) for v in leaves)
+    assert eng._slot_states.kv_pool is not None
+    # refcount conservation: after all retires only the lanes' permanent
+    # reservation and the prefix-cache entries hold pool blocks
+    pagedlib.check_invariants(eng.kv_store.pool)
+    eng.prefix_cache.clear()
+    pagedlib.check_invariants(eng.kv_store.pool)
+    assert eng.kv_bytes_in_use == eng.lane_owned_bytes
+
+
+def test_paged_full_policy_at_capacity_matches_dense(small_model):
+    """(d') the non-evicting baseline decoding past its buffer: the dense
+    cache's append clamp-overwrites the newest slot; paged must mirror it
+    token-for-token while copy-on-write keeps the clamped writes out of
+    snapshot-shared blocks."""
+    cfg, params = small_model
+    c = with_policy(cfg, "full", 24)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, (20,))    # 20 + 8 > budget 24
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=24, max_batch=1,
+                     kv_backend=kv_backend)
+        req = eng.submit(prompt, 8, cache_prefix=True)
+        eng.run()
+        if kv_backend == "paged":
+            pagedlib.check_invariants(eng.kv_store.pool)
+        return req.tokens
+
+    np.testing.assert_array_equal(serve("paged"), serve("dense"))
 
 
 @pytest.mark.slow   # over-budget prompts: chunked prefill compacts per chunk

@@ -206,6 +206,210 @@ def test_allocator_invariants_random_churn():
 
 
 # --------------------------------------------------------------------------- #
+# In-model live tables: append/compact/truncate/fork/splice churn vs the
+# dense oracle, with engine-style host refcount bookkeeping (hypothesis)
+# --------------------------------------------------------------------------- #
+IM_SLOTS, IM_BS = 12, 4
+IM_SPEC = ladder.make_spec(
+    LaCacheConfig(budget=IM_SLOTS, n_sink=2, n_recent=3, chunk=2).resolve(3), 3)
+
+
+def _run_inmodel_ops(ops):
+    """Drive one lane's live in-model table through a random op interleaving
+    while mirroring every mutation on a dense KVCache oracle and the
+    engine's host-side refcount protocol (owned reserve set, shared splice
+    holds, snapshot forks). Invariants checked after every op:
+
+    * pool refcounts conserve blocks (no double-free, no leak),
+    * the gathered table view equals the dense oracle bit-for-bit,
+    * snapshots forked earlier are never corrupted by later lane writes
+      (copy-on-write isolation).
+    """
+    rng = np.random.default_rng(17)
+    mb = paged.blocks_for(IM_SLOTS, IM_BS)
+    store = paged.PagedStateStore(64, IM_BS, KVH, HD, jnp.float32)
+    owned = store.alloc_blocks(mb)
+    kv = paged.PoolKV(k=store.pool.k, v=store.pool.v)
+    st = paged.PagedKVCache(
+        blocks=jnp.full((1, mb), -1, jnp.int32),
+        owned=jnp.asarray(owned, jnp.int32)[None],
+        pos=jnp.full((1, IM_SLOTS), -1, jnp.int32),
+        length=jnp.zeros((1,), jnp.int32), scores=None)
+    oracle = cachelib.init_cache(1, IM_SLOTS, KVH, HD, jnp.float32)
+    lane_shared = np.zeros((0,), np.int64)
+    snaps = []          # (blocks np, pos np, length, oracle copy)
+    next_pos = 0
+
+    def check_oracle():
+        paged.check_invariants(store.pool)
+        gk, gv = paged.paged_gather_view(kv, st, IM_SLOTS)
+        L = int(oracle.length)
+        assert int(st.length[0]) == L
+        np.testing.assert_array_equal(np.asarray(gk[0, :L]),
+                                      np.asarray(oracle.k[0, :L]))
+        np.testing.assert_array_equal(np.asarray(gv[0, :L]),
+                                      np.asarray(oracle.v[0, :L]))
+        np.testing.assert_array_equal(np.asarray(st.pos[0]),
+                                      np.asarray(oracle.pos))
+
+    for name, arg in ops:
+        if name == "append":
+            room = IM_SLOTS - int(st.length[0])
+            n = min(max(1, arg), room)
+            if n <= 0:
+                continue
+            kn = jnp.asarray(rng.normal(size=(1, n, KVH, HD)), jnp.float32)
+            vn = jnp.asarray(rng.normal(size=(1, n, KVH, HD)), jnp.float32)
+            pn = (next_pos + jnp.arange(n, dtype=jnp.int32))
+            next_pos += n
+            kv, st = paged.paged_append(kv, st, kn, vn, pn[None])
+            oracle = cachelib.append(oracle, kn, vn, pn)
+        elif name == "compact":
+            n_inc = max(1, arg % 4)
+            kv, st = paged.paged_maybe_compact(
+                kv, st, IM_SPEC, 1, "lacache", n_inc, rope_theta=1e4)
+            oracle = cachelib.maybe_compact(
+                oracle, IM_SPEC, 1, "lacache", n_inc, rope_theta=1e4)
+        elif name == "truncate":
+            t = arg % (IM_SLOTS + 1)
+            st = paged.paged_truncate(st, jnp.asarray([t], jnp.int32), IM_BS)
+            oracle = cachelib.truncate(oracle, t)
+        elif name == "fork":
+            # engine-style refcount fork: snapshot holds every mapped
+            # block; the lane's owned mapped blocks are swapped for fresh
+            # reserves so later writes CoW away from the forked content
+            blocks = np.asarray(st.blocks[0])
+            ownd = np.asarray(st.owned[0])
+            mapped = blocks >= 0
+            swap = mapped & (blocks == ownd)
+            try:
+                fresh = store.alloc_blocks(int(swap.sum()))
+            except paged.PoolExhausted:
+                continue
+            new_owned = ownd.copy()
+            new_owned[swap] = fresh
+            store.retain_blocks(blocks[mapped])
+            lane_shared = np.concatenate([lane_shared, blocks[swap]])
+            st = st._replace(owned=jnp.asarray(new_owned, jnp.int32)[None])
+            gk, gv = paged.paged_gather_view(kv, st, IM_SLOTS)
+            snaps.append((blocks.copy(), np.asarray(st.pos[0]).copy(),
+                          int(st.length[0]), np.asarray(gk[0]).copy(),
+                          np.asarray(gv[0]).copy()))
+        elif name == "splice" and snaps:
+            # retire the lane's occupant and splice a snapshot in shared
+            sblocks, spos, slen, sk, sv = snaps[arg % len(snaps)]
+            store.release_blocks(lane_shared)
+            ids = sblocks[sblocks >= 0]
+            store.retain_blocks(ids)
+            lane_shared = ids.astype(np.int64).copy()
+            st = st._replace(blocks=jnp.asarray(sblocks, jnp.int32)[None],
+                             pos=jnp.asarray(spos, jnp.int32)[None],
+                             length=jnp.asarray([slen], jnp.int32))
+            oracle = cachelib.KVCache(
+                k=jnp.asarray(sk, jnp.float32)[None],
+                v=jnp.asarray(sv, jnp.float32)[None],
+                pos=jnp.asarray(spos, jnp.int32),
+                length=jnp.asarray(slen, jnp.int32), scores=None)
+            next_pos = max(next_pos, slen)
+        check_oracle()
+
+    # CoW isolation: every snapshot's view is intact despite later writes
+    for sblocks, spos, slen, sk, sv in snaps:
+        view = paged.PagedKVCache(
+            blocks=jnp.asarray(sblocks, jnp.int32)[None],
+            owned=st.owned, pos=jnp.asarray(spos, jnp.int32)[None],
+            length=jnp.asarray([slen], jnp.int32), scores=None)
+        gk, gv = paged.paged_gather_view(kv, view, IM_SLOTS)
+        np.testing.assert_array_equal(np.asarray(gk[0, :slen]), sk[:slen])
+        np.testing.assert_array_equal(np.asarray(gv[0, :slen]), sv[:slen])
+
+    # conservation: release every hold -> only the free list owns blocks
+    store.release_blocks(lane_shared)
+    store.release_blocks(np.asarray(st.owned[0]))
+    for sblocks, *_ in snaps:
+        store.release_blocks(sblocks[sblocks >= 0])
+    paged.check_invariants(store.pool)
+    assert paged.blocks_in_use(store.pool) == 0
+
+
+def test_inmodel_overflow_append_clamps_like_dense_without_corruption():
+    """An append at ``length == n_slots`` (a never-evicting policy at
+    capacity, or a retired lane still ticking) must mirror the dense
+    twin's dynamic_update_slice clamp — the newest K/V overwrites the last
+    slot — while the copy-on-write redirect keeps the clamped write inside
+    the lane's reserved blocks, never in a block a snapshot shares."""
+    rng = np.random.default_rng(23)
+    mb = paged.blocks_for(IM_SLOTS, IM_BS)
+    store = paged.PagedStateStore(32, IM_BS, KVH, HD, jnp.float32)
+    owned = store.alloc_blocks(mb)
+    shared = store.alloc_blocks(mb)       # a "snapshot's" blocks
+    kv = paged.PoolKV(k=store.pool.k, v=store.pool.v)
+    marker = np.asarray(rng.normal(size=(IM_SLOTS, KVH, HD)), np.float32)
+    rows = shared[np.arange(IM_SLOTS) // IM_BS] * IM_BS \
+        + np.arange(IM_SLOTS) % IM_BS
+    kv = paged.PoolKV(k=kv.k.reshape(-1, KVH, HD)
+                      .at[rows].set(jnp.asarray(marker))
+                      .reshape(kv.k.shape), v=kv.v)
+    # lane spliced to the full shared table (length == n_slots exactly)
+    st = paged.PagedKVCache(
+        blocks=jnp.asarray(shared, jnp.int32)[None],
+        owned=jnp.asarray(owned, jnp.int32)[None],
+        pos=jnp.arange(IM_SLOTS, dtype=jnp.int32)[None],
+        length=jnp.asarray([IM_SLOTS], jnp.int32), scores=None)
+    kn = jnp.ones((1, 1, KVH, HD), jnp.float32) * 777.0
+    kv2, st2 = paged.paged_append(kv, st, kn, kn,
+                                  jnp.asarray([[IM_SLOTS]], jnp.int32))
+    # the snapshot's view of its own blocks is bit-identical (CoW'd away)
+    got_snap = paged.paged_gather_view(kv2, st, IM_SLOTS)[0][0]
+    np.testing.assert_array_equal(np.asarray(got_snap), marker)
+    # the lane's view matches the dense oracle's clamped append exactly
+    dense = cachelib.KVCache(
+        k=jnp.asarray(marker)[None], v=jnp.zeros((1, IM_SLOTS, KVH, HD)),
+        pos=jnp.arange(IM_SLOTS, dtype=jnp.int32),
+        length=jnp.asarray(IM_SLOTS, jnp.int32))
+    dref = cachelib.append(dense, kn, kn, jnp.asarray([IM_SLOTS], jnp.int32))
+    got_lane = paged.paged_gather_view(kv2, st2, IM_SLOTS)[0][0]
+    np.testing.assert_array_equal(np.asarray(got_lane),
+                                  np.asarray(dref.k[0]))
+    np.testing.assert_array_equal(np.asarray(st2.pos[0]),
+                                  np.asarray(dref.pos))
+    assert int(st2.length[0]) == int(dref.length)
+
+
+def test_inmodel_table_churn_deterministic():
+    """A fixed, branch-covering interleaving (runs without hypothesis):
+    append -> fork -> CoW append -> overflow compaction -> truncate ->
+    splice back -> append over the spliced (shared) table."""
+    _run_inmodel_ops([
+        ("append", 7), ("fork", 0), ("append", 3), ("compact", 1),
+        ("append", 6), ("compact", 2), ("truncate", 5), ("fork", 1),
+        ("splice", 0), ("append", 4), ("compact", 1), ("splice", 1),
+        ("append", 2),
+    ])
+
+
+def test_inmodel_table_invariants_random_churn():
+    """Hypothesis: random interleavings of append/compact/truncate/fork/
+    prefix-splice on a live in-model table never double-free, never leak
+    (pool refcount conservation), and always match the dense oracle after
+    gather."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    op = st_.tuples(
+        st_.sampled_from(["append", "compact", "truncate", "fork",
+                          "splice"]),
+        st_.integers(0, 11))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st_.lists(op, min_size=1, max_size=24))
+    def run(ops):
+        _run_inmodel_ops(ops)
+
+    run()
+
+
+# --------------------------------------------------------------------------- #
 # Kernel: Pallas paged decode vs paged reference vs dense decode
 # --------------------------------------------------------------------------- #
 def _paged_layout(rng, b, n_slots, bs, kvh, d, lengths):
@@ -347,7 +551,10 @@ def test_paged_accounting_tracks_residency_under_eviction(small_model):
     """Evicting an ancestor snapshot must not uncharge blocks a descendant
     still holds: the cache's nbytes tracks resident pool bytes plus dense
     overhead exactly, through any eviction order (ownership transfers to
-    survivors instead of vanishing)."""
+    survivors instead of vanishing). Under in-model paged decode the batch
+    lanes hold a constant reserved block set (``lane_owned_bytes``) that is
+    never charged to the prefix cache, so the attributable basis excludes
+    it — and after every entry evicts, only that reservation remains."""
     from repro.serving.prefix import tree_bytes
     cfg, params = small_model
     eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged")
@@ -358,7 +565,7 @@ def test_paged_accounting_tracks_residency_under_eviction(small_model):
     assert len(pc) == 3
 
     def attributable():
-        return store.bytes_in_use + sum(
+        return store.bytes_in_use - eng.lane_owned_bytes + sum(
             e.snap.dense_bytes + tree_bytes(e.logits)
             for e in pc._entries.values())
 
@@ -367,7 +574,37 @@ def test_paged_accounting_tracks_residency_under_eviction(small_model):
         assert pc.evict_lru()
         assert pc.nbytes == attributable()
         paged.check_invariants(store.pool)
-    assert pc.nbytes == 0 and store.bytes_in_use == 0
+    assert pc.nbytes == 0
+    assert store.bytes_in_use == eng.lane_owned_bytes
+
+
+def test_midrun_entry_eviction_settles_charge_at_retirement(small_model):
+    """Evicting snapshot entries while the forking request still RUNS frees
+    no blocks (the lane keeps reading them), so the cache's byte charge
+    must wait — and then settle exactly when the lane retires. Without
+    settlement the charge leaks, the effective LRU budget shrinks to
+    nothing, and the eviction loop eventually underflows the entry map."""
+    from repro.serving.prefix import tree_bytes
+    cfg, params = small_model
+    # a byte budget only big enough for ~one snapshot: every insert evicts
+    # the previous entry while its blocks are still lane-held
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 prefix_cache_bytes=40_000)
+    rng = np.random.default_rng(21)
+    for w in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, (40,))
+        eng.submit(prompt, 3, cache_prefix=True)
+        eng.run()                        # retires inside; charge settles
+        pc, store = eng.prefix_cache, eng.kv_store
+        assert eng.prefix_cache.evictions > 0 or w == 0
+        attributable = store.bytes_in_use - eng.lane_owned_bytes + sum(
+            e.snap.dense_bytes + tree_bytes(e.logits)
+            for e in pc._entries.values())
+        assert pc.nbytes == attributable, (w, pc.nbytes, attributable)
+        paged.check_invariants(store.pool)
+    eng.prefix_cache.clear()
+    assert eng.prefix_cache.nbytes == 0
+    assert eng.kv_bytes_in_use == eng.lane_owned_bytes
 
 
 def test_preemption_resumes_exactly(small_model):
