@@ -134,6 +134,79 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
     }
 
 
+def hybrid_paged_vs_dense(budget=64, n_requests=6, prefix_len=96,
+                          tail_len=12, max_new=8):
+    """The paged-vs-dense scenario on a *hybrid* (mamba + ring + global)
+    stack — the architectures the in-model paged path newly covers.
+
+    Same shared-prefix wave protocol as :func:`paged_vs_dense`; the model
+    is a freshly-initialized hybrid miniature (token agreement between the
+    backends plus throughput/byte telemetry are the signal here — sample
+    quality is irrelevant to the serving-path contract). Emits the
+    machine-readable trajectory to ``results/BENCH_hybrid_paged.json``.
+    """
+    from repro.configs.base import LaCacheConfig, ModelConfig
+    cfg = ModelConfig(
+        name="bench-hybrid-mini", arch_type="hybrid", n_layers=8,
+        d_model=128, n_heads=8, n_kv_heads=4, head_dim=16, d_ff=384,
+        vocab_size=common.VOCAB, dtype="float32", rope_theta=1e4,
+        attn_every=2, local_global_pattern=3, sliding_window=32,
+        d_state=16, d_conv=4,
+        lacache=LaCacheConfig(budget=budget, n_sink=4, n_recent=16, chunk=4))
+    params, _ = M.init(cfg, jax.random.PRNGKey(3))
+    co = common.corpus()
+    shared = co.stream(prefix_len, seed=950)
+
+    def wave(seed0):
+        return [np.concatenate([shared, co.stream(tail_len, seed=seed0 + i)])
+                for i in range(n_requests)]
+
+    def serve(kv_backend):
+        eng = Engine(cfg, params, budget=budget, max_batch=4,
+                     kv_backend=kv_backend)
+        for p in wave(951):
+            eng.submit(p, max_new, cache_prefix=True)
+        t0 = time.perf_counter()
+        done = eng.run()
+        cold = sum(len(r.output_tokens) for r in done) \
+            / (time.perf_counter() - t0)
+        for p in wave(971):
+            eng.submit(p, 4 * max_new, cache_prefix=True)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.output_tokens) for r in done)
+        return eng, [r.tokens.tolist() for r in done], cold, n_tok / dt
+
+    dense_eng, dense_toks, dense_cold, dense_tps = serve("dense")
+    paged_eng, paged_toks, paged_cold, paged_tps = serve("paged")
+    assert paged_eng._paged_in_model, "hybrid must take the in-model path"
+    assert dense_toks == paged_toks, "backends must agree token-for-token"
+    out = {
+        "scenario": "hybrid_paged_vs_dense",
+        "arch": {"attn_every": cfg.attn_every,
+                 "local_global_pattern": cfg.local_global_pattern,
+                 "sliding_window": cfg.sliding_window,
+                 "n_layers": cfg.n_layers},
+        "paged_in_model": paged_eng._paged_in_model,
+        "tok_per_s": {"dense": dense_tps, "paged": paged_tps},
+        "tok_per_s_incl_compile": {"dense": dense_cold, "paged": paged_cold},
+        "peak_kv_bytes": {"dense": dense_eng.prefix_cache.peak_bytes,
+                          "paged": paged_eng.prefix_cache.peak_bytes},
+        "paged_over_dense_tok_per_s": paged_tps / max(dense_tps, 1e-9),
+        "paged_over_dense_peak_kv":
+            paged_eng.prefix_cache.peak_bytes
+            / max(dense_eng.prefix_cache.peak_bytes, 1),
+        "bytes_shared": paged_eng.bytes_shared,
+        "kv_bytes_in_use": paged_eng.kv_bytes_in_use,
+        "lane_owned_bytes": paged_eng.lane_owned_bytes,
+    }
+    with open(os.path.join(common.RESULTS, "BENCH_hybrid_paged.json"),
+              "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
 def main(quick: bool = False):
     cfg, params = common.bench_model()
     budget = 96
@@ -161,6 +234,14 @@ def main(quick: bool = False):
                         n_requests=4 if quick else 6,
                         prefix_len=128 if quick else 192)
     out["paged_vs_dense"] = pd
+    hp = hybrid_paged_vs_dense(n_requests=4 if quick else 6,
+                               prefix_len=64 if quick else 96)
+    out["hybrid_paged_vs_dense"] = hp
+    print(f"{'hybrid-paged':10s} {hp['tok_per_s']['dense']:.1f} -> "
+          f"{hp['tok_per_s']['paged']:.1f} tok/s steady-state; "
+          f"peak KV {hp['peak_kv_bytes']['dense']/1e6:.2f} -> "
+          f"{hp['peak_kv_bytes']['paged']/1e6:.2f} MB "
+          f"({hp['bytes_shared']/1e6:.2f} MB shared)")
     print(f"{'paged-vs-dense':10s} peak KV bytes "
           f"{pd['peak_kv_bytes_dense']/1e6:.2f} MB -> "
           f"{pd['peak_kv_bytes_paged']/1e6:.2f} MB "

@@ -486,6 +486,42 @@ class PagedKVCache(NamedTuple):
         return self.blocks.shape[-1]
 
 
+class PagedRingCache(NamedTuple):
+    """Batched in-model paged sliding-window (ring) layer cache.
+
+    The ring invariant ``slot == pos % window`` is carried as *per-lane
+    metadata alongside a block table* into the shared pool: logical ring
+    slot ``j`` lives at pool row ``blocks[j // bs] * bs + j % bs`` (the
+    residue-class index map), so windowed attention reads straight from
+    the pool planes with no separate dense ring buffer. Two structural
+    facts the ops below rely on:
+
+    * occupied slots always form the prefix ``[0, min(next_pos, window))``
+      (slot ``j`` is occupied iff some position ``p ≡ j (mod w)`` with
+      ``p < next_pos`` exists, i.e. iff ``j < min(next_pos, w)``),
+    * after the in-step append, every occupied slot is inside the window
+      (the append overwrote exactly the slot whose entry fell out).
+
+    ``owned`` is the lane's reserved copy-on-write destination set, exactly
+    as in :class:`PagedKVCache`; a table entry is writable iff
+    ``blocks[i] == owned[i]``, so entries spliced from a prefix snapshot
+    (or a preemption parcel) are CoW-redirected on first write.
+    """
+
+    blocks: jnp.ndarray     # [..., b, max_blocks] int32, -1 unmapped
+    owned: jnp.ndarray      # [..., b, max_blocks] int32 reserved ids
+    pos: jnp.ndarray        # [..., b, window] int32, -1 empty
+    next_pos: jnp.ndarray   # [..., b] int32: global position of next token
+
+    @property
+    def window(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.blocks.shape[-1]
+
+
 def _flat_rows(x: jnp.ndarray) -> jnp.ndarray:
     """[n_blocks, bs, ...] -> [n_blocks * bs, ...] row-addressable view."""
     return x.reshape((-1,) + x.shape[2:])
@@ -565,6 +601,80 @@ def paged_append(kv: PoolKV, st: PagedKVCache, k_new: jnp.ndarray,
     pos = st.pos.at[lane, slots].set(pos_new.astype(jnp.int32), mode="drop")
     return (PoolKV(k=kflat.reshape(kv.k.shape), v=vflat.reshape(kv.v.shape)),
             st._replace(blocks=blocks, pos=pos, length=L + t))
+
+
+def paged_ring_append(kv: PoolKV, st: PagedRingCache, k_new: jnp.ndarray,
+                      v_new: jnp.ndarray) -> Tuple[PoolKV, PagedRingCache]:
+    """Append one token per lane at ring slot ``next_pos % window``.
+
+    The lane-batched twin of :func:`repro.models.layers.ring_append`:
+    k_new/v_new are [b, 1, kv, hd]. The written block is CoW-redirected to
+    the lane's ``owned`` reserved block when it is shared (spliced from a
+    snapshot / preemption parcel): the block's other rows are copied first,
+    so the snapshot's view stays bit-intact while the lane's view carries
+    the new token. All scatters hit lane-owned blocks only.
+    """
+    b = st.next_pos.shape[0]
+    w = st.window
+    bs = kv.block_size
+    mb = st.max_blocks
+    nrows = kv.k.shape[0] * bs                       # OOB scatter sentinel
+    slot = st.next_pos % w                           # [b]
+    bi = jnp.clip(slot // bs, 0, mb - 1)
+    off = slot % bs
+    kflat, vflat = _flat_rows(kv.k), _flat_rows(kv.v)
+
+    # --- copy-on-write the written block when it is not ours -------------- #
+    cur = jnp.take_along_axis(st.blocks, bi[:, None], axis=1)[:, 0]   # [b]
+    own = jnp.take_along_axis(st.owned, bi[:, None], axis=1)[:, 0]
+    r = jnp.arange(bs)
+    cow = ((cur != own) & (cur >= 0))[:, None] & (r[None] != off[:, None])
+    src = jnp.clip(cur, 0)[:, None] * bs + r[None]
+    dst = jnp.where(cow, own[:, None] * bs + r[None], nrows)
+    copied_k, copied_v = kflat[src], vflat[src]
+    kflat = kflat.at[dst].set(copied_k, mode="drop")
+    vflat = vflat.at[dst].set(copied_v, mode="drop")
+    lane = jnp.arange(b)
+    blocks = st.blocks.at[lane, bi].set(own)
+
+    # --- write the new row ------------------------------------------------ #
+    wrow = own * bs + off                            # [b]
+    kflat = kflat.at[wrow].set(k_new[:, 0].astype(kflat.dtype))
+    vflat = vflat.at[wrow].set(v_new[:, 0].astype(vflat.dtype))
+    pos = st.pos.at[lane, slot].set(st.next_pos)
+    return (PoolKV(k=kflat.reshape(kv.k.shape), v=vflat.reshape(kv.v.shape)),
+            st._replace(blocks=blocks, pos=pos, next_pos=st.next_pos + 1))
+
+
+def paged_ring_rebuild(kv: PoolKV, st: PagedRingCache, rows_k: jnp.ndarray,
+                       rows_v: jnp.ndarray, new_pos: jnp.ndarray,
+                       new_next: jnp.ndarray) -> Tuple[PoolKV, PagedRingCache]:
+    """Scatter a fully-rebuilt ring into the lane's ``owned`` blocks.
+
+    The chunked (streaming-prefill) path rewrites every live ring slot by
+    residue-class gather from ``[old ring || chunk]``; since the rebuild
+    touches all live slots anyway, the whole table simply redirects to the
+    reserved set (no partial CoW needed — shared blocks are left intact for
+    their snapshots). rows_k/rows_v: [b, window, kv, hd] rebuilt content;
+    new_pos: [b, window] (-1 = empty); new_next: [b].
+    """
+    b, w = new_pos.shape
+    bs = kv.block_size
+    mb = st.max_blocks
+    nrows = kv.k.shape[0] * bs
+    slot = jnp.arange(w)
+    live = new_pos >= 0                                        # [b, w]
+    dst_blk = jnp.take(st.owned, jnp.clip(slot // bs, 0, mb - 1), axis=1)
+    dst = jnp.where(live, dst_blk * bs + slot[None] % bs, nrows)
+    kflat, vflat = _flat_rows(kv.k), _flat_rows(kv.v)
+    kflat = kflat.at[dst].set(rows_k.astype(kflat.dtype), mode="drop")
+    vflat = vflat.at[dst].set(rows_v.astype(vflat.dtype), mode="drop")
+    occ = jnp.minimum(new_next, w)                             # [b]
+    blocks = jnp.where(jnp.arange(mb)[None] * bs < occ[:, None],
+                       st.owned, -1)
+    return (PoolKV(k=kflat.reshape(kv.k.shape), v=vflat.reshape(kv.v.shape)),
+            st._replace(blocks=blocks, pos=new_pos.astype(jnp.int32),
+                        next_pos=new_next.astype(jnp.int32)))
 
 
 def paged_truncate(st: PagedKVCache, length, block_size: int) -> PagedKVCache:
@@ -751,14 +861,22 @@ class TableSnapshot:
 
     tables: dict
     state_pos: "np.ndarray"       # the lane's absolute next-token position
-    dense_bytes: int = 0          # metadata bytes riding along (pos/scores)
+    dense_bytes: int = 0          # bytes riding along dense: table metadata
+    #                               (pos/scores/next_pos) AND whole SSM
+    #                               states (conv/ssm) — pool blocks carry
+    #                               only KV content, so per-lane SSM leaves
+    #                               must be charged here or hybrid
+    #                               snapshots are under-accounted
     released: bool = False
 
     def block_ids(self) -> "np.ndarray":
         ids: List[int] = []
         for section in self.tables.values():
             for layer in section.values():
-                blk = np.asarray(layer["blocks"]).reshape(-1)
+                blk = layer.get("blocks")
+                if blk is None:           # SSM layers page nothing
+                    continue
+                blk = np.asarray(blk).reshape(-1)
                 ids.extend(blk[blk >= 0].tolist())
         return np.asarray(ids, np.int64)
 

@@ -202,6 +202,38 @@ def _xla_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return _masked_decode_attention(q, k, v, valid, sm_scale=sm_scale)
 
 
+def paged_ring_decode_attention(q, k_pool, v_pool, block_tables, ring_pos,
+                                next_pos, *, window: int, sm_scale=None,
+                                impl: Optional[str] = None):
+    """Sliding-window (ring) decode through a residue-class block table.
+
+    The windowed twin of :func:`paged_decode_attention` for in-model paged
+    ring layers: logical ring slot j lives at pool row
+    ``tables[j // bs] * bs + j % bs`` and validity comes from the per-slot
+    positions (``ring_pos``/``next_pos``) instead of an occupied-prefix
+    length. Contract: callers invoke this *after* the in-step ring append,
+    at which point the ring invariant makes the valid slots exactly the
+    occupied prefix ``[0, min(next_pos, window))``.
+
+    The XLA path runs the pure reference — the dense ring decode path runs
+    ``mha_reference`` directly, and bitwise parity between the two backends
+    is the differential harness's contract. ``impl="pallas"`` exploits the
+    prefix-occupancy fact to reuse the block-streaming Pallas paged-decode
+    kernel unchanged with ``lengths = min(next_pos, window)``.
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        from repro.kernels import paged_attention as pa
+        w = ring_pos.shape[-1]
+        lengths = jnp.minimum(next_pos, w)
+        return pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         lengths, sm_scale=sm_scale,
+                                         n_slots=w, interpret=_interpret())
+    return _ref.paged_ring_attention_reference(
+        q, k_pool, v_pool, block_tables, ring_pos, next_pos,
+        window=window, sm_scale=sm_scale)
+
+
 # --------------------------------------------------------------------------- #
 # Gather-compaction (LaCache iterative compaction)
 # --------------------------------------------------------------------------- #

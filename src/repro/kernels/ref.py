@@ -133,6 +133,48 @@ def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
     return out[:, 0]
 
 
+def ring_valid_mask(ring_pos: jnp.ndarray, next_pos: jnp.ndarray,
+                    window: int) -> jnp.ndarray:
+    """Slot-validity mask of a sliding-window ring cache: occupied, inside
+    the window, not from the future. ``ring_pos``: [..., w] per-slot
+    absolute positions (-1 empty); ``next_pos``: [...] the position of the
+    next token. THE single definition of ring validity — the dense decode
+    path (:func:`repro.models.layers.attention_decode_ring`) and the paged
+    oracle below both consume it, so the two backends' masks can never
+    drift apart."""
+    return (ring_pos >= 0) \
+        & (ring_pos > (next_pos - 1 - window)[..., None]) \
+        & (ring_pos <= (next_pos - 1)[..., None])
+
+
+def paged_ring_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                   v_pool: jnp.ndarray,
+                                   block_tables: jnp.ndarray,
+                                   ring_pos: jnp.ndarray,
+                                   next_pos: jnp.ndarray, *, window: int,
+                                   sm_scale: Optional[float] = None):
+    """Single-token sliding-window decode through a residue-class block table.
+
+    q: [b, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
+    block_tables: [b, max_blocks] int32 (-1 unmapped); ring_pos: [b, window]
+    per-slot absolute positions (-1 empty, ring invariant slot == pos % w);
+    next_pos: [b] the position of the *next* token (one past the appended
+    query). Slot validity comes from the positions — occupied, inside the
+    window, not from the future — the identical mask the dense ring decode
+    path (:func:`repro.models.layers.attention_decode_ring`) applies, and
+    the computation bottoms out in the same :func:`mha_reference`, so the
+    paged and dense ring backends agree bit-for-bit. This is the semantics
+    contract for the windowed Pallas dispatch
+    (:func:`repro.kernels.ops.paged_ring_decode_attention`).
+    """
+    w = ring_pos.shape[1]
+    k, v, mapped = paged_logical_view(k_pool, v_pool, block_tables,
+                                      jnp.minimum(next_pos, w), w)
+    valid = mapped & ring_valid_mask(ring_pos, next_pos, window)
+    return mha_reference(q[:, None], k, v, causal=False, kv_valid=valid,
+                         sm_scale=sm_scale)[:, 0]
+
+
 def gather_compact_reference(x: jnp.ndarray, perm: jnp.ndarray,
                              new_length: jnp.ndarray) -> jnp.ndarray:
     """Permute slots (axis 1) by ``perm`` and zero slots >= new_length.

@@ -60,10 +60,12 @@ def main():
                     choices=("dense", "paged"),
                     help="KV memory backend: 'paged' decodes through "
                          "per-request block tables into one physical pool "
-                         "(in-model paged decode on eligible all-attention "
-                         "archs: prefix hits splice shared blocks, "
-                         "snapshots are refcount forks, preemption is a "
-                         "table handoff; other archs fall back to "
+                         "(in-model paged decode on all decoder-only "
+                         "archs — budgeted slots, ring windows as "
+                         "residue-class tables, SSM states per-lane; "
+                         "prefix hits splice shared blocks, snapshots are "
+                         "refcount forks, preemption is a table handoff; "
+                         "cross-attention/M-RoPE archs fall back to "
                          "store-backed snapshots with dense decode)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged backend: slots per physical block")

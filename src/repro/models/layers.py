@@ -233,13 +233,43 @@ def attention_decode_ring(w, cfg: ModelConfig, x, ring: RingKVCache, *,
     ring = ring_append(ring, k_rot, v_new)
     qq = common.apply_rope(q, true_pos[None, None], cfg.rope_theta) \
         if cfg.pos_emb == "rope" else q
-    # validity: stored position within the window and occupied
-    valid = (ring.pos >= 0) & (ring.pos > ring.next_pos - 1 - window) \
-        & (ring.pos <= ring.next_pos - 1)
     from repro.kernels import ref as kref
+    # validity: stored position within the window and occupied (the shared
+    # predicate the paged ring oracle also consumes)
+    valid = kref.ring_valid_mask(ring.pos, ring.next_pos, window)
     o = kref.mha_reference(qq, ring.k, ring.v, causal=False, kv_valid=valid)
     y = o.reshape(b, 1, h * hd) @ w["wo"]
     return shard(y, "batch", "seq", "residual"), ring
+
+
+def attention_decode_ring_paged(w, cfg: ModelConfig, x,
+                                st: "pagedlib.PagedRingCache",
+                                kvp: "pagedlib.PoolKV", *, window: int,
+                                impl: Optional[str] = None):
+    """Single-token sliding-window decode against an *in-model paged* ring.
+
+    The lane-batched twin of :func:`attention_decode_ring`: the ring's K/V
+    rows live in the shared pool behind a residue-class block table
+    (:class:`repro.core.paged.PagedRingCache`), the append copy-on-writes
+    shared blocks into the lane's reserved set, and attention dispatches
+    through :func:`repro.kernels.ops.paged_ring_decode_attention`. Each
+    lane advances on its own ``next_pos`` clock. Returns (y, st, kvp).
+    """
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim_
+    q, k_new, v_new = _qkv(w, cfg, x)
+    true_pos = st.next_pos                                    # [b]
+    if cfg.pos_emb == "rope":
+        k_rot = common.apply_rope(k_new, true_pos[:, None], cfg.rope_theta)
+        qq = common.apply_rope(q, true_pos[:, None], cfg.rope_theta)
+    else:
+        k_rot, qq = k_new, q
+    kvp, st = pagedlib.paged_ring_append(kvp, st, k_rot, v_new)
+    o = kops.paged_ring_decode_attention(
+        qq[:, 0], kvp.k, kvp.v, st.blocks, st.pos, st.next_pos,
+        window=window, impl=impl)
+    y = o.reshape(b, 1, h * hd) @ w["wo"]
+    return shard(y, "batch", "seq", "residual"), st, kvp
 
 
 def init_cross_attention(key, cfg: ModelConfig, dtype):
@@ -436,8 +466,20 @@ def _mamba_ssm_inputs(w, cfg, xi):
     return dt, B, C
 
 
-def mamba_train(w, cfg: ModelConfig, x, *, impl: Optional[str] = None):
-    """Full-sequence Mamba-1 mixer. Returns (y, final MambaState)."""
+def mamba_train(w, cfg: ModelConfig, x, *, impl: Optional[str] = None,
+                true_len=None):
+    """Full-sequence Mamba-1 mixer. Returns (y, final MambaState).
+
+    ``true_len`` (traced int32, bucketed prefill): ``x`` is right-padded and
+    only the first ``true_len`` positions are real. The scan is *pad-masked*:
+    ``dt`` is zeroed at pad positions, so ``dA = exp(0·A) = 1`` and
+    ``dB·x = 0`` — the SSM state passes through pads unchanged and the
+    returned ``hT`` equals the state after exactly ``true_len`` tokens. The
+    conv window is dynamic-sliced to the last ``d_conv - 1`` *real* inputs.
+    Outputs at real positions are untouched (the recurrence and the causal
+    conv never look forward), so bucketed prefill stays exact for SSM and
+    hybrid stacks.
+    """
     b, t, _ = x.shape
     di, dc = cfg.d_inner, cfg.d_conv
     xi, z = _mamba_split(w, cfg, x)
@@ -446,9 +488,20 @@ def mamba_train(w, cfg: ModelConfig, x, *, impl: Optional[str] = None):
     pad = jnp.zeros((b, dc - 1, di), xi.dtype)
     xp = jnp.concatenate([pad, xi], axis=1)
     conv = sum(xp[:, i:i + t] * w["conv_w"][i][None, None] for i in range(dc))
-    conv_state = xp[:, -(dc - 1):] if dc > 1 else jnp.zeros((b, 0, di), xi.dtype)
+    if dc <= 1:
+        conv_state = jnp.zeros((b, 0, di), xi.dtype)
+    elif true_len is None:
+        conv_state = xp[:, -(dc - 1):]
+    else:
+        # real inputs occupy xp[:, dc-1 : dc-1+true_len]; the state after
+        # true_len tokens is the dc-1 rows ending there
+        conv_state = jax.lax.dynamic_slice_in_dim(xp, true_len, dc - 1,
+                                                  axis=1)
     xc = jax.nn.silu(conv + w["conv_b"])
     dt, B, C = _mamba_ssm_inputs(w, cfg, xc)
+    if true_len is not None:
+        real = jnp.arange(t) < true_len
+        dt = jnp.where(real[None, :, None], dt, 0.0)
     A = -jnp.exp(w["A_log"])
     y, hT = kops.ssm_scan(xc, dt, A, B, C, w["D"], impl=impl)
     y = y * jax.nn.silu(z)
@@ -578,6 +631,80 @@ def attention_decode_chunk_paged(w, cfg: ModelConfig, x,
     return shard(y, "batch", "seq", "residual"), st, kvp
 
 
+def _ring_window_attend(cfg: ModelConfig, qq, keys, vals, kpos, pos_c, *,
+                        window: int):
+    """Windowed-causal attention over ``[ring || chunk]`` — THE single
+    inline core both the dense and the paged ring chunk paths run, so the
+    backends' bit-for-bit agreement cannot drift. ``kpos`` [L, w+tc] /
+    ``pos_c`` [L, tc] carry a leading lane axis: L == 1 broadcasts
+    batch-uniform metadata (dense rings), L == b is per-lane (paged).
+    Dead ring slots carry ``kpos == -1`` (dense zeros / paged gathered
+    garbage alike) and mask out before the softmax. Returns float32
+    [b, tc, h, hd]."""
+    h, hd, kvh = cfg.n_heads, cfg.head_dim_, cfg.n_kv_heads
+    mask = (kpos[:, None, :] >= 0) \
+        & (kpos[:, None, :] <= pos_c[:, :, None]) \
+        & (kpos[:, None, :] > pos_c[:, :, None] - window)     # [L, tc, w+tc]
+    qf = qq.astype(jnp.float32) / (hd ** 0.5)
+    kf = jnp.repeat(keys.astype(jnp.float32), h // kvh, axis=2)
+    vf = jnp.repeat(vals.astype(jnp.float32), h // kvh, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+def _ring_rebuild_gather(keys, vals, start, tc: int, wsz: int):
+    """Residue-class rebuild sources: slot j's newest position ``p_j ≡ j
+    (mod wsz)`` gathered from ``[ring || chunk]`` (duplicate-free by the
+    ring invariant). ``start`` [L]: lane clocks (L == 1 broadcasts).
+    Returns (gk, gv, pos [L, wsz], live [L, wsz])."""
+    last = start + tc - 1
+    j = jnp.arange(wsz)[None]
+    p_j = last[:, None] - ((last[:, None] - j) % wsz)
+    src = jnp.where(p_j >= start[:, None], wsz + (p_j - start[:, None]), j)
+    live = p_j >= 0
+    gk = jnp.take_along_axis(keys, src[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(vals, src[:, :, None, None], axis=1)
+    return gk, gv, jnp.where(live, p_j, -1).astype(jnp.int32), live
+
+
+def ring_chunk_paged(w, cfg: ModelConfig, x, st: "pagedlib.PagedRingCache",
+                     kvp: "pagedlib.PoolKV", *, window: int):
+    """Chunk decode (streaming prefill) against an in-model paged ring.
+
+    The lane-batched twin of :func:`ring_chunk`: the old ring is gathered
+    through the residue-class table, the chunk attends to ``[ring || chunk]``
+    through the shared :func:`_ring_window_attend` core (so the backends
+    agree bit-for-bit), and the rebuilt ring scatters wholesale into the
+    lane's ``owned`` blocks (every live slot is rewritten anyway, so the
+    table redirects to the reserved set and shared snapshot blocks are
+    left untouched). Returns (y, st, kvp).
+    """
+    b, tc, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    wsz = st.window
+    start = st.next_pos                                       # [b]
+    pos_c = start[:, None] + jnp.arange(tc)[None]             # [b, tc]
+    q, k_new, v_new = _qkv(w, cfg, x)
+    if cfg.pos_emb == "rope":
+        qq = common.apply_rope(q, pos_c, cfg.rope_theta)
+        k_rot = common.apply_rope(k_new, pos_c, cfg.rope_theta)
+    else:
+        qq, k_rot = q, k_new
+    rk, rv = pagedlib.paged_gather_view(kvp, st, wsz)
+    keys = jnp.concatenate([rk, k_rot.astype(rk.dtype)], axis=1)
+    vals = jnp.concatenate([rv, v_new.astype(rv.dtype)], axis=1)
+    kpos = jnp.concatenate([st.pos, pos_c.astype(jnp.int32)], axis=1)
+    o = _ring_window_attend(cfg, qq, keys, vals, kpos, pos_c,
+                            window=window).astype(x.dtype)
+    y = o.reshape(b, tc, h * hd) @ w["wo"]
+
+    gk, gv, pp, _ = _ring_rebuild_gather(keys, vals, start, tc, wsz)
+    kvp, st = pagedlib.paged_ring_rebuild(kvp, st, gk, gv, pp, start + tc)
+    return shard(y, "batch", "seq", "residual"), st, kvp
+
+
 def mamba_chunk(w, cfg: ModelConfig, x, state: MambaState
                 ) -> Tuple[jnp.ndarray, MambaState]:
     """Chunk of T tokens through the recurrence, threading conv+ssm state."""
@@ -603,9 +730,11 @@ def ring_chunk(w, cfg: ModelConfig, x, ring: RingKVCache, *, window: int
     """Chunk decode for sliding-window layers: attend to [ring || chunk]
     with the window mask, then rebuild the ring from the newest positions
     (gather by residue class — duplicate-free by the ring invariant
-    slot == pos % window)."""
+    slot == pos % window). Runs the shared :func:`_ring_window_attend` /
+    :func:`_ring_rebuild_gather` core with batch-uniform (L == 1) lane
+    metadata — the identical computation the paged twin runs per-lane."""
     b, tc, _ = x.shape
-    h, hd, kvh = cfg.n_heads, cfg.head_dim_, cfg.n_kv_heads
+    h, hd = cfg.n_heads, cfg.head_dim_
     wsz = ring.k.shape[1]
     start = ring.next_pos
     pos_c = start + jnp.arange(tc)
@@ -618,29 +747,14 @@ def ring_chunk(w, cfg: ModelConfig, x, ring: RingKVCache, *, window: int
     keys = jnp.concatenate([ring.k, k_rot.astype(ring.k.dtype)], axis=1)
     vals = jnp.concatenate([ring.v, v_new.astype(ring.v.dtype)], axis=1)
     kpos = jnp.concatenate([ring.pos, pos_c.astype(jnp.int32)])
-
-    # window-causal attention with per-query masks (inline reference)
-    mask = (kpos[None, :] >= 0) & (kpos[None, :] <= pos_c[:, None]) \
-        & (kpos[None, :] > pos_c[:, None] - window)
-    qf = qq.astype(jnp.float32) / (hd ** 0.5)
-    kf = jnp.repeat(keys.astype(jnp.float32), h // kvh, axis=2)
-    vf = jnp.repeat(vals.astype(jnp.float32), h // kvh, axis=2)
-    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
-    s = jnp.where(mask[None, None], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(x.dtype)
+    o = _ring_window_attend(cfg, qq, keys, vals, kpos[None], pos_c[None],
+                            window=window).astype(x.dtype)
     y = o.reshape(b, tc, h * hd) @ w["wo"]
 
-    # rebuild ring: slot j holds the newest position p_j with p_j % wsz == j
-    last = start + tc - 1
-    j = jnp.arange(wsz)
-    p_j = last - ((last - j) % wsz)
-    src = jnp.where(p_j >= start, wsz + (p_j - start), j)
-    live = p_j >= 0
-    gk = jnp.take(keys, src, axis=1)
-    gv = jnp.take(vals, src, axis=1)
-    kk = jnp.where(live[None, :, None, None], gk, jnp.zeros((), gk.dtype))
-    vv = jnp.where(live[None, :, None, None], gv, jnp.zeros((), gv.dtype))
-    pp = jnp.where(live, p_j, -1).astype(jnp.int32)
+    gk, gv, pp, live = _ring_rebuild_gather(keys, vals, start[None], tc, wsz)
+    kk = jnp.where(live[0][None, :, None, None], gk,
+                   jnp.zeros((), gk.dtype))
+    vv = jnp.where(live[0][None, :, None, None], gv,
+                   jnp.zeros((), gv.dtype))
     return shard(y, "batch", "seq", "residual"), RingKVCache(
-        k=kk, v=vv, pos=pp, next_pos=start + tc)
+        k=kk, v=vv, pos=pp[0], next_pos=start + tc)

@@ -173,13 +173,17 @@ def _apply_ffn(p, cfg, x, aux):
 
 def _apply_layer_train(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
                        aux, *, positions3=None, cross: Optional[CrossKVCache] = None,
-                       causal=True, kv_keep=None):
+                       causal=True, kv_keep=None, true_len=None):
     """Returns (x, aux, extra) where extra carries per-layer state for
     dense prefill: ("kv", (k, k_rot, v)) / ("mamba", MambaState) or None.
 
     ``kv_keep``: optional bool[T] per-layer token-retention mask (evaluation
     of static cache patterns, paper Fig. 3) — attention sees only kept
-    positions (plus the causal constraint)."""
+    positions (plus the causal constraint).
+    ``true_len``: traced real-token count for bucketed prefill — SSM layers
+    run the pad-masked scan so their final state freezes at ``true_len``
+    (attention layers need nothing here: causality already makes the padded
+    forward exact for real positions)."""
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     extra = None
     if spec.kind == "attn":
@@ -209,7 +213,7 @@ def _apply_layer_train(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
             hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
             x = x + layers.cross_attention(p["cross"], cfg, hc, cross)
     else:
-        y, mstate = layers.mamba_train(p["mamba"], cfg, h)
+        y, mstate = layers.mamba_train(p["mamba"], cfg, h, true_len=true_len)
         x = x + y
         extra = mstate
     x, aux = _apply_ffn(p, cfg, x, aux)
@@ -295,13 +299,15 @@ def _cross_caches(params, cfg: ModelConfig, enc_out):
 # =========================================================================== #
 def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
                   frames=None, collect_kv: bool = False, remat: bool = True,
-                  kv_keep_masks=None):
+                  kv_keep_masks=None, true_len=None):
     """Teacher-forcing forward. Returns (logits, aux, kv_list or None).
 
     ``collect_kv`` additionally returns each global-attention layer's
     (k_unrotated, k_rotated, v) for dense prefill -> cache construction.
     ``kv_keep_masks``: bool[n_layers, T] static per-layer retention pattern
     (Fig. 3 evaluation; global-attention layers only).
+    ``true_len``: traced real-token count for bucketed prefill (pad-masked
+    SSM scan; see :func:`_apply_layer_train`).
     """
     layout = cache_positions(cfg)
     x, positions, positions3 = _build_embeds(params, cfg, tokens, patches)
@@ -325,7 +331,8 @@ def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
             h, aux, extra = _apply_layer_train(
                 pblock[f"p{p}"], cfg, spec, h, positions, aux,
                 positions3=positions3, cross=cr,
-                kv_keep=None if keeps is None else keeps[p])
+                kv_keep=None if keeps is None else keeps[p],
+                true_len=true_len)
             if collect_kv and extra is not None:
                 extras[f"p{p}"] = extra
         return (h, aux), extras if collect_kv else None
@@ -356,7 +363,8 @@ def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
             params["tail"][f"t{i}"], cfg, spec, x, positions, aux,
             positions3=positions3, cross=cr,
             kv_keep=None if kv_keep_masks is None
-            else jnp.asarray(kv_keep_masks)[n_scanned + i])
+            else jnp.asarray(kv_keep_masks)[n_scanned + i],
+            true_len=true_len)
         if collect_kv and extra is not None:
             kv_tail[f"t{i}"] = extra
 
@@ -442,13 +450,26 @@ def init_decode_state(params, cfg: ModelConfig, batch: int, n_slots: int,
 
 
 def paged_decode_eligible(cfg: ModelConfig) -> bool:
-    """Whether the in-model paged decode path supports this architecture:
-    every layer must be global attention (ring windows and SSM states carry
-    batch-uniform metadata the per-lane paged step cannot express yet) and
-    positions must be 1-D (no M-RoPE), with no encoder cross-attention."""
-    return (all(s.kind == "attn" and s.attn == "global"
-                for s in cfg.layer_specs())
-            and not cfg.cross_attention and not cfg.mrope)
+    """Whether the in-model paged decode path supports this architecture.
+
+    Every layer *kind* now has a paged representation, so the ladder's
+    architecture-agnostic fixed-budget promise extends to the fast path:
+
+    * global-attention layers — per-lane :class:`PagedKVCache` block tables
+      (budgeted slots, compaction through the table),
+    * sliding-window (ring) layers — per-lane
+      :class:`~repro.core.paged.PagedRingCache` residue-class tables (the
+      ``slot == pos % w`` invariant carried as per-lane metadata alongside
+      the block table),
+    * SSM (Mamba) layers — small dense per-lane states threaded through the
+      ``kv_pool`` pytree (nothing to page, but they fork/splice/preempt/
+      resume bit-exactly with the tables),
+
+    and hybrid stacks compose the three per ``layer_specs()``. Only encoder
+    cross-attention (static encoder KV shared batch-wide) and M-RoPE (2-D
+    positions) remain on the store-backed fallback.
+    """
+    return not cfg.cross_attention and not cfg.mrope
 
 
 def init_paged_decode_state(cfg: ModelConfig, batch: int, n_slots: int,
@@ -458,19 +479,22 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, n_slots: int,
 
     ``alloc_fn(n)`` is the engine's host-side allocator: it returns ``n``
     fresh physical block ids (refcount 1, reserved for the lifetime of this
-    state). Each lane of each attention layer gets ``blocks_for(n_slots,
-    page_size)`` reserved blocks — its copy-on-write destination set — so
-    the jitted decode loop never needs an allocation.
+    state). Each lane of each global-attention layer gets
+    ``blocks_for(n_slots, page_size)`` reserved blocks and each lane of
+    each ring layer ``blocks_for(window, page_size)`` — its copy-on-write
+    destination set — so the jitted decode loop never needs an allocation.
+    SSM layers carry dense per-lane states (nothing to reserve).
     """
     import numpy as _np
     layout = cache_positions(cfg)
     if not paged_decode_eligible(cfg):
-        raise ValueError("in-model paged decode requires an all-global-"
-                         "attention, non-cross, non-mrope architecture")
+        raise ValueError("in-model paged decode does not support cross-"
+                         "attention or M-RoPE architectures")
     mb = pagedlib.blocks_for(n_slots, page_size)
     with_scores = eviction_policy(cfg).needs_scores
+    dtype = jnp.dtype(cfg.dtype)
 
-    def mk(stack: Tuple[int, ...]) -> PagedKVCache:
+    def mk_kv(stack: Tuple[int, ...]) -> PagedKVCache:
         shape = stack + (batch,)
         n = int(_np.prod(shape, dtype=int)) if shape else 1
         ids = _np.asarray(alloc_fn(n * mb)).reshape(shape + (mb,))
@@ -482,9 +506,35 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, n_slots: int,
             scores=jnp.zeros(shape + (n_slots,), jnp.float32)
             if with_scores else None)
 
-    blocks = {f"p{p}": mk((layout["n_full"],))
+    def mk_ring(stack: Tuple[int, ...]) -> pagedlib.PagedRingCache:
+        w = max(1, cfg.sliding_window)
+        mbr = pagedlib.blocks_for(w, page_size)
+        shape = stack + (batch,)
+        n = int(_np.prod(shape, dtype=int)) if shape else 1
+        ids = _np.asarray(alloc_fn(n * mbr)).reshape(shape + (mbr,))
+        return pagedlib.PagedRingCache(
+            blocks=jnp.full(shape + (mbr,), -1, jnp.int32),
+            owned=jnp.asarray(ids, jnp.int32),
+            pos=jnp.full(shape + (w,), -1, jnp.int32),
+            next_pos=jnp.zeros(shape, jnp.int32))
+
+    def mk_ssm(stack: Tuple[int, ...]) -> MambaState:
+        shape = stack + (batch,)
+        return MambaState(
+            conv=jnp.zeros(shape + (cfg.d_conv - 1, cfg.d_inner), dtype),
+            ssm=jnp.zeros(shape + (cfg.d_inner, cfg.d_state), jnp.float32))
+
+    def mk(spec: LayerSpec, stack: Tuple[int, ...]):
+        if spec.kind == "mamba":
+            return mk_ssm(stack)
+        if spec.attn == "local":
+            return mk_ring(stack)
+        return mk_kv(stack)
+
+    blocks = {f"p{p}": mk(layout["pspecs"][p], (layout["n_full"],))
               for p in range(layout["period"])} if layout["n_full"] else {}
-    tail = {f"t{i}": mk(()) for i in range(len(layout["tail_specs"]))}
+    tail = {f"t{i}": mk(s, ())
+            for i, s in enumerate(layout["tail_specs"])}
     return DecodeState(pos=jnp.zeros((batch,), jnp.int32), blocks=blocks,
                        tail=tail, kv_pool=pool_kv)
 
@@ -520,22 +570,67 @@ def _page_in_node(kvp: PoolKV, pkc: PagedKVCache, dkc: KVCache, bs: int
                          else jnp.reshape(dkc.scores, lane_shape + (s,))))
 
 
+def _page_in_ring_node(kvp: PoolKV, prc: "pagedlib.PagedRingCache",
+                       ring: "layers.RingKVCache", bs: int
+                       ) -> Tuple[PoolKV, "pagedlib.PagedRingCache"]:
+    """Scatter one dense (batch-1 per lane) ring cache into the lane's
+    reserved blocks via the residue-class layout (ring slot j at pool row
+    ``owned[j // bs] * bs + j % bs``). Occupied ring slots always form the
+    prefix ``[0, min(next_pos, window))``, so the table maps exactly the
+    blocks covering it."""
+    lane_shape = prc.next_pos.shape
+    n = 1
+    for d in lane_shape:
+        n *= d
+    w, mb = prc.window, prc.max_blocks
+    owned = prc.owned.reshape(n, mb)
+    k = ring.k.reshape((n, w) + ring.k.shape[-2:])
+    v = ring.v.reshape((n, w) + ring.v.shape[-2:])
+    npos = jnp.reshape(ring.next_pos, (n,))
+    occ = jnp.minimum(npos, w)
+    slot = jnp.arange(w)
+    live = slot[None] < occ[:, None]
+    dstblk = jnp.take(owned, slot // bs, axis=1)             # [n, w]
+    oob = kvp.n_blocks * bs
+    dst = jnp.where(live, dstblk * bs + slot % bs, oob)
+    kflat = pagedlib._flat_rows(kvp.k).at[dst].set(
+        k.astype(kvp.k.dtype), mode="drop")
+    vflat = pagedlib._flat_rows(kvp.v).at[dst].set(
+        v.astype(kvp.v.dtype), mode="drop")
+    blocks = jnp.where(jnp.arange(mb)[None] * bs < occ[:, None], owned, -1)
+    # dense ring pos is batch-uniform [*, w] with lane batch 1, so the lane
+    # count n equals the dense instance count and a straight reshape fits
+    return (PoolKV(k=kflat.reshape(kvp.k.shape), v=vflat.reshape(kvp.v.shape)),
+            prc._replace(blocks=blocks.reshape(lane_shape + (mb,)),
+                         pos=jnp.reshape(ring.pos, lane_shape + (w,)),
+                         next_pos=npos.reshape(lane_shape)))
+
+
 def page_in_dense_state(paged_state: DecodeState, dense_state: DecodeState,
                         page_size: int) -> DecodeState:
     """Move a dense (batch-1) post-prefill state into an empty in-model
-    paged state: every layer's K/V rows scatter into the lane's reserved
-    blocks (one traced dispatch — the once-per-admission cost of a cold
-    prefill under the paged backend; prefix hits skip this entirely by
-    splicing shared tables instead)."""
+    paged state: every attention layer's K/V rows scatter into the lane's
+    reserved blocks (global slots by occupied prefix, ring windows by
+    residue class) and SSM states copy across dense (one traced dispatch —
+    the once-per-admission cost of a cold prefill under the paged backend;
+    prefix hits skip this entirely by splicing shared tables instead)."""
+    def node(kvp, pnode, dnode):
+        if isinstance(pnode, PagedKVCache):
+            return _page_in_node(kvp, pnode, dnode, page_size)
+        if isinstance(pnode, pagedlib.PagedRingCache):
+            return _page_in_ring_node(kvp, pnode, dnode, page_size)
+        # SSM: the dense (batch-1) state already has the lane layout
+        return kvp, jax.tree.map(
+            lambda p, d: jnp.reshape(d.astype(p.dtype), p.shape),
+            pnode, dnode)
+
     kvp = paged_state.kv_pool
     blocks = {}
     for key, pkc in paged_state.blocks.items():
-        kvp, blocks[key] = _page_in_node(kvp, pkc, dense_state.blocks[key],
-                                         page_size)
+        kvp, blocks[key] = node(kvp, pkc, dense_state.blocks[key])
     tail = {}
     for key, pkc in paged_state.tail.items():
-        kvp, tail[key] = _page_in_node(kvp, pkc, dense_state.tail[key],
-                                       page_size)
+        kvp, tail[key] = node(kvp, pkc, dense_state.tail[key])
     pos = jnp.broadcast_to(jnp.asarray(dense_state.pos, jnp.int32).reshape(-1),
                            paged_state.pos.shape)
     return paged_state._replace(pos=pos, blocks=blocks, tail=tail,
@@ -617,22 +712,21 @@ def prefill(params, cfg: ModelConfig, tokens, *, n_slots: int,
     is right-padded to a bucket length and only ``tokens[:, :true_len]`` are
     real. Causality makes the forward exact for real positions; the cache
     build drops pad entries (global slots via :func:`cachelib.truncate`,
-    ring windows by residue-class gather). Mamba states are cumulative
-    through pads, so bucketing is attention-only.
+    ring windows by residue-class gather), and SSM layers run the
+    pad-masked scan (``dt`` zeroed past ``true_len``, conv window
+    dynamic-sliced) so their final state freezes at ``true_len`` — bucketed
+    prefill is exact for SSM and hybrid stacks too.
     """
     if true_len is not None:
         if patches is not None or frames is not None:
             raise ValueError("true_len (bucketed prefill) does not support "
                              "patches/frames inputs")
-        if any(s.kind == "mamba" for s in cfg.layer_specs()):
-            raise ValueError("true_len (bucketed prefill) is attention-only: "
-                             "SSM states are cumulative through padding")
         true_len = jnp.asarray(true_len, jnp.int32)
     layout = cache_positions(cfg)
     lspec = ladder_spec(cfg, budget=n_slots)
     logits, _, (kv_blocks, kv_tail) = forward_train(
         params, cfg, tokens, patches=patches, frames=frames,
-        collect_kv=True, remat=False)
+        collect_kv=True, remat=False, true_len=true_len)
     t_total = logits.shape[1]
     positions = jnp.arange(t_total)
     gpp = layout["gpp"]
@@ -709,8 +803,12 @@ def _apply_layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, st, *,
         y, st = layers.mamba_decode(p["mamba"], cfg, h, st)
         x = x + y
     elif spec.attn == "local":
-        y, st = layers.attention_decode_ring(
-            p["attn"], cfg, h, st, window=cfg.sliding_window)
+        if isinstance(st, pagedlib.PagedRingCache):
+            y, st, kvp = layers.attention_decode_ring_paged(
+                p["attn"], cfg, h, st, kvp, window=cfg.sliding_window)
+        else:
+            y, st = layers.attention_decode_ring(
+                p["attn"], cfg, h, st, window=cfg.sliding_window)
         x = x + y
     elif isinstance(st, PagedKVCache):
         y, st, kvp = layers.attention_decode_paged(
@@ -876,8 +974,12 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
         if spec.kind == "mamba":
             y, st = layers.mamba_chunk(p["mamba"], cfg, hh, st)
         elif spec.attn == "local":
-            y, st = layers.ring_chunk(p["attn"], cfg, hh, st,
-                                      window=cfg.sliding_window)
+            if isinstance(st, pagedlib.PagedRingCache):
+                y, st, kvp = layers.ring_chunk_paged(
+                    p["attn"], cfg, hh, st, kvp, window=cfg.sliding_window)
+            else:
+                y, st = layers.ring_chunk(p["attn"], cfg, hh, st,
+                                          window=cfg.sliding_window)
         elif isinstance(st, PagedKVCache):
             y, st, kvp = layers.attention_decode_chunk_paged(
                 p["attn"], cfg, hh, st, kvp, spec=lspec, layer_ord=ordl,

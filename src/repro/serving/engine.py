@@ -32,9 +32,12 @@ scheduler's pending queue is a heap over the admission policy's sort key.
 Prefill is optionally *bucketed* (``bucket_prefill=True``): prompts are
 right-padded to power-of-two lengths and dispatched with a traced
 ``true_len``, so mixed-length traffic compiles one executable per bucket
-instead of one per distinct prompt length (attention-only models; SSM
-states are cumulative through padding, so those configs fall back to
-exact-length prefill automatically).
+instead of one per distinct prompt length. Attention layers are exact by
+causality; SSM/hybrid stacks run the pad-masked scan (``dt`` zeroed at
+pads, conv window dynamic-sliced) so their states freeze at ``true_len``
+exactly — only encoder (frames) inputs fall back to exact-length
+prefill. Buckets clamp at ``cfg.max_position``; longer prompts dispatch
+at exact length.
 
 Slots are independent: the slot axis is a ``jax.vmap`` over the same jitted
 ``decode_step`` the lockstep layer uses, so each slot carries its own
@@ -58,6 +61,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import paged as pagedlib
+from repro.core.cache import MambaState
 from repro.models import model as M
 from repro.serving import sampling
 from repro.serving.admission import AdmissionLike, get_admission
@@ -98,15 +102,23 @@ def _lane_put(state: M.DecodeState, sub: M.DecodeState, slot) -> M.DecodeState:
 
 
 def _lane_reset(sub: M.DecodeState) -> M.DecodeState:
-    """Empty a lane's logical state (tables unmapped, metadata cleared)
-    while keeping its reserved ``owned`` block set intact."""
-    def rp(leaf: pagedlib.PagedKVCache) -> pagedlib.PagedKVCache:
-        return leaf._replace(
-            blocks=jnp.full_like(leaf.blocks, -1),
-            pos=jnp.full_like(leaf.pos, -1),
-            length=jnp.zeros_like(leaf.length),
-            scores=None if leaf.scores is None
-            else jnp.zeros_like(leaf.scores))
+    """Empty a lane's logical state (tables unmapped, metadata cleared,
+    ring next_pos and SSM states zeroed) while keeping its reserved
+    ``owned`` block set intact."""
+    def rp(leaf):
+        if isinstance(leaf, pagedlib.PagedKVCache):
+            return leaf._replace(
+                blocks=jnp.full_like(leaf.blocks, -1),
+                pos=jnp.full_like(leaf.pos, -1),
+                length=jnp.zeros_like(leaf.length),
+                scores=None if leaf.scores is None
+                else jnp.zeros_like(leaf.scores))
+        if isinstance(leaf, pagedlib.PagedRingCache):
+            return leaf._replace(
+                blocks=jnp.full_like(leaf.blocks, -1),
+                pos=jnp.full_like(leaf.pos, -1),
+                next_pos=jnp.zeros_like(leaf.next_pos))
+        return jax.tree.map(jnp.zeros_like, leaf)   # SSM state
 
     return sub._replace(
         pos=jnp.zeros_like(sub.pos),
@@ -173,6 +185,9 @@ class Request:
     _key: Any = None                    # per-request PRNG chain (runtime)
     _resume: Any = None                 # (PagedSnapshot, last token) while
     #                                     preempted; None otherwise
+    _submit_seq: int = -1               # original scheduler sequence number
+    #                                     (requeue fairness: preemption does
+    #                                     not reset admission order)
 
     @property
     def prompt_len(self) -> int:
@@ -226,6 +241,7 @@ class Scheduler:
 
     def submit(self, req: Request) -> Request:
         req.status = PENDING
+        req._submit_seq = self._seq     # admission identity: survives requeue
         heapq.heappush(self.pending,
                        (self.admission.key(req, self._seq), self._seq, req))
         self._seq += 1
@@ -252,15 +268,19 @@ class Scheduler:
 
     def requeue(self, slot: int) -> Request:
         """Preemption: move a RUNNING request back to the pending heap and
-        free its slot. The request re-enters admission with a fresh sequence
-        number, so its admission key (deadline / priority) decides when it
-        comes back — not its original submission position."""
+        free its slot. The request re-enters admission under its *original*
+        submission sequence number — preemption is an implementation detail
+        of slot pressure, not a new arrival, so deadline/priority ties must
+        resolve against the pending heap at the request's original submit
+        order. Requeueing at a fresh sequence number would let every later
+        arrival with an equal admission key starve the preempted request
+        indefinitely."""
         req = self.running.pop(slot)
         req.status, req.slot = PENDING, -1
         self._free.append(slot)
+        seq = req._submit_seq
         heapq.heappush(self.pending,
-                       (self.admission.key(req, self._seq), self._seq, req))
-        self._seq += 1
+                       (self.admission.key(req, seq), seq, req))
         return req
 
 
@@ -304,24 +324,32 @@ class Engine:
         self.scheduler = Scheduler(max_batch, admission=admission)
         # paged backend: one global physical block pool. Eligible
         # architectures decode *through* the pool (in-model paged decode:
-        # RUNNING requests' KV lives in block tables end-to-end, prefix
+        # RUNNING requests' KV lives in block tables end-to-end — budgeted
+        # slots AND ring windows; SSM states ride dense per-lane — prefix
         # hits splice shared blocks, snapshots are refcount forks and
-        # preemption is a table handoff); other architectures fall back to
-        # the store-backed mode where the pool holds snapshots/preemptions
-        # and the decode loop stays dense.
+        # preemption is a table handoff); only cross-attention / M-RoPE
+        # architectures fall back to the store-backed mode where the pool
+        # holds snapshots/preemptions and the decode loop stays dense.
         self.kv_store = None
         self._paged_in_model = False
         self.page_size = page_size
         if kv_backend == "paged":
-            n_kv_layers = max(1, sum(
-                1 for s in cfg.layer_specs()
-                if s.kind == "attn" and s.attn == "global"))
+            specs = cfg.layer_specs()
+            n_kv_layers = sum(1 for s in specs
+                              if s.kind == "attn" and s.attn == "global")
+            n_ring_layers = sum(1 for s in specs if s.attn == "local")
             per_seq = pagedlib.blocks_for(self.budget, page_size)
+            per_ring = pagedlib.blocks_for(max(1, cfg.sliding_window),
+                                           page_size)
             if pool_blocks is None:
                 # room for every batch slot plus a healthy prefix
                 # working set; the prefix cache evicts LRU under pool
                 # pressure, so this is a soft ceiling, not a failure mode.
-                pool_blocks = n_kv_layers * per_seq * max(8, 4 * max_batch)
+                # Ring layers page their windows too; pure-SSM stacks keep
+                # a nominal pool (their states ride dense).
+                lane_blocks = max(1, n_kv_layers * per_seq
+                                  + n_ring_layers * per_ring)
+                pool_blocks = lane_blocks * max(8, 4 * max_batch)
             self.kv_store = pagedlib.PagedStateStore(
                 pool_blocks, page_size, cfg.n_kv_heads, cfg.head_dim_,
                 jnp.dtype(cfg.dtype))
@@ -358,10 +386,10 @@ class Engine:
                                         store=self.kv_store)
         self.prefix_block = max(1, prefix_block)
         self._policy_evicts = M.eviction_policy(cfg).evicts
-        # bucketing pads the prompt; exact only for attention layers (SSM
-        # states are cumulative through pads) and decoder-only inputs.
-        self._can_bucket = (all(s.kind == "attn" for s in cfg.layer_specs())
-                            and not cfg.cross_attention)
+        # bucketing pads the prompt; exact for attention layers (causality)
+        # AND for SSM/hybrid stacks (the pad-masked scan freezes SSM state
+        # at true_len) — only encoder inputs (frames) remain excluded.
+        self._can_bucket = not cfg.cross_attention
         self.bucket_prefill = bucket_prefill and self._can_bucket
         self.min_bucket = max(1, min_bucket)
         self._slot_states = None            # stacked DecodeState [max_batch, ...]
@@ -478,10 +506,32 @@ class Engine:
         return np.concatenate(nll, axis=1)
 
     def cache_bytes(self, state: M.DecodeState) -> int:
-        return sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(state.blocks)) + \
-               sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(state.tail))
+        """Per-layer decode-state bytes, counting every state kind: budgeted
+        KV slot buffers, ring windows and SSM states alike (nothing assumes
+        attention-only leaves). For in-model paged states the KV content
+        lives in the pool, so table leaves are charged as their *mapped*
+        physical blocks plus metadata instead of the raw int32 tables."""
+        if state.kv_pool is None:
+            return sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(state.blocks)) + \
+                   sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(state.tail))
+        kvp = state.kv_pool
+        block_bytes = 2 * kvp.block_size * int(np.prod(kvp.k.shape[2:])) \
+            * kvp.k.dtype.itemsize
+        total = 0
+        for leaf in list(state.blocks.values()) + list(state.tail.values()):
+            if isinstance(leaf, (pagedlib.PagedKVCache,
+                                 pagedlib.PagedRingCache)):
+                total += int((np.asarray(leaf.blocks) >= 0).sum()) \
+                    * block_bytes
+                meta = [x for name, x in zip(leaf._fields, leaf)
+                        if name not in ("blocks", "owned") and x is not None]
+                total += sum(int(x.size) * x.dtype.itemsize for x in meta)
+            else:
+                total += sum(int(x.size) * x.dtype.itemsize
+                             for x in jax.tree.leaves(leaf))
+        return total
 
     # ------------------------------------------------------------------ #
     # Request layer (continuous batching)
@@ -561,12 +611,22 @@ class Engine:
                 x[None], (self.max_batch,) + x.shape).copy(), one)
 
     # -- prefill paths (cold / bucketed / prefix-reusing) ---------------- #
-    @staticmethod
-    def _bucket_len(n: int, minimum: int) -> int:
-        b = max(1, minimum)
+    def _bucket_len(self, n: int) -> int:
+        """Smallest power-of-two bucket (>= min_bucket) covering ``n``,
+        clamped at the model's max sequence length.
+
+        Unbounded doubling would pad a prompt just over a large bucket far
+        past ``cfg.max_position`` (dead compute, and a padded dispatch the
+        model was never meant to see). Buckets clamp at the model max, and
+        prompts longer than it dispatch at their exact length — oversized
+        prompts are rare enough that a per-length compile beats padding."""
+        cap = max(1, int(self.cfg.max_position))
+        if n > cap:
+            return n                    # exact-length dispatch
+        b = max(1, self.min_bucket)
         while b < n:
             b *= 2
-        return b
+        return min(b, cap)
 
     def _note_prefill(self, kind: str, shape: int, n_tokens: int) -> None:
         self.prefill_dispatches += 1
@@ -579,7 +639,7 @@ class Engine:
         executable per bucket instead of compiling per distinct length."""
         t = int(prompt.shape[0])
         if self.bucket_prefill:
-            b = self._bucket_len(t, self.min_bucket)
+            b = self._bucket_len(t)
             padded = np.zeros((b,), np.int32)
             padded[:t] = prompt
             logits, state = self._prefill(
@@ -675,16 +735,28 @@ class Engine:
         """Point a lane's tables at a snapshot's blocks (pure splice — no
         refcount bookkeeping; callers manage holds). Every write through the
         spliced table copy-on-writes into the lane's reserved blocks because
-        the spliced ids are not in its ``owned`` set."""
+        the spliced ids are not in its ``owned`` set. Ring layers splice
+        their residue-class tables the same way; SSM layers copy their
+        (small) dense state back verbatim."""
         sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
         for section, key, leaf in self._lane_layers(sub):
             layer = snap.tables[section][key]
-            sections[section][key] = leaf._replace(
-                blocks=jnp.asarray(layer["blocks"], jnp.int32),
-                pos=jnp.asarray(layer["pos"], jnp.int32),
-                length=jnp.asarray(layer["length"], jnp.int32),
-                scores=None if leaf.scores is None
-                else jnp.asarray(layer["scores"], jnp.float32))
+            if isinstance(leaf, pagedlib.PagedKVCache):
+                sections[section][key] = leaf._replace(
+                    blocks=jnp.asarray(layer["blocks"], jnp.int32),
+                    pos=jnp.asarray(layer["pos"], jnp.int32),
+                    length=jnp.asarray(layer["length"], jnp.int32),
+                    scores=None if leaf.scores is None
+                    else jnp.asarray(layer["scores"], jnp.float32))
+            elif isinstance(leaf, pagedlib.PagedRingCache):
+                sections[section][key] = leaf._replace(
+                    blocks=jnp.asarray(layer["blocks"], jnp.int32),
+                    pos=jnp.asarray(layer["pos"], jnp.int32),
+                    next_pos=jnp.asarray(layer["next_pos"], jnp.int32))
+            else:                                   # SSM state
+                sections[section][key] = MambaState(
+                    conv=jnp.asarray(layer["conv"], leaf.conv.dtype),
+                    ssm=jnp.asarray(layer["ssm"], leaf.ssm.dtype))
         return sub._replace(pos=jnp.asarray(snap.state_pos, jnp.int32),
                             blocks=sections["blocks"],
                             tail=sections["tail"])
@@ -704,10 +776,19 @@ class Engine:
         ``retain=False`` (preemption parcels): the fork takes no references
         of its own — the request's existing holds travel with the parcel
         instead, so discarding the parcel's snapshot needs no release.
+
+        Ring layers fork exactly like KV layers (their residue-class tables
+        map pool blocks too); SSM layers have no blocks to fork — their
+        whole per-lane state is copied dense into the snapshot and charged
+        as ``dense_bytes`` (skipping it would under-charge hybrid
+        snapshots and let the LRU evict them late).
         """
         plan = []
         n_swap = 0
         for section, key, leaf in self._lane_layers(sub):
+            if isinstance(leaf, MambaState):
+                plan.append((section, key, leaf, None, None, None))
+                continue
             blocks = np.asarray(leaf.blocks)
             owned = np.asarray(leaf.owned)
             swap = (blocks >= 0) & (blocks == owned)
@@ -727,19 +808,31 @@ class Engine:
         sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
         dense_bytes = int(np.asarray(sub.pos).nbytes)
         for section, key, leaf, blocks, owned, swap in plan:
+            if isinstance(leaf, MambaState):
+                layer = {"kind": "ssm",
+                         "conv": np.asarray(leaf.conv).copy(),
+                         "ssm": np.asarray(leaf.ssm).copy()}
+                dense_bytes += layer["conv"].nbytes + layer["ssm"].nbytes
+                tabs[section][key] = layer
+                continue
             k = int(swap.sum())
             new_owned = owned.copy()
             new_owned[swap] = fresh[fi:fi + k]
             fi += k
             taken.append(blocks[swap].astype(np.int64).reshape(-1))
             mapped_all.append(blocks[blocks >= 0].astype(np.int64).reshape(-1))
-            layer = {"blocks": blocks.copy(),
-                     "pos": np.asarray(leaf.pos).copy(),
-                     "length": np.asarray(leaf.length).copy(),
-                     "scores": None if leaf.scores is None
-                     else np.asarray(leaf.scores).copy()}
-            dense_bytes += sum(a.nbytes for a in layer.values()
-                               if a is not None)
+            if isinstance(leaf, pagedlib.PagedRingCache):
+                layer = {"kind": "ring", "blocks": blocks.copy(),
+                         "pos": np.asarray(leaf.pos).copy(),
+                         "next_pos": np.asarray(leaf.next_pos).copy()}
+            else:
+                layer = {"kind": "kv", "blocks": blocks.copy(),
+                         "pos": np.asarray(leaf.pos).copy(),
+                         "length": np.asarray(leaf.length).copy(),
+                         "scores": None if leaf.scores is None
+                         else np.asarray(leaf.scores).copy()}
+            dense_bytes += sum(a.nbytes for kk, a in layer.items()
+                               if kk != "kind" and a is not None)
             tabs[section][key] = layer
             sections[section][key] = leaf._replace(
                 owned=jnp.asarray(new_owned, jnp.int32))

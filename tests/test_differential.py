@@ -29,7 +29,13 @@ agree:
     paged-in-model serving equals dense serving token-for-token on mixed
     cold + prefix-hit traffic, the engine verifiably decoded through
     ``PagedKVCache`` tables (never a dense ``KVCache`` slot state), and
-    the pool's refcounts balance after every request retires.
+    the pool's refcounts balance after every request retires,
+(e) the in-model leg extended to the newly eligible architecture
+    families: ring-window, pure-SSM and hybrid stacks run the same
+    per-policy x {compaction on, off} matrix — paged serving equals dense
+    token-for-token while provably decoding through block tables
+    (``PagedKVCache``/``PagedRingCache``/per-lane ``MambaState`` leaves,
+    never a dense ``KVCache``/``RingKVCache`` slot state).
 """
 import dataclasses
 
@@ -39,7 +45,9 @@ import pytest
 
 from repro.configs.base import LaCacheConfig, ModelConfig
 from repro.core import paged as pagedlib
+from repro.core.cache import MambaState
 from repro.core.policy import policy_names
+from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.engine import Engine
 
@@ -258,3 +266,121 @@ def test_paged_backend_matches_dense_with_compaction(policy, small_model):
 
     for d, p in zip(serve("dense"), serve("paged")):
         np.testing.assert_array_equal(p, d)
+
+
+# --------------------------------------------------------------------------- #
+# (e) newly eligible architectures: ring-window / pure-SSM / hybrid stacks
+# --------------------------------------------------------------------------- #
+ARCH_KINDS = ("ring", "ssm", "hybrid")
+
+
+def arch_config(kind: str) -> ModelConfig:
+    """Minimal config per newly-eligible family (CPU-fast, one full period)."""
+    base = dict(name=f"t-{kind}", arch_type="dense", n_layers=2, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+                dtype="float32",
+                lacache=LaCacheConfig(budget=24, n_sink=2, n_recent=4,
+                                      chunk=2))
+    if kind == "ring":
+        base.update(local_global_pattern=1, sliding_window=6)
+    elif kind == "ssm":
+        base.update(arch_type="ssm", attn_every=-1, d_state=8, d_conv=3)
+    else:
+        # all three layer kinds in one stack: mamba(0), local-attn(1),
+        # mamba(2), global-attn(3)
+        base.update(arch_type="hybrid", attn_every=2, n_layers=4,
+                    local_global_pattern=3, sliding_window=6,
+                    d_state=8, d_conv=3)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def arch_models():
+    cache = {}
+
+    def get(kind):
+        if kind not in cache:
+            cfg = arch_config(kind)
+            params, _ = M.init(cfg, jax.random.PRNGKey(0))
+            cache[kind] = (cfg, params)
+        return cache[kind]
+
+    return get
+
+
+def _assert_paged_in_model_arch(eng, cfg):
+    """Decode verifiably went through block tables: every slot-state layer
+    leaf is a paged representation (table or per-lane SSM state) and no
+    dense slot cache exists anywhere in the serving state."""
+    assert eng._paged_in_model
+    leaves = list(eng._slot_states.blocks.values()) \
+        + list(eng._slot_states.tail.values())
+    assert leaves
+    allowed = (pagedlib.PagedKVCache, pagedlib.PagedRingCache, MambaState)
+    assert all(isinstance(v, allowed) for v in leaves)
+    assert not any(isinstance(v, (M.KVCache, L.RingKVCache)) for v in leaves)
+    assert eng._slot_states.kv_pool is not None
+    specs = cfg.layer_specs()
+    if any(s.attn == "local" for s in specs):
+        assert any(isinstance(v, pagedlib.PagedRingCache) for v in leaves)
+        # the ring tables really map pool blocks (content lives in-pool)
+        ring = next(v for v in leaves
+                    if isinstance(v, pagedlib.PagedRingCache))
+        assert (np.asarray(ring.blocks) >= 0).any()
+    if any(s.kind == "mamba" for s in specs):
+        assert any(isinstance(v, MambaState) for v in leaves)
+    if any(s.attn == "global" for s in specs):
+        assert any(isinstance(v, pagedlib.PagedKVCache) for v in leaves)
+
+
+@pytest.mark.parametrize(
+    "compaction",
+    [False,
+     # the compaction leg doubles the sweep; the fast CI lane keeps the
+     # no-compaction matrix and tier-1 runs both
+     pytest.param(True, marks=pytest.mark.slow)],
+    ids=["no-compaction", "compaction"])
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("kind", ARCH_KINDS)
+def test_paged_in_model_matches_dense_ring_ssm_hybrid(kind, policy,
+                                                      compaction,
+                                                      arch_models):
+    """(e) ring/SSM/hybrid stacks through the in-model paged path: mixed
+    traffic (two prefix-sharing cached requests + one cold request) under
+    ``kv_backend="paged"`` equals the dense backend token-for-token for
+    every registered policy, with and without compaction firing — while
+    provably decoding through block tables (ring residue tables, per-lane
+    SSM states, budgeted KV tables; no dense slot state anywhere) and
+    conserving pool refcounts once every request retires."""
+    if kind == "ssm" and compaction:
+        pytest.skip("pure-SSM stacks have no KV cache: compaction is "
+                    "structurally a no-op (covered by the other leg)")
+    cfg, params = arch_models(kind)
+    budget = 12 if compaction else 24
+    c = with_policy(cfg, policy, budget)
+    n_slots = 64 if (compaction and policy == "full") else budget
+    rng = np.random.default_rng(7)
+    base = 16 if compaction else 8      # > budget => prefill compaction
+    shared = rng.integers(0, cfg.vocab_size, (base,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                                    (3 + i,))])
+               for i in range(2)]
+    prompts.append(rng.integers(0, cfg.vocab_size, (base + 5,)))  # cold
+
+    def serve(kv_backend):
+        eng = Engine(c, params, budget=n_slots, max_batch=2,
+                     kv_backend=kv_backend)
+        reqs = [eng.submit(p, 6, cache_prefix=(i < 2))
+                for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, reqs
+
+    _, dense_reqs = serve("dense")
+    eng, paged_reqs = serve("paged")
+    for d, p in zip(dense_reqs, paged_reqs):
+        np.testing.assert_array_equal(p.tokens, d.tokens)
+    _assert_paged_in_model_arch(eng, cfg)
+    pagedlib.check_invariants(eng.kv_store.pool)
+    eng.prefix_cache.clear()
+    pagedlib.check_invariants(eng.kv_store.pool)
+    assert eng.kv_bytes_in_use == eng.lane_owned_bytes

@@ -637,6 +637,39 @@ def test_preemption_resumes_exactly(small_model):
     paged.check_invariants(eng.kv_store.pool)
 
 
+def test_preempted_deadline_request_not_starved_by_later_arrivals(small_model):
+    """Requeue-fairness regression: a preempted request re-enters admission
+    at its *original* submit order. With a fresh sequence number, a later
+    arrival with the same deadline would tie-break ahead of it at every
+    admission round and starve it indefinitely."""
+    cfg, params = small_model
+    rng = np.random.default_rng(14)
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    a = eng.submit(rng.integers(0, cfg.vocab_size, (12,)), 8, deadline=10.0)
+    for _ in range(3):
+        eng.step()
+    assert a.status == "running"
+    b = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 4, deadline=1.0)
+    # C arrives AFTER A was submitted, with A's deadline: once B preempts A,
+    # the pending heap holds {A (requeued), C} at the same deadline
+    c = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2, deadline=10.0)
+    eng.step()
+    assert a.status == "pending" and b.status == "running"
+    assert eng.preemptions == 1
+    # drive until B retires, then one more tick for the freed slot's
+    # admission: A must win the deadline tie against C by original
+    # submission order
+    while b.status != "finished":
+        eng.step()
+    eng.step()
+    assert a.status == "running", (a.status, c.status)
+    assert c.status == "pending"
+    eng.run()
+    assert a.status == "finished" and c.status == "finished"
+    paged.check_invariants(eng.kv_store.pool)
+
+
 def test_fifo_never_preempts_and_dense_preempt_rejected(small_model):
     cfg, params = small_model
     rng = np.random.default_rng(12)

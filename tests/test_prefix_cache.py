@@ -284,18 +284,25 @@ def test_bucketed_prefill_matches_exact_localglobal():
                                    atol=1e-4, rtol=1e-4)
 
 
-def test_bucketed_prefill_rejects_mamba():
+def test_bucketed_prefill_accepts_mamba_pad_masked():
+    """Bucketing is no longer attention-only: SSM layers run the pad-masked
+    scan, so hybrid configs accept a traced true_len (exactness is pinned
+    down by tests/test_ring_paged.py) and the engine keeps bucketing on."""
     cfg = ModelConfig(
         name="m", arch_type="hybrid", n_layers=8, attn_every=4, d_model=64,
         n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=97, head_dim=16,
         dtype="float32", lacache=LaCacheConfig(budget=64, policy="full"))
     params, _ = M.init(cfg, jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="attention-only"):
-        M.prefill(params, cfg, jnp.zeros((1, 16), jnp.int32), n_slots=64,
-                  true_len=jnp.asarray(9, jnp.int32))
-    # and the engine silently falls back to exact-length prefill
+    logits, state = M.prefill(params, cfg, jnp.zeros((1, 16), jnp.int32),
+                              n_slots=64, true_len=jnp.asarray(9, jnp.int32))
+    assert int(state.pos) == 9
     eng = Engine(cfg, params, budget=64, bucket_prefill=True)
-    assert not eng.bucket_prefill
+    assert eng.bucket_prefill
+    # frames (encoder) inputs are the remaining exclusion
+    with pytest.raises(ValueError, match="patches/frames"):
+        M.prefill(params, cfg, jnp.zeros((1, 16), jnp.int32), n_slots=64,
+                  true_len=jnp.asarray(9, jnp.int32),
+                  frames=jnp.zeros((1, 4, 128)))
 
 
 def test_engine_bucketing_shares_executables_and_matches(small_model):

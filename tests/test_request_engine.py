@@ -29,6 +29,30 @@ def _req(n=4, new=3):
     return Request(prompt=np.arange(n, dtype=np.int32), max_new_tokens=new)
 
 
+def test_bucket_len_clamps_at_model_max(small_model):
+    """Satellite-bugfix regression: unbounded power-of-two doubling would
+    pad a prompt just over a large bucket far past cfg.max_position (and
+    any cache budget). Buckets clamp at the model max; prompts beyond it
+    dispatch at exact length."""
+    cfg, params = small_model
+    c = dataclasses.replace(cfg, max_position=64)
+    eng = Engine(c, params, budget=48, bucket_prefill=True, min_bucket=16)
+    assert eng._bucket_len(10) == 16          # normal power-of-two bucket
+    assert eng._bucket_len(16) == 16
+    assert eng._bucket_len(17) == 32
+    assert eng._bucket_len(50) == 64          # doubling clamps at the max
+    assert eng._bucket_len(64) == 64
+    assert eng._bucket_len(65) == 65          # past the max: exact length
+    assert eng._bucket_len(200) == 200
+    # end-to-end: a prompt just over the largest bucket must not dispatch
+    # a padded shape beyond max_position
+    prompt = np.random.default_rng(0).integers(0, c.vocab_size, (40,))
+    eng.submit(prompt, 2)
+    eng.run()
+    assert all(shape <= 64 for kind, shape in eng.prefill_shapes
+               if kind == "prefill")
+
+
 def test_scheduler_admits_fifo_into_lowest_slots():
     s = Scheduler(2)
     r1, r2, r3 = _req(), _req(), _req()

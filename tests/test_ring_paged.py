@@ -1,0 +1,426 @@
+"""In-model paged decode for ring-window / SSM / hybrid stacks.
+
+Coverage, bottom-up:
+
+* **eligibility** — ``paged_decode_eligible`` admits ring-window, pure-SSM
+  and hybrid configs (and still rejects cross-attention / M-RoPE),
+* **ring table ops** — ``paged_ring_append`` vs the dense ring oracle
+  through the wrap boundary (``pos == w-1 -> w -> w+1``), plus a
+  hypothesis churn property extending the fork/splice protocol of
+  ``tests/test_paged.py`` to ring lanes (refcount conservation, CoW
+  isolation of forked snapshots),
+* **kernel** — the windowed paged-decode dispatch: Pallas (interpret),
+  the ring oracle and the dense ring-mask reference agree,
+* **engine** — wrap-boundary decode through both backends token-for-token,
+  hybrid snapshot byte accounting (ring metadata + SSM states charged, the
+  LRU residency identity holds under any eviction order), and bucketed
+  prefill for SSM/hybrid stacks via the pad-masked scan.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.core import paged
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+KVH, HD = 2, 8
+W, BS = 6, 4          # ring window / pool block size for the table tests
+
+
+def base_cfg(**kw) -> ModelConfig:
+    d = dict(name="t", arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+             n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+             dtype="float32",
+             lacache=LaCacheConfig(budget=24, n_sink=2, n_recent=4, chunk=2))
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+def ring_cfg(**kw):
+    return base_cfg(local_global_pattern=1, sliding_window=W, **kw)
+
+
+def ssm_cfg(**kw):
+    return base_cfg(arch_type="ssm", attn_every=-1, d_state=8, d_conv=3, **kw)
+
+
+def hybrid_cfg(**kw):
+    # mamba(0), local-attn(1), mamba(2), global-attn(3): all three kinds
+    return base_cfg(arch_type="hybrid", attn_every=2, n_layers=4,
+                    local_global_pattern=3, sliding_window=W,
+                    d_state=8, d_conv=3, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Eligibility matrix
+# --------------------------------------------------------------------------- #
+def test_paged_decode_eligible_covers_ring_ssm_hybrid():
+    """The acceptance gate: every layer kind has a paged representation, so
+    only cross-attention and M-RoPE remain on the store-backed fallback."""
+    assert M.paged_decode_eligible(base_cfg())
+    assert M.paged_decode_eligible(ring_cfg())
+    assert M.paged_decode_eligible(ssm_cfg())
+    assert M.paged_decode_eligible(hybrid_cfg())
+    assert not M.paged_decode_eligible(base_cfg(mrope=True))
+    assert not M.paged_decode_eligible(base_cfg(cross_attention=True,
+                                                encoder_layers=2))
+
+
+# --------------------------------------------------------------------------- #
+# Ring table ops: wrap boundary + churn vs the dense ring oracle
+# --------------------------------------------------------------------------- #
+def _fresh_ring_lane(n_blocks=48):
+    store = paged.PagedStateStore(n_blocks, BS, KVH, HD, jnp.float32)
+    mb = paged.blocks_for(W, BS)
+    owned = store.alloc_blocks(mb)
+    kv = paged.PoolKV(k=store.pool.k, v=store.pool.v)
+    st = paged.PagedRingCache(
+        blocks=jnp.full((1, mb), -1, jnp.int32),
+        owned=jnp.asarray(owned, jnp.int32)[None],
+        pos=jnp.full((1, W), -1, jnp.int32),
+        next_pos=jnp.zeros((1,), jnp.int32))
+    return store, kv, st
+
+
+def _check_ring_oracle(kv, st, oracle):
+    """Gathered paged ring view == dense ring buffer at every live slot;
+    metadata identical everywhere."""
+    gk, gv = paged.paged_gather_view(kv, st, W)
+    opos = np.asarray(oracle.pos)
+    np.testing.assert_array_equal(np.asarray(st.pos[0]), opos)
+    assert int(st.next_pos[0]) == int(oracle.next_pos)
+    live = opos >= 0
+    np.testing.assert_array_equal(np.asarray(gk[0])[live],
+                                  np.asarray(oracle.k[0])[live])
+    np.testing.assert_array_equal(np.asarray(gv[0])[live],
+                                  np.asarray(oracle.v[0])[live])
+
+
+def test_ring_append_wrap_boundary_matches_dense():
+    """Appends driven through pos == w-1 -> w -> w+1: the wrap overwrites
+    slot 0 then slot 1, the table stays mapped to the occupied prefix, and
+    the gathered view equals the dense ring buffer at every step."""
+    rng = np.random.default_rng(0)
+    store, kv, st = _fresh_ring_lane()
+    oracle = L.init_ring_cache(1, W, KVH, HD, jnp.float32)
+    for step in range(W + 3):          # crosses the wrap by 3 slots
+        kn = jnp.asarray(rng.normal(size=(1, 1, KVH, HD)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(1, 1, KVH, HD)), jnp.float32)
+        kv, st = paged.paged_ring_append(kv, st, kn, vn)
+        oracle = L.ring_append(oracle, kn, vn)
+        _check_ring_oracle(kv, st, oracle)
+        paged.check_invariants(store.pool)
+    # wrapped: every slot occupied, positions cover the last W appends
+    assert (np.asarray(st.pos[0]) >= 0).all()
+    assert sorted(np.asarray(st.pos[0]).tolist()) == list(range(3, W + 3))
+    store.release_blocks(np.asarray(st.owned[0]))
+    paged.check_invariants(store.pool)
+    assert paged.blocks_in_use(store.pool) == 0
+
+
+def _run_ring_ops(ops):
+    """Drive one lane's paged ring through a random interleaving of
+    append/fork/splice while mirroring every mutation on a dense
+    RingKVCache oracle and the engine's host-side refcount protocol —
+    the ring extension of ``tests/test_paged.py::_run_inmodel_ops``."""
+    rng = np.random.default_rng(31)
+    mb = paged.blocks_for(W, BS)
+    store, kv, st = _fresh_ring_lane()
+    oracle = L.init_ring_cache(1, W, KVH, HD, jnp.float32)
+    lane_shared = np.zeros((0,), np.int64)
+    snaps = []   # (blocks, pos, next_pos, gathered k, gathered v)
+
+    for name, arg in ops:
+        if name == "append":
+            for _ in range(max(1, arg % 4)):
+                kn = jnp.asarray(rng.normal(size=(1, 1, KVH, HD)),
+                                 jnp.float32)
+                vn = jnp.asarray(rng.normal(size=(1, 1, KVH, HD)),
+                                 jnp.float32)
+                kv, st = paged.paged_ring_append(kv, st, kn, vn)
+                oracle = L.ring_append(oracle, kn, vn)
+        elif name == "fork":
+            # engine-style refcount fork: the snapshot holds every mapped
+            # block; the lane's owned mapped blocks swap for fresh reserves
+            blocks = np.asarray(st.blocks[0])
+            ownd = np.asarray(st.owned[0])
+            mapped = blocks >= 0
+            swap = mapped & (blocks == ownd)
+            try:
+                fresh = store.alloc_blocks(int(swap.sum()))
+            except paged.PoolExhausted:
+                continue
+            new_owned = ownd.copy()
+            new_owned[swap] = fresh
+            store.retain_blocks(blocks[mapped])
+            lane_shared = np.concatenate([lane_shared, blocks[swap]])
+            st = st._replace(owned=jnp.asarray(new_owned, jnp.int32)[None])
+            gk, gv = paged.paged_gather_view(kv, st, W)
+            snaps.append((blocks.copy(), np.asarray(st.pos[0]).copy(),
+                          int(st.next_pos[0]), np.asarray(gk[0]).copy(),
+                          np.asarray(gv[0]).copy()))
+        elif name == "splice" and snaps:
+            sblocks, spos, snext, sk, sv = snaps[arg % len(snaps)]
+            store.release_blocks(lane_shared)
+            ids = sblocks[sblocks >= 0]
+            store.retain_blocks(ids)
+            lane_shared = ids.astype(np.int64).copy()
+            st = st._replace(blocks=jnp.asarray(sblocks, jnp.int32)[None],
+                             pos=jnp.asarray(spos, jnp.int32)[None],
+                             next_pos=jnp.asarray([snext], jnp.int32))
+            oracle = L.RingKVCache(
+                k=jnp.asarray(sk, jnp.float32)[None],
+                v=jnp.asarray(sv, jnp.float32)[None],
+                pos=jnp.asarray(spos, jnp.int32),
+                next_pos=jnp.asarray(snext, jnp.int32))
+        _check_ring_oracle(kv, st, oracle)
+        paged.check_invariants(store.pool)
+
+    # CoW isolation: every forked snapshot's live view is intact
+    for sblocks, spos, snext, sk, sv in snaps:
+        view = paged.PagedRingCache(
+            blocks=jnp.asarray(sblocks, jnp.int32)[None], owned=st.owned,
+            pos=jnp.asarray(spos, jnp.int32)[None],
+            next_pos=jnp.asarray([snext], jnp.int32))
+        gk, gv = paged.paged_gather_view(kv, view, W)
+        live = spos >= 0
+        np.testing.assert_array_equal(np.asarray(gk[0])[live], sk[live])
+        np.testing.assert_array_equal(np.asarray(gv[0])[live], sv[live])
+
+    store.release_blocks(lane_shared)
+    store.release_blocks(np.asarray(st.owned[0]))
+    for sblocks, *_ in snaps:
+        store.release_blocks(sblocks[sblocks >= 0])
+    paged.check_invariants(store.pool)
+    assert paged.blocks_in_use(store.pool) == 0
+
+
+def test_ring_table_churn_deterministic():
+    """A fixed, branch-covering interleaving (runs without hypothesis):
+    warmup -> fork -> CoW append over the shared wrap slot -> splice back
+    -> append over the spliced (shared) table -> second fork/splice."""
+    _run_ring_ops([
+        ("append", 3), ("append", 3), ("fork", 0), ("append", 2),
+        ("append", 3), ("fork", 1), ("splice", 0), ("append", 1),
+        ("splice", 1), ("append", 2),
+    ])
+
+
+def test_ring_table_invariants_random_churn():
+    """Hypothesis: random append/fork/splice interleavings on a live paged
+    ring never double-free, never leak, match the dense ring oracle after
+    every op, and never corrupt a forked snapshot (CoW isolation)."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    op = st_.tuples(st_.sampled_from(["append", "fork", "splice"]),
+                    st_.integers(0, 11))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st_.lists(op, min_size=1, max_size=20))
+    def run(ops):
+        _run_ring_ops(ops)
+
+    run()
+
+
+# --------------------------------------------------------------------------- #
+# Kernel: windowed paged decode dispatch vs oracle vs dense ring mask
+# --------------------------------------------------------------------------- #
+def _ring_layout(rng, b, next_pos):
+    """Random per-lane rings satisfying the residue invariant, scattered
+    into a shuffled pool."""
+    mb = paged.blocks_for(W, BS)
+    n_blocks = b * mb + 2
+    pool_k = jnp.asarray(rng.normal(size=(n_blocks, BS, KVH, HD)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(n_blocks, BS, KVH, HD)),
+                         jnp.float32)
+    perm = rng.permutation(n_blocks)
+    tables = np.full((b, mb), -1, np.int32)
+    pos = np.full((b, W), -1, np.int32)
+    pi = 0
+    for bi in range(b):
+        occ = min(int(next_pos[bi]), W)
+        for j in range(-(-occ // BS)):
+            tables[bi, j] = int(perm[pi]); pi += 1
+        for j in range(occ):
+            last = int(next_pos[bi]) - 1
+            pos[bi, j] = last - ((last - j) % W)
+    # dense view for the reference mask computation
+    ids = np.clip(tables, 0, None)
+    kd = np.asarray(pool_k)[ids].reshape(b, mb * BS, KVH, HD)[:, :W]
+    vd = np.asarray(pool_v)[ids].reshape(b, mb * BS, KVH, HD)[:, :W]
+    return (pool_k, pool_v, jnp.asarray(tables), jnp.asarray(pos),
+            jnp.asarray(kd), jnp.asarray(vd))
+
+
+def test_paged_ring_kernel_matches_oracle_and_dense_mask():
+    """The windowed paged-decode dispatch: Pallas (interpret) == the ring
+    oracle == the dense ring-mask reference on the same KV, to <= 1e-5."""
+    rng = np.random.default_rng(5)
+    b = 3
+    next_pos = jnp.asarray([3, W, W + 5], jnp.int32)   # warmup/wrap/wrapped
+    q = jnp.asarray(rng.normal(size=(b, 4, HD)), jnp.float32)  # h=4, g=2
+    pk, pv, tables, pos, kd, vd = _ring_layout(rng, b, np.asarray(next_pos))
+    ref = kref.paged_ring_attention_reference(q, pk, pv, tables, pos,
+                                              next_pos, window=W)
+    pal = kops.paged_ring_decode_attention(q, pk, pv, tables, pos, next_pos,
+                                           window=W, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # dense ring-mask reference per lane (the mask the dense decode applies)
+    valid = (pos >= 0) & (pos > (next_pos - 1 - W)[:, None]) \
+        & (pos <= (next_pos - 1)[:, None])
+    dense = kref.mha_reference(q[:, None], kd, vd, causal=False,
+                               kv_valid=valid)[:, 0]
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense),
+                               atol=1e-6, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Engine: wrap-boundary serving, accounting, bucketed SSM/hybrid prefill
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(mk):
+        if mk not in cache:
+            cfg = {"ring": ring_cfg, "ssm": ssm_cfg,
+                   "hybrid": hybrid_cfg}[mk]()
+            params, _ = M.init(cfg, jax.random.PRNGKey(0))
+            cache[mk] = (cfg, params)
+        return cache[mk]
+
+    return get
+
+
+def test_ring_wrap_boundary_dense_vs_paged_serving(models):
+    """A prompt of length w-1 decoded 4 tokens appends at positions
+    w-1 -> w -> w+1 (the wrap overwrites slot 0 then slot 1) through both
+    backends; tokens must agree at every step and the paged engine must
+    have decoded through ring residue tables."""
+    cfg, params = models("ring")
+    prompt = np.random.default_rng(11).integers(0, cfg.vocab_size, (W - 1,))
+
+    def serve(kv_backend):
+        eng = Engine(cfg, params, budget=24, max_batch=1,
+                     kv_backend=kv_backend)
+        req = eng.submit(prompt, 4)
+        eng.run()
+        return eng, req.tokens
+
+    _, dense_toks = serve("dense")
+    eng, paged_toks = serve("paged")
+    np.testing.assert_array_equal(paged_toks, dense_toks)
+    ring_leaves = [v for v in list(eng._slot_states.blocks.values())
+                   + list(eng._slot_states.tail.values())
+                   if isinstance(v, paged.PagedRingCache)]
+    assert ring_leaves
+    # prompt (w-1) then 3 decode appends (the 4th token samples without an
+    # append): positions w-1, w, w+1 went through the ring — the wrap
+    assert int(np.asarray(ring_leaves[0].next_pos).max()) == W + 2
+    assert all(not isinstance(v, L.RingKVCache)
+               for v in list(eng._slot_states.blocks.values())
+               + list(eng._slot_states.tail.values()))
+
+
+def test_hybrid_snapshot_accounting_charges_ring_and_ssm(models):
+    """Satellite-bugfix regression: hybrid TableSnapshots must charge ring
+    metadata AND whole SSM states as dense bytes (under-charging them would
+    let the LRU keep hybrid entries long past their real footprint), and
+    the residency identity nbytes == resident-blocks + dense overhead must
+    hold through any eviction order."""
+    from repro.serving.prefix import tree_bytes
+    cfg, params = models("hybrid")
+    eng = Engine(cfg, params, budget=24, max_batch=1, kv_backend="paged")
+    prompt = np.random.default_rng(13).integers(0, cfg.vocab_size, (40,))
+    eng.submit(prompt, 2, cache_prefix=True)
+    eng.run()
+    pc, store = eng.prefix_cache, eng.kv_store
+    assert len(pc) >= 2
+    # every snapshot layer set carries all three kinds, and SSM/ring bytes
+    # are part of the charge
+    n_mamba = sum(1 for s in cfg.layer_specs() if s.kind == "mamba")
+    ssm_bytes = n_mamba * (
+        (cfg.d_conv - 1) * cfg.d_inner * 4 + cfg.d_inner * cfg.d_state * 4)
+    for e in pc._entries.values():
+        kinds = {layer.get("kind") for sec in e.snap.tables.values()
+                 for layer in sec.values()}
+        assert kinds == {"kv", "ring", "ssm"}
+        assert e.snap.dense_bytes > ssm_bytes
+        assert e.nbytes >= e.snap.dense_bytes
+
+    def attributable():
+        return store.bytes_in_use - eng.lane_owned_bytes + sum(
+            e.snap.dense_bytes + tree_bytes(e.logits)
+            for e in pc._entries.values())
+
+    assert pc.nbytes == attributable()
+    while len(pc) > 0:
+        assert pc.evict_lru()
+        assert pc.nbytes == attributable()
+        paged.check_invariants(store.pool)
+    assert pc.nbytes == 0
+    assert store.bytes_in_use == eng.lane_owned_bytes
+
+
+@pytest.mark.parametrize("mk", ["ssm", "hybrid"])
+def test_bucketed_prefill_ssm_hybrid_exact(mk, models):
+    """Bucketed prefill via the pad-masked scan: padded dispatches with a
+    traced true_len produce token streams identical to exact-length
+    prefill for SSM and hybrid stacks, while actually sharing bucket
+    shapes across distinct prompt lengths."""
+    cfg, params = models(mk)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n in (5, 9, 13)]
+    outs = {}
+    for bucket in (False, True):
+        eng = Engine(cfg, params, budget=24, max_batch=2,
+                     bucket_prefill=bucket, min_bucket=8)
+        assert eng.bucket_prefill == bucket   # _can_bucket admits SSM now
+        reqs = [eng.submit(p, 4) for p in prompts]
+        eng.run()
+        outs[bucket] = [r.tokens for r in reqs]
+        if bucket:
+            shapes = {s for k, s in eng.prefill_shapes if k == "prefill"}
+            assert shapes == {8, 16}          # 3 lengths -> 2 buckets
+    for exact, padded in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(padded, exact)
+
+
+def test_mamba_train_pad_masked_scan_freezes_state():
+    """Unit check of the pad-masked scan: with true_len = t_real, the
+    padded forward's final MambaState (ssm + conv window) equals the
+    unpadded forward's, and real-position outputs are identical."""
+    cfg = ssm_cfg()
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(19)
+    t_real, t_pad = 9, 16
+    toks = rng.integers(0, cfg.vocab_size, (1, t_real))
+    padded = np.zeros((1, t_pad), np.int64)
+    padded[:, :t_real] = toks
+    logits_a, state_a = M.prefill(params, cfg, jnp.asarray(toks), n_slots=24)
+    logits_b, state_b = M.prefill(params, cfg, jnp.asarray(padded),
+                                  n_slots=24,
+                                  true_len=jnp.asarray(t_real, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_b),
+                               atol=1e-5, rtol=1e-5)
+    assert int(state_a.pos) == int(state_b.pos) == t_real
+    for la, lb in zip(jax.tree.leaves((state_a.blocks, state_a.tail)),
+                      jax.tree.leaves((state_b.blocks, state_b.tail))):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5, rtol=1e-5)
+    # decoding from both states stays in lockstep
+    tok = jnp.asarray([[7]])
+    a, _ = M.decode_step(params, cfg, state_a, tok)
+    b, _ = M.decode_step(params, cfg, state_b, tok)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
