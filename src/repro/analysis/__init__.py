@@ -1,0 +1,29 @@
+"""repro.analysis: invariant lints + runtime sanitizer for the serving stack.
+
+Three AST/call-graph passes enforce contracts the paged serving stack
+(PRs 3-5) relies on but no generic tool checks:
+
+* trace-purity (TRC001/TRC002/TRC003): no eager pool operations, host
+  ``np.*`` compute, environment reads, or host-state mutation reachable
+  from inside a traced region (``jax.jit`` / ``shard_map`` / ``lax.cond``
+  / ``lax.scan`` / ``vmap`` ...).
+* donation-discipline (DON001/DON002): a pytree donated to a
+  ``jax.jit(..., donate_argnums/donate_argnames)`` dispatch is dead after
+  the call; values handed out by reference (prefix-cache hits, paged
+  store gathers) must never be donated.
+* pytree-registration (PYT001/PYT002): dataclasses constructed under
+  trace must be registered pytrees, and registered aux/meta data must be
+  hashable static metadata, never arrays.
+
+Run ``python -m repro.analysis [--fail-on-warn] PATH...`` or call
+:func:`run_paths` directly. Intentional eager/trace boundaries are
+annotated in source with ``# analysis: allow(RULE)`` on the flagged line
+or the line above.
+
+The fourth component, :mod:`repro.analysis.sanitizer`, is a *runtime*
+shadow allocator enabled by ``REPRO_SANITIZE=1`` (see its docstring); it
+is imported lazily by ``repro.core.paged`` and never by the lint CLI.
+"""
+from repro.analysis.common import Finding, run_paths
+
+__all__ = ["Finding", "run_paths"]

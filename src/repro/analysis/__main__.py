@@ -1,0 +1,48 @@
+"""CLI: ``python -m repro.analysis [--fail-on-warn] PATH...``.
+
+Prints one ``path:line: RULE: message`` per finding (stable order), a
+summary line, and exits 1 under ``--fail-on-warn`` when anything fired.
+``--rules TRC`` restricts to rule-ID prefixes (comma separated).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.common import RULES, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant lints for the repro serving stack "
+                    "(trace purity, donation discipline, pytree "
+                    "registration).")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze")
+    ap.add_argument("--fail-on-warn", action="store_true",
+                    help="exit 1 if any finding is reported")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule-ID prefixes to keep "
+                         "(e.g. 'TRC001,DON')")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}: {desc}")
+        return 0
+
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    findings = run_paths(args.paths, rules=rules)
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}")
+    return 1 if (findings and args.fail_on_warn) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,465 @@
+"""Module index + call graph + traced-region discovery for the lint passes.
+
+The passes need three capabilities:
+
+* resolve a ``Call`` node to the function definition it invokes (through
+  import aliases, ``from``-imports, ``self.method``, ``functools.partial``
+  and nested local defs);
+* find every *traced root*: the callable handed to ``jax.jit`` /
+  ``vmap`` / ``grad`` / ``shard_map`` / ``lax.cond`` / ``lax.scan`` / ...
+  whether as a call argument, a decorator, or a factory result;
+* walk the *traced region* — the set of analyzed functions reachable from
+  a root through resolvable calls — recording one example call chain per
+  function for diagnostics.
+
+Resolution is best-effort: an unresolvable callee simply ends a call-graph
+edge. Passes that must not miss eager pool primitives therefore also match
+on distinctive terminal attribute names (``alloc_blocks`` etc.), which
+import aliasing cannot hide.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import parse_allows
+
+# jax transforms whose callable argument is traced. Maps terminal name ->
+# indices of callable arguments (-1 = "list of callables at index 1",
+# used by lax.switch).
+_JAX_WRAPPERS: Dict[str, Tuple[int, ...]] = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+    "shard_map": (0,),
+}
+_LAX_WRAPPERS: Dict[str, Tuple[int, ...]] = {
+    "cond": (1, 2), "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "map": (0,), "associative_scan": (0,), "switch": (-1,),
+}
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """Flatten ``a.b.c`` into ``["a", "b", "c"]``; None if the head is not
+    a plain Name (e.g. a call result or subscript)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def terminal_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One analyzed function / method / lambda."""
+
+    module: "ModuleInfo"
+    qualname: str                       # "f", "Cls.f", or "<lambda:LINE>"
+    node: ast.AST                       # FunctionDef | Lambda
+    cls: Optional[str] = None           # enclosing class name, if a method
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+    def __hash__(self):
+        return hash((self.module.path, self.qualname, self.node.lineno))
+
+    def __eq__(self, other):
+        return (isinstance(other, FuncInfo)
+                and self.module.path == other.module.path
+                and self.qualname == other.qualname
+                and self.node.lineno == other.node.lineno)
+
+    def __repr__(self):
+        return f"<{self.module.name}.{self.qualname}>"
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    module: "ModuleInfo"
+    is_dataclass: bool = False
+    methods: Dict[str, FuncInfo] = dataclasses.field(default_factory=dict)
+
+
+class ModuleInfo:
+    """Parsed file + symbol tables."""
+
+    def __init__(self, path: Path, name: str, tree: ast.Module, source: str):
+        self.path = str(path)
+        self.name = name
+        self.tree = tree
+        self.source = source
+        self.allows = parse_allows(source)
+        #: local alias -> dotted module ("np" -> "numpy")
+        self.import_alias: Dict[str, str] = {}
+        #: local name -> (module, original name) for ``from m import n as x``
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        self.functions: Dict[str, FuncInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        self._collect()
+
+    def _collect(self) -> None:
+        # imports anywhere in the file (functions import numpy locally);
+        # module-wide scoping over-approximates, which is the safe direction
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    local = a.asname or a.name.split(".")[0]
+                    self.import_alias[local] = (a.name if a.asname
+                                                else a.name.split(".")[0])
+                    if a.asname is None and "." in a.name:
+                        # ``import a.b.c`` binds "a"; remember the full
+                        # path so a.b.c.f resolves by longest prefix
+                        self.import_alias.setdefault(a.name.split(".")[0],
+                                                     a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.from_imports[a.asname or a.name] = (node.module,
+                                                             a.name)
+        for node in self.tree.body:
+            if isinstance(node, FunctionNode):
+                self.functions[node.name] = FuncInfo(self, node.name, node)
+            elif isinstance(node, ast.ClassDef):
+                ci = ClassInfo(node.name, node, self,
+                               is_dataclass=_has_dataclass_decorator(node))
+                for item in node.body:
+                    if isinstance(item, FunctionNode):
+                        fi = FuncInfo(self, f"{node.name}.{item.name}",
+                                      item, cls=node.name)
+                        ci.methods[item.name] = fi
+                        self.functions[fi.qualname] = fi
+                self.classes[node.name] = ci
+
+    def module_alias_target(self, name: str) -> Optional[str]:
+        """Dotted module a local name refers to, if any."""
+        if name in self.import_alias:
+            return self.import_alias[name]
+        if name in self.from_imports:
+            mod, orig = self.from_imports[name]
+            return f"{mod}.{orig}"
+        return None
+
+
+def _has_dataclass_decorator(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = terminal_name(target)
+        if name == "dataclass":
+            return True
+    return False
+
+
+class Index:
+    """All analyzed modules + cross-module resolution."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules = {m.name: m for m in modules}
+        self.by_path = {m.path: m for m in modules}
+        #: method name -> every class method with that name (fallback
+        #: resolution for receiver-typed calls like ``pol.keep_mask``)
+        self.method_index: Dict[str, List[FuncInfo]] = {}
+        for m in modules:
+            for ci in m.classes.values():
+                for name, fi in ci.methods.items():
+                    self.method_index.setdefault(name, []).append(fi)
+
+    @classmethod
+    def build(cls, files: Sequence[Path]) -> "Index":
+        from repro.analysis.common import module_name_for, parse_file
+        mods = []
+        for f in files:
+            tree = parse_file(f)
+            if tree is None:
+                continue
+            mods.append(ModuleInfo(f, module_name_for(f), tree,
+                                   f.read_text()))
+        return cls(mods)
+
+    # -- resolution -------------------------------------------------------
+    def resolve_dotted(self, dotted: List[str]) -> Optional[FuncInfo]:
+        """Resolve ``["repro","core","paged","append"]`` by longest module
+        prefix, the remainder naming a function or ``Class.method``."""
+        for cut in range(len(dotted) - 1, 0, -1):
+            mod = self.modules.get(".".join(dotted[:cut]))
+            if mod is None:
+                continue
+            rest = dotted[cut:]
+            if len(rest) == 1:
+                return mod.functions.get(rest[0])
+            if len(rest) == 2:
+                return mod.functions.get(f"{rest[0]}.{rest[1]}")
+            return None
+        return None
+
+    def resolve_ref(self, mi: ModuleInfo, cls: Optional[str],
+                    node: ast.AST,
+                    local_defs: Optional[Dict[str, FuncInfo]] = None
+                    ) -> Optional[FuncInfo]:
+        """Resolve a function *reference* expression (the callee of a Call,
+        a decorator, or a callable argument) to its FuncInfo."""
+        chain = attr_chain(node)
+        if chain is None:
+            return None
+        if len(chain) == 1:
+            name = chain[0]
+            if local_defs and name in local_defs:
+                return local_defs[name]
+            if name in mi.from_imports:
+                mod, orig = mi.from_imports[name]
+                return self.resolve_dotted(mod.split(".") + [orig])
+            return mi.functions.get(name)
+        if chain[0] == "self" and cls is not None and len(chain) == 2:
+            return mi.functions.get(f"{cls}.{chain[1]}")
+        target = mi.module_alias_target(chain[0])
+        if target is not None:
+            return self.resolve_dotted(target.split(".") + chain[1:])
+        return None
+
+    def jax_wrapper(self, mi: ModuleInfo, call: ast.Call
+                    ) -> Optional[Tuple[str, Tuple[int, ...]]]:
+        """If ``call`` invokes a tracing jax transform, return
+        ``(name, callable-arg indices)``."""
+        func = call.func
+        chain = attr_chain(func)
+        if chain is None:
+            return None
+        name = chain[-1]
+        if len(chain) == 1:
+            src = mi.from_imports.get(name)
+            if src is None:
+                return None
+            mod = src[0]
+            if name == "shard_map" or (src[1] == "shard_map"):
+                return ("shard_map", _JAX_WRAPPERS["shard_map"])
+            if mod == "jax" and name in _JAX_WRAPPERS:
+                return (name, _JAX_WRAPPERS[name])
+            if mod.endswith("lax") and name in _LAX_WRAPPERS:
+                return (name, _LAX_WRAPPERS[name])
+            return None
+        target = mi.module_alias_target(chain[0])
+        if target is None:
+            return None
+        prefix = ".".join([target] + chain[1:-1])
+        if name == "shard_map" and prefix.startswith("jax"):
+            return ("shard_map", _JAX_WRAPPERS["shard_map"])
+        if name in _JAX_WRAPPERS and prefix == "jax":
+            return (name, _JAX_WRAPPERS[name])
+        if name in _LAX_WRAPPERS and prefix.endswith("lax") \
+                and prefix.startswith("jax"):
+            return (name, _LAX_WRAPPERS[name])
+        return None
+
+    # -- traced roots -----------------------------------------------------
+    def traced_roots(self, mi: ModuleInfo) -> List["TracedRoot"]:
+        """Every traced root in ``mi``: decorated defs plus callables
+        handed to jax transforms anywhere (module level or inside
+        functions, with local nested defs resolvable)."""
+        roots: List[TracedRoot] = []
+        # decorator form: @jax.jit / @partial(jax.jit, ...)
+        for fi in list(mi.functions.values()):
+            node = fi.node
+            if not isinstance(node, FunctionNode):
+                continue
+            for dec in node.decorator_list:
+                wname = self._decorator_wrapper(mi, dec)
+                if wname is not None:
+                    roots.append(TracedRoot(fi, wname, node.lineno))
+        # call form, scoped so local defs resolve
+        for scope_fi, local_defs, calls in self._scoped_calls(mi):
+            cls = scope_fi.cls if scope_fi else None
+            for call in calls:
+                hit = self.jax_wrapper(mi, call)
+                if hit is None:
+                    continue
+                wname, arg_idx = hit
+                for idx in arg_idx:
+                    targets: List[ast.AST] = []
+                    if idx == -1:       # lax.switch branch list
+                        if len(call.args) > 1 and isinstance(
+                                call.args[1], (ast.List, ast.Tuple)):
+                            targets = list(call.args[1].elts)
+                    elif idx < len(call.args):
+                        targets = [call.args[idx]]
+                    for t in targets:
+                        for fi in self._callable_targets(
+                                mi, cls, t, local_defs):
+                            roots.append(TracedRoot(fi, wname, call.lineno))
+        return roots
+
+    def _decorator_wrapper(self, mi: ModuleInfo,
+                           dec: ast.AST) -> Optional[str]:
+        """``@jax.jit`` / ``@jit`` / ``@partial(jax.jit, ...)`` -> name."""
+        if isinstance(dec, ast.Call):
+            tname = terminal_name(dec.func)
+            if tname == "partial" and dec.args:
+                return self._decorator_wrapper(mi, dec.args[0])
+            hit = self.jax_wrapper(mi, dec)
+            if hit is not None:
+                return hit[0]
+            return None
+        chain = attr_chain(dec)
+        if chain is None:
+            return None
+        fake = ast.Call(func=dec, args=[], keywords=[])
+        hit = self.jax_wrapper(mi, fake)
+        return hit[0] if hit else None
+
+    def _callable_targets(self, mi: ModuleInfo, cls: Optional[str],
+                          expr: ast.AST,
+                          local_defs: Dict[str, FuncInfo]
+                          ) -> List[FuncInfo]:
+        """Function(s) a callable expression refers to. Lambdas become
+        synthetic FuncInfos; ``partial(f, ...)``, nested transforms and
+        resolvable factory calls (``jit(make_step(cfg))`` -> walk
+        ``make_step``, whose body contains the nested def) unwrap."""
+        if isinstance(expr, ast.Lambda):
+            return [FuncInfo(mi, f"<lambda:{expr.lineno}>", expr, cls=cls)]
+        if isinstance(expr, ast.Call):
+            tname = terminal_name(expr.func)
+            if tname == "partial" and expr.args:
+                return self._callable_targets(mi, cls, expr.args[0],
+                                              local_defs)
+            if self.jax_wrapper(mi, expr) is not None and expr.args:
+                return self._callable_targets(mi, cls, expr.args[0],
+                                              local_defs)
+            factory = self.resolve_ref(mi, cls, expr.func, local_defs)
+            return [factory] if factory is not None else []
+        fi = self.resolve_ref(mi, cls, expr, local_defs)
+        return [fi] if fi is not None else []
+
+    def _scoped_calls(self, mi: ModuleInfo):
+        """Yield (enclosing FuncInfo or None, local defs, Call nodes) per
+        scope. Nested defs are attributed to their outermost function so
+        ``jit(step)`` inside ``build_lowered`` resolves ``step``."""
+        top_calls = []
+        for node in mi.tree.body:
+            if isinstance(node, FunctionNode) or \
+                    isinstance(node, ast.ClassDef):
+                continue
+            top_calls += [n for n in ast.walk(node)
+                          if isinstance(n, ast.Call)]
+        yield None, {}, top_calls
+        for fi in list(mi.functions.values()):
+            if not isinstance(fi.node, FunctionNode):
+                continue
+            local_defs = {
+                n.name: FuncInfo(mi, f"{fi.qualname}.<locals>.{n.name}",
+                                 n, cls=fi.cls)
+                for n in ast.walk(fi.node)
+                if isinstance(n, FunctionNode) and n is not fi.node}
+            calls = [n for n in ast.walk(fi.node)
+                     if isinstance(n, ast.Call)]
+            yield fi, local_defs, calls
+
+
+@dataclasses.dataclass
+class TracedRoot:
+    func: FuncInfo
+    wrapper: str            # "jit", "cond", ...
+    site_line: int          # line of the jit/cond/... call
+
+
+@dataclasses.dataclass
+class Region:
+    """Functions reachable under trace, with one example chain each."""
+
+    root: TracedRoot
+    #: FuncInfo -> call chain from the root ("a -> b -> c")
+    members: Dict[FuncInfo, Tuple[str, ...]]
+
+
+#: receiver-typed method names NOT followed / name-matched: too generic
+#: (dict.get, list.append, set.add, queue.put ... would alias onto
+#: analyzed classes and poison the region).
+COMMON_METHOD_NAMES = {
+    "get", "put", "append", "extend", "update", "pop", "popitem", "clear",
+    "add", "remove", "insert", "read", "write", "close", "copy", "items",
+    "keys", "values", "join", "split", "sum", "mean", "reshape", "astype",
+    "at", "set", "replace", "index", "count",
+}
+
+
+def traced_regions(index: Index) -> List[Region]:
+    """Compute the traced region of every root in every module."""
+    regions: List[Region] = []
+    for mi in index.modules.values():
+        for root in index.traced_roots(mi):
+            members: Dict[FuncInfo, Tuple[str, ...]] = {}
+            queue: List[Tuple[FuncInfo, Tuple[str, ...]]] = [
+                (root.func, (root.func.qualname,))]
+            while queue:
+                fi, chain = queue.pop()
+                if fi in members or len(chain) > 12:
+                    continue
+                members[fi] = chain
+                for callee in _callees(index, fi):
+                    if callee not in members:
+                        queue.append(
+                            (callee, chain + (callee.qualname,)))
+            regions.append(Region(root, members))
+    return regions
+
+
+def _callees(index: Index, fi: FuncInfo) -> Iterator[FuncInfo]:
+    """Resolvable callees of a function, walking its whole body (nested
+    defs included — inside a traced region everything is traced)."""
+    mi = fi.module
+    node = fi.node
+    local_defs = {}
+    if isinstance(node, FunctionNode):
+        local_defs = {
+            n.name: FuncInfo(mi, f"{fi.qualname}.<locals>.{n.name}",
+                             n, cls=fi.cls)
+            for n in ast.walk(node)
+            if isinstance(n, FunctionNode) and n is not node}
+    for call in ast.walk(node):
+        if not isinstance(call, ast.Call):
+            continue
+        hit = index.jax_wrapper(mi, call)
+        if hit is not None:
+            # nested transform: its callable args are traced too
+            _, arg_idx = hit
+            for idx in arg_idx:
+                if idx == -1:
+                    if len(call.args) > 1 and isinstance(
+                            call.args[1], (ast.List, ast.Tuple)):
+                        for el in call.args[1].elts:
+                            yield from index._callable_targets(
+                                mi, fi.cls, el, local_defs)
+                elif idx < len(call.args):
+                    yield from index._callable_targets(
+                        mi, fi.cls, call.args[idx], local_defs)
+            continue
+        callee = index.resolve_ref(mi, fi.cls, call.func, local_defs)
+        if callee is not None:
+            yield callee
+            continue
+        # receiver-typed fallback: follow ``pol.keep_mask(...)`` when
+        # exactly one analyzed class defines the (distinctive) name
+        tname = terminal_name(call.func)
+        if tname and tname not in COMMON_METHOD_NAMES:
+            candidates = index.method_index.get(tname, [])
+            if len(candidates) == 1:
+                yield candidates[0]

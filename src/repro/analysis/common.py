@@ -1,0 +1,144 @@
+"""Shared plumbing for the lint passes: findings, suppression, discovery.
+
+Pure stdlib (``ast`` + ``re``) — the lint CLI must stay import-light so CI
+can run it before anything heavyweight (jax) is even importable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: ``# analysis: allow(TRC002)`` / ``# analysis: allow(TRC001, DON001)``
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(\s*([A-Za-z0-9_*,\s]+?)\s*\)")
+
+RULES = {
+    "TRC001": "eager pool operation reachable from a traced region",
+    "TRC002": "host-side compute (np.*) or environment read under trace",
+    "TRC003": "mutation of host-side object state under trace",
+    "DON001": "use of a donated argument after the donating dispatch",
+    "DON002": "donation of a value held elsewhere by reference",
+    "PYT001": "unregistered dataclass constructed under trace",
+    "PYT002": "pytree aux/meta data contains array fields",
+}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One lint finding, ``path:line: RULE: message`` when rendered."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def parse_allows(source: str) -> Dict[int, Set[str]]:
+    """Map line number -> rule IDs suppressed there.
+
+    An ``# analysis: allow(RULE)`` comment suppresses matching findings on
+    its own line (trailing style) and on the line below (comment-above
+    style). ``allow(*)`` suppresses every rule on those lines.
+    """
+    allows: Dict[int, Set[str]] = {}
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        for target in (lineno, lineno + 1):
+            allows.setdefault(target, set()).update(rules)
+    return allows
+
+
+def is_allowed(allows: Dict[int, Set[str]], rule: str, line: int) -> bool:
+    granted = allows.get(line, ())
+    return rule in granted or "*" in granted
+
+
+#: directory names that terminate the package walk (import roots)
+_STOP_DIRS = {"src", "tests", "test", "site-packages"}
+
+
+def module_name_for(path: Path) -> str:
+    """Dotted import name for ``path``, walking up to the import root
+    (``src/repro/core/paged.py`` -> ``repro.core.paged``). The repo uses
+    namespace packages (no ``__init__.py`` at the top level), so the walk
+    stops at ``src``/``tests``, a repo root (``.git``/``pyproject.toml``),
+    or a non-identifier directory — not at a missing ``__init__.py``."""
+    parts = [path.stem]
+    parent = path.parent
+    while True:
+        name = parent.name
+        if (not name.isidentifier() or name in _STOP_DIRS
+                or (parent / ".git").exists()
+                or (parent / "pyproject.toml").exists()
+                or parent == parent.parent):
+            break
+        parts.append(name)
+        parent = parent.parent
+    if parts[0] == "__init__":
+        parts = parts[1:] or [path.parent.name]
+    return ".".join(reversed(parts))
+
+
+def discover_files(paths: Sequence[str]) -> List[Path]:
+    """Expand files/directories into a sorted, de-duplicated .py file list."""
+    seen: Set[Path] = set()
+    out: List[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            candidates: Iterable[Path] = sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            candidates = [p]
+        else:
+            candidates = []
+        for c in candidates:
+            c = c.resolve()
+            if c not in seen:
+                seen.add(c)
+                out.append(c)
+    return out
+
+
+def run_paths(paths: Sequence[str],
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every lint pass over ``paths`` (files or directories).
+
+    Returns findings sorted by (path, line, rule), with ``# analysis:
+    allow(...)`` suppressions already applied. ``rules`` optionally
+    restricts to a subset of rule IDs (prefix match, so ``["TRC"]`` means
+    all trace-purity rules).
+    """
+    from repro.analysis import donation, pytree, trace_purity
+    from repro.analysis.callgraph import Index
+
+    files = discover_files(paths)
+    index = Index.build(files)
+    findings: List[Finding] = []
+    findings += trace_purity.run(index)
+    findings += donation.run(index)
+    findings += pytree.run(index)
+    if rules is not None:
+        keep = tuple(rules)
+        findings = [f for f in findings if f.rule.startswith(keep)]
+    out = []
+    for f in findings:
+        mi = index.by_path.get(f.path)
+        if mi is not None and is_allowed(mi.allows, f.rule, f.line):
+            continue
+        out.append(f)
+    return sorted(set(out))
+
+
+def parse_file(path: Path) -> Optional[ast.Module]:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError:
+        return None

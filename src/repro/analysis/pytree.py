@@ -1,0 +1,203 @@
+"""Pytree-registration pass: dataclasses under trace must be registered.
+
+Rules
+-----
+PYT001
+    A dataclass is constructed inside a traced region but never
+    registered as a pytree (``jax.tree_util.register_dataclass`` /
+    ``register_pytree_node[_class]`` / ``register_static``). jax treats
+    an unregistered instance as a leaf: it escapes the trace as a static
+    constant, silently freezing its array fields at their trace-time
+    values. (NamedTuples are auto-registered — the repo's convention for
+    jit-crossing containers — and are exempt.)
+PYT002
+    Registered aux/meta data contains arrays: ``register_dataclass(...,
+    meta_fields=[...])`` naming an array-annotated field, or a
+    ``tree_flatten`` whose aux tuple returns an array-annotated
+    attribute. Aux data must be hashable static metadata — arrays in aux
+    defeat tracing-cache keys and crash on hashing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph as cg
+from repro.analysis.common import Finding
+
+_REGISTER_FNS = {"register_dataclass", "register_pytree_node",
+                 "register_pytree_node_class", "register_static",
+                 "register_pytree_with_keys", "register_pytree_with_keys_class"}
+
+#: annotation terminals that mean "this field is an array"
+_ARRAY_ANNOTATIONS = {"ndarray", "Array", "ArrayLike", "DeviceArray"}
+
+
+def _registered_classes(mi: cg.ModuleInfo) -> Set[str]:
+    """Class names registered as pytrees anywhere in the module (call
+    form ``register_*(Cls, ...)`` or decorator form)."""
+    out: Set[str] = set()
+    for node in ast.walk(mi.tree):
+        if isinstance(node, ast.Call):
+            if cg.terminal_name(node.func) in _REGISTER_FNS and node.args:
+                name = cg.terminal_name(node.args[0])
+                if name:
+                    out.add(name)
+    for ci in mi.classes.values():
+        for dec in ci.node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if cg.terminal_name(target) in _REGISTER_FNS:
+                out.add(ci.name)
+    return out
+
+
+def _dataclass_index(index: cg.Index) -> Dict[str, Tuple[cg.ClassInfo, bool]]:
+    """All dataclasses across modules: name -> (info, registered?).
+    Also keyed as "module:Class" for cross-module resolution."""
+    out: Dict[str, Tuple[cg.ClassInfo, bool]] = {}
+    for mi in index.modules.values():
+        registered = _registered_classes(mi)
+        for ci in mi.classes.values():
+            if ci.is_dataclass:
+                entry = (ci, ci.name in registered)
+                out[f"{mi.name}:{ci.name}"] = entry
+    return out
+
+
+def _resolve_class(index: cg.Index, mi: cg.ModuleInfo,
+                   func: ast.AST,
+                   dcs: Dict[str, Tuple[cg.ClassInfo, bool]]
+                   ) -> Optional[Tuple[cg.ClassInfo, bool]]:
+    """Resolve a Call's callee to a known dataclass, through imports."""
+    chain = cg.attr_chain(func)
+    if chain is None:
+        return None
+    if len(chain) == 1:
+        name = chain[0]
+        if name in mi.classes:
+            return dcs.get(f"{mi.name}:{name}")
+        if name in mi.from_imports:
+            mod, orig = mi.from_imports[name]
+            return dcs.get(f"{mod}:{orig}")
+        return None
+    target = mi.module_alias_target(chain[0])
+    if target is not None and len(chain) == 2:
+        return dcs.get(f"{target}:{chain[1]}")
+    return None
+
+
+def run(index: cg.Index) -> List[Finding]:
+    findings: List[Finding] = []
+    dcs = _dataclass_index(index)
+    seen: Set[Tuple[str, int]] = set()
+    for region in cg.traced_regions(index):
+        for fi, chain in region.members.items():
+            for call in ast.walk(fi.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                hit = _resolve_class(index, fi.module, call.func, dcs)
+                if hit is None:
+                    continue
+                ci, registered = hit
+                if registered:
+                    continue
+                key = (fi.module.path, call.lineno)
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(Finding(
+                    fi.module.path, call.lineno, "PYT001",
+                    f"dataclass '{ci.name}' constructed under trace "
+                    f"(via {region.root.wrapper}, call chain "
+                    f"{' -> '.join(chain)}) but never registered as a "
+                    "pytree: jax will treat it as a static leaf and "
+                    "freeze its fields at trace-time values; register "
+                    "it (jax.tree_util.register_dataclass) or use a "
+                    "NamedTuple"))
+    findings += _check_aux_data(index)
+    return findings
+
+
+def _array_fields(ci: cg.ClassInfo) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in ci.node.body:
+        if isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name):
+            for n in ast.walk(stmt.annotation):
+                name = None
+                if isinstance(n, ast.Name):
+                    name = n.id
+                elif isinstance(n, ast.Attribute):
+                    name = n.attr
+                elif isinstance(n, ast.Constant) \
+                        and isinstance(n.value, str):
+                    # string annotations: match on terminal token
+                    name = n.value.rsplit(".", 1)[-1].strip("'\"[]")
+                if name in _ARRAY_ANNOTATIONS:
+                    out.add(stmt.target.id)
+                    break
+    return out
+
+
+def _check_aux_data(index: cg.Index) -> List[Finding]:
+    """PYT002: meta_fields / tree_flatten aux containing array fields."""
+    findings: List[Finding] = []
+    for mi in index.modules.values():
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if cg.terminal_name(node.func) != "register_dataclass":
+                continue
+            cls_name = cg.terminal_name(node.args[0]) if node.args \
+                else None
+            ci = mi.classes.get(cls_name or "")
+            if ci is None:
+                continue
+            arrays = _array_fields(ci)
+            meta: Set[str] = set()
+            meta_node: Optional[ast.AST] = None
+            for kw in node.keywords:
+                if kw.arg == "meta_fields":
+                    meta_node = kw.value
+            if meta_node is None and len(node.args) >= 3:
+                meta_node = node.args[2]
+            if meta_node is not None and isinstance(
+                    meta_node, (ast.List, ast.Tuple)):
+                meta = {e.value for e in meta_node.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+            bad = sorted(meta & arrays)
+            if bad:
+                findings.append(Finding(
+                    mi.path, node.lineno, "PYT002",
+                    f"register_dataclass({cls_name}, ...) places array "
+                    f"field(s) {bad} in meta_fields: aux data is hashed "
+                    "into the tracing cache key and must be static "
+                    "metadata, not arrays"))
+        # tree_flatten methods returning self.<array field> in aux
+        for ci in mi.classes.values():
+            fl = ci.methods.get("tree_flatten")
+            if fl is None:
+                continue
+            arrays = _array_fields(ci)
+            if not arrays:
+                continue
+            for ret in ast.walk(fl.node):
+                if not isinstance(ret, ast.Return) \
+                        or not isinstance(ret.value, ast.Tuple) \
+                        or len(ret.value.elts) != 2:
+                    continue
+                aux = ret.value.elts[1]
+                for n in ast.walk(aux):
+                    chain = cg.attr_chain(n)
+                    if chain and chain[0] == "self" and len(chain) == 2 \
+                            and chain[1] in arrays \
+                            and isinstance(n, ast.Attribute):
+                        findings.append(Finding(
+                            mi.path, ret.lineno, "PYT002",
+                            f"tree_flatten of '{ci.name}' returns array "
+                            f"field 'self.{chain[1]}' in its aux data: "
+                            "aux must be hashable static metadata; move "
+                            "it into the children tuple"))
+                        break
+    return findings

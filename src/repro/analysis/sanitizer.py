@@ -1,0 +1,282 @@
+"""Paged-pool sanitizer: a shadow allocator with per-block allocation sites.
+
+Enabled by ``REPRO_SANITIZE=1`` (any value other than ``""``/``"0"``):
+:class:`~repro.core.paged.PagedStateStore` calls :func:`attach_store` from
+its ``__init__``, which wraps the store's eager allocator API at the
+instance level. Every op is then validated against the pool *before* it
+mutates refcounts, and the allocator invariants
+(:func:`repro.core.paged.check_invariants`) are re-checked *after* — the
+test-only helper promoted to a first-class runtime check. The sanitizer
+records an allocation site (first engine/test frame) per live block, so a
+leak or double-release reports *where the block came from*, not just its
+id.
+
+Detected at the op level
+------------------------
+* double-release: ``release_blocks``/``release`` dropping a block whose
+  refcount is already 0 (or dropping more references than exist);
+* retain-of-dead-block: ``retain_blocks`` on an unreferenced block (a
+  stale table is being forked/spliced);
+* negative refcounts / free-stack corruption / leaked blocks after every
+  op, via ``check_invariants``.
+
+Detected at the engine level (:func:`check_lanes`, called per step, and
+``Engine.close()`` at shutdown)
+-------------------------------
+* CoW violations: a running lane whose table maps a block it neither owns
+  (``blocks[i] == owned[i]``) nor holds a travelling reference for
+  (``_lane_shared``), or a *writable* entry aliasing a shared block
+  (ref > 1) — in-trace writes would corrupt every other holder;
+* leaks at shutdown: pool references that survive lane retirement,
+  parcel disposal and prefix-cache clearing, reported with their
+  allocation sites.
+
+The sanitizer is strict: violations raise :class:`SanitizerError`
+immediately (tests assert on it; production never enables the flag).
+"""
+from __future__ import annotations
+
+import os
+import traceback
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+class SanitizerError(AssertionError):
+    """A pool invariant was violated at runtime."""
+
+
+def _call_site(skip_substrings=("core/paged.py", "analysis/sanitizer.py",
+                                "jax/", "numpy/")) -> str:
+    """First stack frame outside the allocator/sanitizer — the caller the
+    allocation should be attributed to."""
+    for frame in reversed(traceback.extract_stack()[:-2]):
+        fn = frame.filename.replace("\\", "/")
+        if not any(s in fn for s in skip_substrings):
+            return f"{fn}:{frame.lineno} in {frame.name}"
+    return "<unknown>"
+
+
+class PoolSanitizer:
+    """Shadow allocator state for one :class:`PagedStateStore`."""
+
+    def __init__(self, store):
+        self.store = store
+        #: block id -> allocation site (live blocks only)
+        self.sites: Dict[int, str] = {}
+        self.ops = 0
+
+    # -- shadow bookkeeping ------------------------------------------------
+    def _refs(self) -> np.ndarray:
+        return np.asarray(self.store.pool.ref)
+
+    def _sync_sites(self, site: str) -> None:
+        """Adopt pool truth: record ``site`` for blocks that became live
+        outside ``alloc_blocks`` (store ``put`` pages blocks in through
+        ``from_dense``), drop sites of blocks that died."""
+        ref = self._refs()
+        live = set(np.nonzero(ref > 0)[0].tolist())
+        for bid in live - self.sites.keys():
+            self.sites[bid] = site
+        for bid in list(self.sites):
+            if bid not in live:
+                del self.sites[bid]
+
+    def _check_pool(self, op: str) -> None:
+        from repro.core import paged
+        try:
+            paged.check_invariants(self.store.pool)
+        except AssertionError as e:
+            raise SanitizerError(
+                f"pool invariant broken after {op}: {e}") from e
+        self.ops += 1
+
+    # -- op validation -----------------------------------------------------
+    def before_release(self, ids: np.ndarray, op: str) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if not ids.size:
+            return
+        ref = self._refs()
+        uniq, counts = np.unique(ids, return_counts=True)
+        for bid, n in zip(uniq.tolist(), counts.tolist()):
+            have = int(ref[bid])
+            if n > have:
+                site = self.sites.get(bid, "<untracked>")
+                raise SanitizerError(
+                    f"double release: {op} drops {n} reference(s) of "
+                    f"block {bid} but only {have} exist(s); "
+                    f"block allocated at {site}, "
+                    f"released from {_call_site()}")
+
+    def before_retain(self, ids: np.ndarray) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if not ids.size:
+            return
+        ref = self._refs()
+        dead = ids[ref[ids] <= 0]
+        if dead.size:
+            raise SanitizerError(
+                f"retain of unreferenced block(s) {sorted(set(dead.tolist()))}: "
+                "a stale table is being forked or spliced "
+                f"(from {_call_site()})")
+
+    def after_alloc(self, ids: np.ndarray) -> None:
+        site = _call_site()
+        ref = self._refs()
+        for bid in np.asarray(ids, np.int64).reshape(-1).tolist():
+            if int(ref[bid]) != 1:
+                raise SanitizerError(
+                    f"alloc_blocks returned block {bid} with refcount "
+                    f"{int(ref[bid])} (expected 1)")
+            self.sites[bid] = site
+
+    def after_op(self, op: str) -> None:
+        self._check_pool(op)
+        self._sync_sites(f"{op} at {_call_site()}")
+
+    # -- reporting ---------------------------------------------------------
+    def live_report(self, ids) -> str:
+        lines = [f"  block {bid}: allocated at "
+                 f"{self.sites.get(bid, '<untracked>')}"
+                 for bid in sorted(ids)]
+        return "\n".join(lines)
+
+
+def attach_store(store) -> PoolSanitizer:
+    """Instance-level wrap of a store's eager allocator API."""
+    san = PoolSanitizer(store)
+    store._sanitizer = san
+
+    alloc, retain, release_ids = (store.alloc_blocks, store.retain_blocks,
+                                  store.release_blocks)
+    put, release_snap = store.put, store.release
+
+    def alloc_blocks(n):
+        ids = alloc(n)
+        san.after_alloc(ids)
+        san.after_op("alloc_blocks")
+        return ids
+
+    def retain_blocks(ids):
+        san.before_retain(ids)
+        retain(ids)
+        san.after_op("retain_blocks")
+
+    def release_blocks(ids):
+        san.before_release(ids, "release_blocks")
+        release_ids(ids)
+        san.after_op("release_blocks")
+
+    def put_wrapped(tree, parent=None):
+        out = put(tree, parent=parent)
+        san.after_op("put")
+        return out
+
+    def release_wrapped(snap):
+        if not getattr(snap, "released", False):
+            from repro.core import paged
+            if isinstance(snap, paged.TableSnapshot):
+                san.before_release(snap.block_ids(), "release(snapshot)")
+        release_snap(snap)
+        san.after_op("release")
+
+    store.alloc_blocks = alloc_blocks
+    store.retain_blocks = retain_blocks
+    store.release_blocks = release_blocks
+    store.put = put_wrapped
+    store.release = release_wrapped
+    return san
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level checks
+# --------------------------------------------------------------------------- #
+def _lane_leaf_tables(state, slot: int):
+    """(section, key, blocks, owned) per paged layer of one lane of the
+    batched decode state."""
+    for section in ("blocks", "tail"):
+        layers = getattr(state, section)
+        for key in sorted(layers):
+            leaf = layers[key]
+            if not hasattr(leaf, "blocks") or not hasattr(leaf, "owned"):
+                continue                     # SSM state: nothing paged
+            # leaves are [..., lane, max_blocks] — an optional stacked-layer
+            # axis rides in FRONT of the lane axis (the period scan), so the
+            # lane is always axis -2
+            yield (section, key,
+                   np.asarray(leaf.blocks)[..., slot, :].reshape(-1),
+                   np.asarray(leaf.owned)[..., slot, :].reshape(-1))
+
+
+def check_lanes(engine) -> None:
+    """Per-step CoW/refcount audit of every RUNNING lane's tables.
+
+    Retired lanes keep stale tables until their next ``_lane_reset``, so
+    only slots the scheduler reports as running are audited.
+    """
+    state = engine._slot_states
+    if state is None:
+        return
+    ref = np.asarray(engine.kv_store.pool.ref)
+    for slot in sorted(engine.scheduler.running):
+        held = set(np.asarray(engine._lane_shared[slot]).tolist())
+        for section, key, blocks, owned in _lane_leaf_tables(state, slot):
+            mapped = blocks >= 0
+            writable = mapped & (blocks == owned)
+            foreign = blocks[mapped & ~writable].tolist()
+            loose = [b for b in foreign if b not in held]
+            if loose:
+                raise SanitizerError(
+                    f"CoW violation (lane {slot}, {section}/{key}): table "
+                    f"maps block(s) {sorted(set(loose))} it neither owns "
+                    "nor holds a reference for — an eviction elsewhere "
+                    "can free them under the running lane")
+            shared_writable = [int(b) for b in blocks[writable].tolist()
+                               if ref[int(b)] > 1]
+            if shared_writable:
+                raise SanitizerError(
+                    f"CoW violation (lane {slot}, {section}/{key}): "
+                    f"writable table entr{'ies' if len(shared_writable) > 1 else 'y'} "
+                    f"map shared block(s) {sorted(set(shared_writable))} "
+                    "(refcount > 1): in-trace writes would corrupt every "
+                    "other holder; the fork must swap the owned set first")
+            dead = [int(b) for b in blocks[mapped].tolist()
+                    if ref[int(b)] <= 0]
+            if dead:
+                raise SanitizerError(
+                    f"use-after-free (lane {slot}, {section}/{key}): table "
+                    f"maps unreferenced block(s) {sorted(set(dead))}")
+
+
+def check_shutdown(engine) -> None:
+    """Shutdown leak audit: after lanes retire, parcels drop and the
+    prefix cache clears, the only live references left must be the lanes'
+    permanent ``owned`` reservations."""
+    store = engine.kv_store
+    ref = np.asarray(store.pool.ref)
+    live = set(np.nonzero(ref > 0)[0].tolist())
+    expected = set()
+    state = engine._slot_states
+    if state is not None and engine._paged_in_model:
+        n_slots = int(np.asarray(state.pos).shape[0])
+        for slot in range(n_slots):
+            for _, _, blocks, owned in _lane_leaf_tables(state, slot):
+                expected.update(int(b) for b in owned.tolist() if b >= 0)
+    leaked = live - expected
+    if leaked:
+        san = getattr(store, "_sanitizer", None)
+        detail = f"\n{san.live_report(leaked)}" if san is not None else ""
+        raise SanitizerError(
+            f"{len(leaked)} block(s) leaked at engine shutdown "
+            f"(live but not part of any lane's reserved set): "
+            f"{sorted(leaked)[:16]}{detail}")
+    missing = expected - live
+    if missing:
+        raise SanitizerError(
+            f"lane-reserved block(s) lost their pool reference: "
+            f"{sorted(missing)[:16]}")

@@ -1,0 +1,220 @@
+"""Trace-purity pass: no eager pool ops / host compute under trace.
+
+Rules
+-----
+TRC001
+    An eager pool operation is reachable from a traced region: a call to
+    an allocator primitive (``alloc_blocks`` / ``retain_blocks`` /
+    ``release_blocks`` / ``detach_planes``), or to any function that can
+    raise :class:`~repro.core.paged.PoolExhausted` (raising requires
+    concrete values — under trace it either fails or silently never
+    fires), or a direct ``raise PoolExhausted`` inside a traced function.
+TRC002
+    Host-side compute under trace: ``np.*`` calls (everything except
+    trace-time-static helpers like ``np.prod`` / dtype constructors) or
+    environment reads (``os.environ`` / ``os.getenv``). These run once at
+    trace time with tracer inputs (crash) or bake a host value into the
+    compiled program (stale on the next call).
+TRC003
+    Mutation of host object state (``self.x = ...``) inside a traced
+    function: runs once at trace time, then never again on cached
+    executions — the classic "works until the second call" bug.
+
+Calls that cannot be resolved still match when their terminal attribute
+name is a distinctive eager primitive, so aliasing cannot hide them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph as cg
+from repro.analysis.common import Finding
+
+EAGER_PRIMITIVES = {"alloc_blocks", "retain_blocks", "release_blocks",
+                    "detach_planes"}
+
+#: np helpers that are safe under trace: they compute static metadata
+#: (shapes, dtypes, paddings) from concrete Python values at trace time.
+NP_TRACE_SAFE = {
+    "prod", "ceil", "floor", "log", "log2", "log10", "sqrt", "gcd", "lcm",
+    "dtype", "iinfo", "finfo", "isscalar", "ndim", "shape", "size",
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "promote_types",
+    "result_type",
+}
+
+#: exception names whose ``except`` clause swallows PoolExhausted
+_CATCHING = {"PoolExhausted", "RuntimeError", "Exception", "BaseException"}
+
+
+def _protected_spans(node: ast.AST) -> List[Tuple[int, int]]:
+    """Line ranges of ``try:`` bodies guarded by a PoolExhausted-catching
+    handler — calls inside do not propagate the raiser property."""
+    spans = []
+    for t in ast.walk(node):
+        if not isinstance(t, ast.Try):
+            continue
+        for h in t.handlers:
+            name = (cg.terminal_name(h.type)
+                    if h.type is not None else None)
+            if h.type is None or name in _CATCHING:
+                first, last = t.body[0], t.body[-1]
+                spans.append((first.lineno,
+                              last.end_lineno or last.lineno))
+                break
+    return spans
+
+
+def _raises_pool_exhausted_directly(node: ast.AST) -> Optional[int]:
+    for r in ast.walk(node):
+        if isinstance(r, ast.Raise) and r.exc is not None:
+            exc = r.exc.func if isinstance(r.exc, ast.Call) else r.exc
+            if cg.terminal_name(exc) == "PoolExhausted":
+                return r.lineno
+    return None
+
+
+def compute_raisers(index: cg.Index) -> Set[cg.FuncInfo]:
+    """Functions that can raise PoolExhausted (direct + fixpoint over
+    resolvable calls, excluding calls inside a catching ``try``)."""
+    raisers: Set[cg.FuncInfo] = set()
+    for mi in index.modules.values():
+        for fi in mi.functions.values():
+            if _raises_pool_exhausted_directly(fi.node) is not None:
+                raisers.add(fi)
+    changed = True
+    while changed:
+        changed = False
+        for mi in index.modules.values():
+            for fi in mi.functions.values():
+                if fi in raisers:
+                    continue
+                spans = _protected_spans(fi.node)
+                for call in ast.walk(fi.node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    if any(a <= call.lineno <= b for a, b in spans):
+                        continue
+                    callee = index.resolve_ref(mi, fi.cls, call.func)
+                    if callee is not None and callee in raisers:
+                        raisers.add(fi)
+                        changed = True
+                        break
+    return raisers
+
+
+def run(index: cg.Index) -> List[Finding]:
+    raisers = compute_raisers(index)
+    raiser_methods = {fi.name for fi in raisers if fi.cls is not None}
+    regions = cg.traced_regions(index)
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str, int]] = set()
+
+    def emit(rule: str, fi: cg.FuncInfo, line: int, msg: str,
+             region: cg.Region) -> None:
+        key = (rule, fi.module.path, line)
+        if key in seen:
+            return
+        seen.add(key)
+        chain = " -> ".join(region.members[fi])
+        root = region.root
+        findings.append(Finding(
+            fi.module.path, line, rule,
+            f"{msg} [traced via {root.wrapper} at "
+            f"{root.func.module.name}:{root.site_line}, "
+            f"call chain {chain}]"))
+
+    for region in regions:
+        for fi in region.members:
+            _check_function(index, fi, region, raisers, raiser_methods,
+                            emit)
+    return findings
+
+
+def _check_function(index: cg.Index, fi: cg.FuncInfo, region: cg.Region,
+                    raisers: Set[cg.FuncInfo], raiser_methods: Set[str],
+                    emit) -> None:
+    mi = fi.module
+    node = fi.node
+    is_method = fi.cls is not None
+
+    line = _raises_pool_exhausted_directly(node)
+    if line is not None:
+        emit("TRC001", fi, line,
+             "raise PoolExhausted inside a traced function "
+             "(pool exhaustion must be handled on the host, before "
+             "dispatch)", region)
+
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            _check_call(index, fi, n, region, raisers, raiser_methods,
+                        emit)
+        elif isinstance(n, ast.Attribute):
+            chain = cg.attr_chain(n)
+            if chain is not None and len(chain) == 2 \
+                    and chain[0] == "os" and chain[1] == "environ" \
+                    and mi.module_alias_target("os") == "os":
+                emit("TRC002", fi, n.lineno,
+                     "os.environ read under trace: the value is baked "
+                     "in at trace time and stale afterwards; resolve it "
+                     "eagerly and pass it in", region)
+        elif isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            if not is_method:
+                continue
+            targets = (n.targets if isinstance(n, ast.Assign)
+                       else [n.target])
+            for t in targets:
+                for el in (t.elts if isinstance(t, (ast.Tuple, ast.List))
+                           else [t]):
+                    base = el.value if isinstance(el, ast.Subscript) \
+                        else el
+                    chain = cg.attr_chain(base)
+                    if chain and chain[0] == "self" and len(chain) >= 2 \
+                            and isinstance(base, ast.Attribute):
+                        emit("TRC003", fi, el.lineno,
+                             f"mutation of host state 'self."
+                             f"{'.'.join(chain[1:])}' under trace: runs "
+                             "once at trace time, never on cached "
+                             "executions", region)
+
+
+def _check_call(index: cg.Index, fi: cg.FuncInfo, call: ast.Call,
+                region: cg.Region, raisers: Set[cg.FuncInfo],
+                raiser_methods: Set[str], emit) -> None:
+    mi = fi.module
+    tname = cg.terminal_name(call.func)
+    if tname in EAGER_PRIMITIVES:
+        emit("TRC001", fi, call.lineno,
+             f"eager pool operation '{tname}' reachable from a traced "
+             "region: allocator calls mutate host refcounts and must "
+             "happen before dispatch", region)
+        return
+    chain = cg.attr_chain(call.func)
+    if chain is not None and len(chain) >= 2:
+        head = mi.module_alias_target(chain[0])
+        if head == "numpy" and chain[-1] not in NP_TRACE_SAFE:
+            emit("TRC002", fi, call.lineno,
+                 f"host numpy call '{'.'.join(chain)}' under trace: "
+                 "np ops run on host values at trace time; use jnp or "
+                 "hoist to the eager caller", region)
+            return
+        if head == "os" and chain[-1] == "getenv":
+            emit("TRC002", fi, call.lineno,
+                 "os.getenv under trace: the value is baked in at trace "
+                 "time and stale afterwards", region)
+            return
+    callee = index.resolve_ref(mi, fi.cls, call.func)
+    if callee is not None:
+        if callee in raisers:
+            emit("TRC001", fi, call.lineno,
+                 f"call to '{callee.qualname}' which can raise "
+                 "PoolExhausted: pool pressure must be handled eagerly, "
+                 "outside the traced region", region)
+        return
+    if chain is not None and len(chain) >= 2 \
+            and tname in raiser_methods \
+            and tname not in cg.COMMON_METHOD_NAMES:
+        emit("TRC001", fi, call.lineno,
+             f"call to '{tname}' (matches a PoolExhausted-raising "
+             "method) from a traced region", region)

@@ -159,6 +159,8 @@ class ModelConfig:
             if kind == "attn" and attn == "global":
                 cache_ord = ord_
                 ord_ += 1
+            # static spec from concrete config fields; never holds tracers
+            # analysis: allow(PYT001)
             specs.append(LayerSpec(kind=kind, attn=attn, moe=moe, cache_ord=cache_ord))
         return specs
 

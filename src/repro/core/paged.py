@@ -55,7 +55,50 @@ from repro.core.policy import PolicyLike, get_policy
 
 
 class PoolExhausted(RuntimeError):
-    """The free list cannot satisfy an allocation (caller should evict)."""
+    """The free list cannot satisfy an allocation (caller should evict).
+
+    Raised through :func:`exhausted`, the message carries pool utilization
+    and a suggested ``pool_blocks`` so serving OOMs are actionable; the
+    same numbers ride along as structured fields (``need`` / ``free`` /
+    ``in_use`` / ``total`` / ``cache_blocks`` / ``suggested_pool_blocks``,
+    ``None`` when unknown) for programmatic handling."""
+
+    def __init__(self, msg: str, *, need: Optional[int] = None,
+                 free: Optional[int] = None, in_use: Optional[int] = None,
+                 total: Optional[int] = None,
+                 cache_blocks: Optional[int] = None,
+                 suggested_pool_blocks: Optional[int] = None):
+        super().__init__(msg)
+        self.need = need
+        self.free = free
+        self.in_use = in_use
+        self.total = total
+        self.cache_blocks = cache_blocks
+        self.suggested_pool_blocks = suggested_pool_blocks
+
+
+def exhausted(pool: "PagedPool", need: int, *, what: str = "",
+              cache_blocks: Optional[int] = None) -> PoolExhausted:
+    """Build an actionable :class:`PoolExhausted` for ``pool``.
+
+    ``cache_blocks`` (when the caller can attribute them — the engine
+    registers a provider on the store) is the number of distinct blocks
+    held by prefix-cache entries, the knob a serving operator can actually
+    turn (smaller ``prefix_cache_bytes``) besides growing the pool.
+    ``total`` comes from the refcount array, which keeps its full size
+    even after ``detach_planes`` shrinks the K/V planes to a stub."""
+    free = int(pool.n_free)
+    total = int(pool.ref.shape[0])
+    in_use = int((np.asarray(pool.ref) > 0).sum())
+    suggested = total + max(int(need) - free, 1)
+    cache_part = ("" if cache_blocks is None
+                  else f", {int(cache_blocks)} held by prefix cache")
+    return PoolExhausted(
+        f"{what}need {int(need)} blocks, {free} free "
+        f"({in_use}/{total} in use{cache_part}); "
+        f"retry with pool_blocks >= {suggested} or shrink the prefix "
+        "cache", need=int(need), free=free, in_use=in_use, total=total,
+        cache_blocks=cache_blocks, suggested_pool_blocks=suggested)
 
 
 class PagedPool(NamedTuple):
@@ -209,8 +252,7 @@ def _write(pool: PagedPool, blocks: jnp.ndarray, view_k: jnp.ndarray,
     n_new = jnp.sum(need_new.astype(jnp.int32))
     if _concrete(n_new) and _concrete(pool.n_free) \
             and int(n_new) > int(pool.n_free):
-        raise PoolExhausted(
-            f"need {int(n_new)} blocks, {int(pool.n_free)} free")
+        raise exhausted(pool, int(n_new), what="block write: ")
     rank = jnp.cumsum(need_new.astype(jnp.int32)) - 1
     new_ids = pool.free[jnp.clip(pool.n_free - 1 - rank, 0, nb - 1)]
     new_blocks = jnp.where(written,
@@ -285,9 +327,9 @@ def from_dense(pool: PagedPool, cache: KVCache, *,
         if _concrete(cache.length) and _concrete(pool.n_free) and \
                 blocks_for(int(cache.length), bs) - shared_blocks \
                 > int(pool.n_free):
-            raise PoolExhausted(
-                f"need {blocks_for(int(cache.length), bs) - shared_blocks} "
-                f"blocks, {int(pool.n_free)} free")
+            raise exhausted(
+                pool, blocks_for(int(cache.length), bs) - shared_blocks,
+                what="page-in of a dense cache: ")
         blocks = blocks.at[:shared_blocks].set(parent.blocks[:shared_blocks])
         pool = _incref(pool, parent.blocks[:shared_blocks])
     padded = mb * bs
@@ -922,6 +964,22 @@ class PagedStateStore:
         self.gets = 0
         self.peak_bytes = 0
         self.planes_detached = False
+        #: optional () -> int: distinct blocks held by prefix-cache
+        #: entries, for actionable PoolExhausted messages (the engine
+        #: registers this — the store cannot see the cache)
+        self.pressure_context = None
+        self._sanitizer = None
+        from repro.analysis import sanitizer as _sanlib
+        if _sanlib.enabled():
+            _sanlib.attach_store(self)
+
+    def _cache_blocks(self) -> Optional[int]:
+        if self.pressure_context is None:
+            return None
+        try:
+            return int(self.pressure_context())
+        except Exception:       # telemetry must never mask the real error
+            return None
 
     @property
     def block_size(self) -> int:
@@ -967,7 +1025,8 @@ class PagedStateStore:
             return np.zeros((0,), np.int64)
         free = int(self.pool.n_free)
         if n > free:
-            raise PoolExhausted(f"need {n} blocks, {free} free")
+            raise exhausted(self.pool, n, what="lane block reservation: ",
+                            cache_blocks=self._cache_blocks())
         ids = np.asarray(self.pool.free)[free - n:free][::-1].astype(np.int64)
         self.pool = self.pool._replace(
             ref=self.pool.ref.at[jnp.asarray(ids)].set(1),
@@ -1025,8 +1084,8 @@ class PagedStateStore:
                               shared))
             plan.append((i, entry, stacked))
         if needed > self.free_blocks:
-            raise PoolExhausted(
-                f"snapshot needs {needed} blocks, {self.free_blocks} free")
+            raise exhausted(self.pool, needed, what="state snapshot: ",
+                            cache_blocks=self._cache_blocks())
 
         out = list(leaves)
         for i, entry, stacked in plan:

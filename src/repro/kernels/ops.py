@@ -24,7 +24,8 @@ NEG_INF = -1.0e30
 
 
 def default_impl() -> str:
-    return os.environ.get("REPRO_KERNEL_IMPL", "xla")
+    # deliberate trace-time static choice, baked in per process
+    return os.environ.get("REPRO_KERNEL_IMPL", "xla")  # analysis: allow(TRC002)
 
 
 def _interpret() -> bool:

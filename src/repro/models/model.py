@@ -269,6 +269,7 @@ def encode_audio(params, cfg: ModelConfig, frames):
     def body(carry, pblock):
         h, aux = carry
         h, aux, _ = _apply_layer_train(
+            # analysis: allow(PYT001) — literal static spec, no tracers
             pblock["p0"], cfg, LayerSpec(kind="attn", attn="global"),
             h, jnp.arange(h.shape[1]), aux, causal=False)
         return (h, aux), None

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer as sanlib
 from repro.configs.base import ModelConfig
 from repro.core import paged as pagedlib
 from repro.core.cache import MambaState
@@ -384,6 +385,11 @@ class Engine:
         self.preemptions = 0
         self.prefix_cache = PrefixCache(max_bytes=prefix_cache_bytes,
                                         store=self.kv_store)
+        self._sanitizer = getattr(self.kv_store, "_sanitizer", None)
+        if self.kv_store is not None:
+            # actionable PoolExhausted: the store can't see the cache, so
+            # the engine attributes "held by prefix cache" block counts
+            self.kv_store.pressure_context = self._prefix_cache_blocks
         self.prefix_block = max(1, prefix_block)
         self._policy_evicts = M.eviction_policy(cfg).evicts
         # bucketing pads the prompt; exact for attention layers (causality)
@@ -419,6 +425,62 @@ class Engine:
     def kv_bytes_in_use(self) -> int:
         """Physical bytes of live pool blocks (paged backend)."""
         return self.kv_store.bytes_in_use if self.kv_store is not None else 0
+
+    def _prefix_cache_blocks(self) -> int:
+        """Distinct pool blocks currently mapped by prefix-cache entries
+        (PoolExhausted attribution; snapshots share blocks, so this is a
+        set size, not a sum of per-entry counts)."""
+        ids: Set[int] = set()
+        for entry in self.prefix_cache._entries.values():
+            snap = entry.snap
+            if snap is None:
+                continue
+            if isinstance(snap, pagedlib.TableSnapshot):
+                ids.update(int(b) for b in snap.block_ids().tolist())
+            else:
+                for leaf in snap.leaves:
+                    if isinstance(leaf, pagedlib._TableSet):
+                        for t in leaf.tables:
+                            b = np.asarray(t.blocks)
+                            ids.update(int(x) for x in b[b >= 0].tolist())
+        return len(ids)
+
+    def close(self) -> None:
+        """Shut the serving state down and verify the pool drains.
+
+        Releases every running lane's travelling references, drops parked
+        preemption parcels, clears the prefix cache, then audits the pool:
+        the only references left must be the lanes' permanent reserved
+        ``owned`` sets (engine-lifetime allocations). A violation raises
+        :class:`repro.analysis.sanitizer.SanitizerError` — with per-block
+        allocation sites when ``REPRO_SANITIZE=1`` was set at engine
+        construction. Dense-backend engines hold no pool state; close is
+        a no-op for them."""
+        if self.kv_store is None:
+            return
+        if self._paged_in_model:
+            for slot in list(self.scheduler.running):
+                self._release_lane(slot)
+        for req in self.scheduler.pending_requests():
+            parked = getattr(req, "_resume", None)
+            if parked is None:
+                continue
+            parcel = parked[0]
+            req._resume = None
+            if isinstance(parcel, _LaneParcel):
+                held, charged = parcel.held, parcel.held_charged
+                if held.size:
+                    if charged.size:
+                        ref = np.asarray(self.kv_store.pool.ref)[held]
+                        n = int(np.isin(held[ref == 1], charged).sum())
+                        if n:
+                            self.prefix_cache.settle(
+                                n * self.kv_store.pool.block_bytes)
+                    self.kv_store.release_blocks(held)
+            else:
+                self.kv_store.release(parcel)
+        self.prefix_cache.clear()
+        sanlib.check_shutdown(self)
 
     # ------------------------------------------------------------------ #
     # Lockstep (batch) layer
@@ -1104,6 +1166,8 @@ class Engine:
                                                logits[slot].reshape(1, -1)))
                 if req.done:
                     finished.append(retire(slot))
+        if self._sanitizer is not None and self._paged_in_model:
+            sanlib.check_lanes(self)
         return finished
 
     def run(self) -> List[Request]:

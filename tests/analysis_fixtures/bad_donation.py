@@ -1,0 +1,28 @@
+"""Known-bad donation-discipline fixture (parsed, never imported).
+
+``# expect: RULE`` markers sit on the exact line each finding must
+anchor to: DON001 anchors at the *read* (or at the donating call for the
+loop-carried variant), DON002 at the donating call.
+"""
+import jax
+
+
+class Server:
+    def __init__(self, step_fn, prefix_cache):
+        self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.prefix_cache = prefix_cache
+
+    def refresh(self, state):
+        new = self._step(state)
+        stale = state + 1                                 # expect: DON001
+        return new, stale
+
+    def drain(self, state):
+        out = state
+        for _ in range(4):
+            out = self._step(state)                       # expect: DON001
+        return out
+
+    def resume(self, key):
+        state = self.prefix_cache.restore(key)
+        return self._step(state)                          # expect: DON002

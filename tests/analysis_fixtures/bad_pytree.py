@@ -1,0 +1,47 @@
+"""Known-bad pytree-registration fixture (parsed, never imported).
+
+``# expect: RULE`` markers sit on the exact line each finding must
+anchor to: PYT001 at the in-trace construction, PYT002 at the
+``register_dataclass`` call / the ``tree_flatten`` return.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class StepMeta:
+    scale: float
+
+
+@jax.jit
+def advance(x):
+    m = StepMeta(scale=2.0)                               # expect: PYT001
+    return x * m.scale
+
+
+@dataclasses.dataclass
+class Windowed:
+    data: np.ndarray
+    width: int
+
+
+jax.tree_util.register_dataclass(                         # expect: PYT002
+    Windowed, data_fields=["data"], meta_fields=["data", "width"])
+
+
+@dataclasses.dataclass
+class RingAux:
+    ring: np.ndarray
+    period: int
+
+    def tree_flatten(self):
+        return ((self.period,), (self.ring, self.period))  # expect: PYT002
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(ring=aux[0], period=children[0])
+
+
+jax.tree_util.register_pytree_node_class(RingAux)

@@ -1,0 +1,46 @@
+"""Known-bad trace-purity fixture.
+
+Parsed by ``tests/test_analysis.py`` (never imported): every line that a
+pass must flag carries a trailing ``# expect: RULE`` marker, and the test
+asserts the finding set equals the marker set exactly — rule ID *and*
+line number.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+class Store:
+    def alloc_blocks(self, n):
+        self.used = self.used + n                         # expect: TRC003
+        return list(range(n))
+
+
+def raiser():
+    raise PoolExhausted("no blocks")                      # expect: TRC001
+
+
+def helper(state):
+    raiser()                                              # expect: TRC001
+    return jnp.sum(state)
+
+
+def traced_body(state, store):
+    ids = store.alloc_blocks(2)                           # expect: TRC001
+    host = np.asarray(state)                              # expect: TRC002
+    env = os.environ.get("REPRO_X", "0")                  # expect: TRC002
+    helper(state)                                         # expect: TRC001
+    return state + len(ids) + host.sum() + len(env)
+
+
+def outer(state, store):
+    # the traced region roots here: both branch callables of the cond
+    return jax.lax.cond(state.sum() > 0,
+                        lambda s: traced_body(s, store),  # expect: TRC001
+                        lambda s: s, state)

@@ -1,0 +1,90 @@
+"""Known-good fixture: the clean twin of every known-bad snippet.
+
+``tests/test_analysis.py`` asserts the passes report ZERO findings here —
+each construct below is the approved way to do what the bad fixtures do
+wrong, including one intentional boundary suppressed with an
+``# analysis: allow(...)`` annotation.
+"""
+import dataclasses
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+class Store:
+    def alloc_blocks(self, n):
+        return list(range(n))
+
+
+class Carry(NamedTuple):
+    """NamedTuples are auto-registered pytrees: fine to build under trace."""
+
+    buf: np.ndarray
+    step: int
+
+
+@dataclasses.dataclass
+class RegisteredMeta:
+    scale: np.ndarray
+    name: str
+
+
+jax.tree_util.register_dataclass(
+    RegisteredMeta, data_fields=["scale"], meta_fields=["name"])
+
+
+@jax.jit
+def advance(x):
+    # registered dataclass + NamedTuple under trace: both fine
+    m = RegisteredMeta(scale=x, name="gain")
+    c = Carry(buf=m.scale, step=1)
+    # np on *static* metadata (shapes) is trace-safe
+    n = int(np.prod(jnp.shape(x)))
+    return c.buf * n
+
+
+def eager_driver(store, state):
+    # pool ops BEFORE dispatch — the approved shape of the bad fixture
+    ids = store.alloc_blocks(2)
+    threads = os.environ.get("REPRO_THREADS", "1")
+    return advance(state), ids, threads
+
+
+class Server:
+    def __init__(self, step_fn, prefix_cache):
+        self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.prefix_cache = prefix_cache
+
+    def refresh(self, state):
+        # rebinding the donated name kills the hazard
+        state = self._step(state)
+        return state + 1
+
+    def drain(self, state):
+        for _ in range(4):
+            state = self._step(state)
+        return state
+
+    def resume(self, key):
+        # copy a by-reference store result into a FRESH pytree before
+        # donating — the cache keeps (and keeps using) its own buffers
+        cached = self.prefix_cache.restore(key)
+        state = jax.tree_util.tree_map(jnp.asarray, cached)
+        return self._step(state)
+
+
+def traced_edge(state):
+    # an intentional, reviewed boundary: suppressed with an allow
+    host = np.asarray(state)  # analysis: allow(TRC002)
+    return state + host.sum()
+
+
+def outer(state):
+    return jax.lax.cond(state.sum() > 0, traced_edge, lambda s: s, state)

@@ -1,0 +1,157 @@
+"""The lint passes catch exactly their known-bad fixtures — rule ID *and*
+line — report nothing on the known-good twin, honor ``allow`` comments,
+and find the shipped tree clean.
+
+Fixtures live in ``tests/analysis_fixtures/`` (parsed, never imported);
+every line a pass must flag carries a trailing ``# expect: RULE`` marker,
+and the tests assert set equality between markers and findings, so a pass
+that goes blind (misses a finding) fails the same as one that goes noisy
+(extra findings).
+"""
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_paths
+from repro.analysis.common import RULES
+
+HERE = Path(__file__).parent
+FIXTURES = HERE / "analysis_fixtures"
+SRC = (HERE.parent / "src" / "repro").resolve()
+
+_EXPECT = re.compile(r"#\s*expect:\s*([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)")
+
+
+def expected_markers(path: Path):
+    out = set()
+    for lineno, text in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT.search(text)
+        if m:
+            for rule in m.group(1).split(","):
+                out.add((rule.strip(), lineno))
+    return out
+
+
+def findings(path) -> set:
+    return {(f.rule, f.line) for f in run_paths([str(path)])}
+
+
+# --------------------------------------------------------------------------- #
+# known-bad fixtures: exact rule IDs at exact lines, nothing more
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name, rule_prefixes", [
+    ("bad_trace.py", {"TRC"}),
+    ("bad_donation.py", {"DON"}),
+    ("bad_pytree.py", {"PYT"}),
+])
+def test_known_bad_fixture_exact_rules_and_lines(name, rule_prefixes):
+    path = FIXTURES / name
+    exp = expected_markers(path)
+    assert exp, f"{name} carries no # expect markers"
+    # the fixture is dedicated to one pass: its markers only use that
+    # pass's rule family (guards against marker typos)
+    assert {r[:3] for r, _ in exp} == rule_prefixes
+    got = findings(path)
+    missing = exp - got
+    extra = got - exp
+    assert not missing, f"pass went blind, missed: {sorted(missing)}"
+    assert not extra, f"pass went noisy, extra: {sorted(extra)}"
+
+
+def test_all_rule_ids_are_documented_and_exercised():
+    exercised = set()
+    for name in ("bad_trace.py", "bad_donation.py", "bad_pytree.py"):
+        exercised |= {r for r, _ in expected_markers(FIXTURES / name)}
+    assert exercised == set(RULES), (
+        "every documented rule must have a known-bad fixture line "
+        f"(documented {sorted(RULES)} vs exercised {sorted(exercised)})")
+
+
+def test_known_good_fixture_is_clean():
+    assert findings(FIXTURES / "good.py") == set()
+
+
+# --------------------------------------------------------------------------- #
+# suppression comments
+# --------------------------------------------------------------------------- #
+_SUPPRESSIBLE = """\
+import numpy as np
+import jax
+
+
+@jax.jit
+def f(x):
+    {comment_above}
+    y = np.asarray(x)  {trailing}
+    return x + y.sum()
+"""
+
+
+def _write(tmp_path, comment_above="", trailing=""):
+    p = tmp_path / "snippet.py"
+    p.write_text(_SUPPRESSIBLE.format(comment_above=comment_above,
+                                      trailing=trailing))
+    return p
+
+
+def test_unsuppressed_violation_is_reported(tmp_path):
+    assert findings(_write(tmp_path)) == {("TRC002", 8)}
+
+
+def test_trailing_allow_suppresses(tmp_path):
+    p = _write(tmp_path, trailing="# analysis: allow(TRC002)")
+    assert findings(p) == set()
+
+
+def test_comment_above_allow_suppresses(tmp_path):
+    p = _write(tmp_path, comment_above="# analysis: allow(TRC002)")
+    assert findings(p) == set()
+
+
+def test_allow_star_suppresses_any_rule(tmp_path):
+    p = _write(tmp_path, trailing="# analysis: allow(*)")
+    assert findings(p) == set()
+
+
+def test_allow_for_other_rule_does_not_suppress(tmp_path):
+    p = _write(tmp_path, trailing="# analysis: allow(DON001)")
+    assert findings(p) == {("TRC002", 8)}
+
+
+# --------------------------------------------------------------------------- #
+# rules filter + CLI contract
+# --------------------------------------------------------------------------- #
+def test_rules_prefix_filter():
+    only_don = run_paths([str(FIXTURES / "bad_donation.py"),
+                          str(FIXTURES / "bad_trace.py")], rules=["DON"])
+    assert only_don and all(f.rule.startswith("DON") for f in only_don)
+
+
+def test_cli_fail_on_warn_exit_codes(tmp_path):
+    env_paths = str(SRC.parent)
+
+    def run(*args):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": env_paths, "PATH": "/usr/bin:/bin"})
+
+    bad = run("--fail-on-warn", str(FIXTURES / "bad_trace.py"))
+    assert bad.returncode == 1
+    assert "TRC001" in bad.stdout
+    good = run("--fail-on-warn", str(FIXTURES / "good.py"))
+    assert good.returncode == 0
+    # without --fail-on-warn findings are reported but the exit is clean
+    soft = run(str(FIXTURES / "bad_trace.py"))
+    assert soft.returncode == 0 and "TRC001" in soft.stdout
+
+
+# --------------------------------------------------------------------------- #
+# self-check: the shipped tree holds the invariants it lints for
+# --------------------------------------------------------------------------- #
+def test_src_repro_is_clean():
+    offenders = run_paths([str(SRC)])
+    assert offenders == [], "\n".join(f.render() for f in offenders)

@@ -384,3 +384,140 @@ def test_paged_in_model_matches_dense_ring_ssm_hybrid(kind, policy,
     eng.prefix_cache.clear()
     pagedlib.check_invariants(eng.kv_store.pool)
     assert eng.kv_bytes_in_use == eng.lane_owned_bytes
+
+
+# --------------------------------------------------------------------------- #
+# Sanitized serving scenarios (REPRO_SANITIZE=1)
+#
+# The same traffic shapes as the parity tests above, but with the runtime
+# pool sanitizer armed: every allocator op re-checks the pool invariants,
+# every step audits lane CoW/refcount state, and ``Engine.close()``
+# asserts ZERO leaked blocks once lanes retire, parked preemption parcels
+# drop and the prefix cache clears. Slow-marked: the per-op invariant
+# sweep is O(pool) python work on every allocator call.
+# --------------------------------------------------------------------------- #
+@pytest.fixture
+def _sanitized(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+
+def _close_clean(eng):
+    assert eng._sanitizer is not None       # the env flag really engaged
+    eng.close()                             # raises SanitizerError on leaks
+    ref = np.asarray(eng.kv_store.pool.ref)
+    live = int((ref > 0).sum())
+    reserved = eng.lane_owned_bytes // eng.kv_store.pool.block_bytes
+    assert live == reserved                 # only lane reservations remain
+
+
+@pytest.mark.slow
+def test_sanitized_mixed_prefix_traffic_drains_pool(_sanitized, small_model):
+    """Prefix-sharing + cold traffic under the sanitizer: paged still
+    matches dense token-for-token, and the pool drains at close()."""
+    cfg, params = small_model
+    rng = np.random.default_rng(31)
+    shared = rng.integers(0, cfg.vocab_size, (20,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                                    (4 + i,))])
+               for i in range(3)]
+    prompts.append(rng.integers(0, cfg.vocab_size, (26,)))      # cold
+
+    def serve(kv_backend):
+        eng = Engine(cfg, params, budget=48, max_batch=2,
+                     kv_backend=kv_backend)
+        reqs = [eng.submit(p, 6, cache_prefix=(i < 3))
+                for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, reqs
+
+    _, dense_reqs = serve("dense")
+    eng, paged_reqs = serve("paged")
+    for d, p in zip(dense_reqs, paged_reqs):
+        np.testing.assert_array_equal(p.tokens, d.tokens)
+    _close_clean(eng)
+
+
+@pytest.mark.slow
+def test_sanitized_preempt_resume_drains_pool(_sanitized, small_model):
+    """Deadline preemption + resume with the sanitizer armed: the handoff
+    (lane -> parcel -> lane) must neither leak nor double-release, the
+    resumed request still matches an uninterrupted run, and the pool
+    drains at close()."""
+    cfg, params = small_model
+    rng = np.random.default_rng(32)
+    pa = rng.integers(0, cfg.vocab_size, (20,))
+    pb = rng.integers(0, cfg.vocab_size, (12,))
+
+    ref = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    ra = ref.submit(pa, 10, deadline=10.0)
+    ref.run()
+    _close_clean(ref)
+
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    a = eng.submit(pa, 10, deadline=10.0)
+    for _ in range(4):
+        eng.step()
+    b = eng.submit(pb, 3, deadline=1.0)     # earlier deadline: preempts A
+    eng.step()
+    assert a.status == "pending" and eng.preemptions == 1
+    eng.run()
+    np.testing.assert_array_equal(a.tokens, ra.tokens)
+    _close_clean(eng)
+
+
+@pytest.mark.slow
+def test_sanitized_close_releases_parked_parcel(_sanitized, small_model):
+    """Shutdown with a preempted request still PENDING: close() must
+    dispose of the parked parcel's travelling references (and settle any
+    prefix-cache charge it carried) — the pool drains without the request
+    ever resuming."""
+    cfg, params = small_model
+    rng = np.random.default_rng(33)
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 admission="deadline")
+    a = eng.submit(rng.integers(0, cfg.vocab_size, (20,)), 10,
+                   deadline=10.0, cache_prefix=True)
+    for _ in range(4):
+        eng.step()
+    eng.submit(rng.integers(0, cfg.vocab_size, (12,)), 8, deadline=1.0)
+    eng.step()
+    assert a.status == "pending" and a._resume is not None
+    _close_clean(eng)                       # parcel dropped, zero leaks
+
+
+@pytest.mark.slow
+def test_sanitized_eviction_churn_drains_pool(_sanitized, small_model):
+    """Prefix-cache eviction churn (a byte budget of ~one snapshot, so
+    every insert evicts while the lane still reads the blocks) under the
+    sanitizer: charges settle at retirement and the pool drains."""
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=1, kv_backend="paged",
+                 prefix_cache_bytes=40_000)
+    rng = np.random.default_rng(34)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, (40,)), 3,
+                   cache_prefix=True)
+        eng.run()
+    assert eng.prefix_cache.evictions > 0   # the churn actually happened
+    _close_clean(eng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ARCH_KINDS)
+def test_sanitized_arch_serving_drains_pool(kind, _sanitized, arch_models):
+    """Ring / SSM / hybrid stacks under the sanitizer: paged ring windows
+    and per-lane SSM states go through the same lane lifecycle, so their
+    pools must drain identically at close()."""
+    cfg, params = arch_models(kind)
+    rng = np.random.default_rng(35)
+    shared = rng.integers(0, cfg.vocab_size, (8,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size,
+                                                    (3 + i,))])
+               for i in range(2)]
+    eng = Engine(cfg, params, budget=24, max_batch=2, kv_backend="paged")
+    for i, p in enumerate(prompts):
+        eng.submit(p, 5, cache_prefix=(i < 2))
+    eng.run()
+    _close_clean(eng)
