@@ -98,7 +98,10 @@ class PoolSanitizer:
 
     # -- op validation -----------------------------------------------------
     def before_release(self, ids: np.ndarray, op: str) -> None:
+        # negative ids are the "unmapped" sentinel the device-side refcount
+        # ops skip; numpy indexing would wrap them onto real blocks
         ids = np.asarray(ids, np.int64).reshape(-1)
+        ids = ids[ids >= 0]
         if not ids.size:
             return
         ref = self._refs()
@@ -114,7 +117,10 @@ class PoolSanitizer:
                     f"released from {_call_site()}")
 
     def before_retain(self, ids: np.ndarray) -> None:
+        # same sentinel rule as before_release: -1 entries are skipped on
+        # device, so they are not retains and must not index the ref array
         ids = np.asarray(ids, np.int64).reshape(-1)
+        ids = ids[ids >= 0]
         if not ids.size:
             return
         ref = self._refs()

@@ -733,6 +733,27 @@ def paged_truncate(st: PagedKVCache, length, block_size: int) -> PagedKVCache:
         else jnp.where(live, st.scores, 0.0))
 
 
+def paged_rollback(st: PagedKVCache, drop, block_size: int) -> PagedKVCache:
+    """Drop the newest ``drop`` slots per lane (speculative rollback).
+
+    Relative twin of :func:`paged_truncate` that broadcasts over any
+    leading axes, so it applies both to flat ``[b, ...]`` tables and to the
+    stacked ``[n_full, b, ...]`` leaves of a decode state. Metadata only:
+    rejected rows stay in the lane's owned blocks but are unmapped, so the
+    next append overwrites them and the valid region is bit-identical to a
+    lane that never appended them.
+    """
+    length = jnp.maximum(st.length - jnp.asarray(drop, jnp.int32), 0)
+    live = jnp.arange(st.n_slots) < length[..., None]
+    dead = jnp.arange(st.max_blocks) * block_size >= length[..., None]
+    return st._replace(
+        blocks=jnp.where(dead, -1, st.blocks),
+        pos=jnp.where(live, st.pos, -1),
+        length=length,
+        scores=None if st.scores is None
+        else jnp.where(live, st.scores, 0.0))
+
+
 def _dead_blocks(st: PagedKVCache, length, block_size: int) -> jnp.ndarray:
     """bool[b, max_blocks]: logical blocks entirely past ``length``."""
     return jnp.arange(st.max_blocks)[None] * block_size >= length[:, None]
@@ -846,6 +867,44 @@ def paged_maybe_compact(kv: PoolKV, st: PagedKVCache, spec: LadderSpec, layer,
         return jax.lax.cond(jnp.any(still), force, lambda a: a, (kv, st))
 
     return jax.lax.cond(jnp.any(need), do, lambda a: a, (kv, st))
+
+
+def paged_draft_compact(kv: PoolKV, st: PagedKVCache, spec: LadderSpec, layer,
+                        policy: PolicyLike, rope_theta=None
+                        ) -> Tuple[PoolKV, PagedKVCache]:
+    """Compact a forked draft view down to ``spec.budget`` live slots.
+
+    The draft fork of a live lane reuses the exact keep-mask + RoPE
+    slot-delta machinery of :func:`paged_maybe_compact`, but targets the
+    (much smaller) draft budget and runs the copy pass for EVERY lane —
+    lanes already under the draft budget keep all their rows, but those
+    rows are still scattered into the draft's ``owned`` blocks. The
+    resulting draft view never aliases a live block, which is what lets
+    it outlive the wave that forked it: live appends, compactions and
+    block releases cannot touch draft-owned storage, so no refcounts need
+    to be held on the live tables and the CoW discipline ("a writable
+    table entry is never shared") keeps holding for the live lanes. ``st``
+    must carry the draft's own fully-covering ``owned`` reservation.
+    """
+    policy = get_policy(policy)
+    copy = jnp.ones_like(st.length, dtype=bool)     # every lane copies
+    if policy.evicts:
+        keep = _lane_keep_masks(policy, spec, st, layer)
+    else:
+        keep = _force_keep_masks(spec, st, st.n_slots - spec.budget)
+    # lanes under budget must keep everything (their policy mask may
+    # assume an over-budget lane); the copy still detaches them
+    under = st.length <= spec.budget
+    keep = jnp.where(under[:, None], st.pos >= 0, keep)
+    kv, st = _compact_pass(kv, st, keep, copy, rope_theta)
+    still = st.length > spec.budget
+
+    def force(args2):
+        kv2, st2 = args2
+        keep2 = _force_keep_masks(spec, st2, st2.n_slots - spec.budget)
+        return _compact_pass(kv2, st2, keep2, still, rope_theta)
+
+    return jax.lax.cond(jnp.any(still), force, lambda a: a, (kv, st))
 
 
 def paged_observe(policy, st: PagedKVCache, probs: jnp.ndarray

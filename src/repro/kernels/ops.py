@@ -203,6 +203,40 @@ def _xla_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return _masked_decode_attention(q, k, v, valid, sm_scale=sm_scale)
 
 
+def paged_verify_attention(q, k_pool, v_pool, block_tables, lengths,
+                           q_offsets, *, sm_scale=None,
+                           impl: Optional[str] = None,
+                           n_slots: Optional[int] = None,
+                           return_probs: bool = False):
+    """Multi-token (verify / chunk) decode attention through a block table.
+
+    The batched-verify twin of :func:`paged_decode_attention`: ``T`` query
+    tokens per lane — a speculative draft window being verified in one
+    dispatch, or a streaming-prefill chunk — attend causally over the lane's
+    slot buffer whose tail holds those same freshly appended tokens.
+    q: [b, T, h, d]; k_pool/v_pool: [n_blocks, bs, kv, d]; block_tables:
+    [b, max_blocks] (-1 unmapped); lengths: [b] (occupied prefix including
+    the chunk); q_offsets: [b] (per-lane slot of the first query token).
+
+    ``return_probs`` forces the reference path (the same contract the
+    single-token kernels carry for score-accumulating policies). The Pallas
+    block-streaming kernel is single-query; multi-query dispatches run the
+    gathered XLA path under every impl until a multi-query kernel lands —
+    the verify step is compute-bound over ``T`` queries, so the gather it
+    shares with :func:`_xla_paged_decode_attention` is not the bottleneck.
+    The semantics contract is
+    :func:`repro.kernels.ref.paged_verify_attention_reference`, and the
+    dispatch *is* that computation, so kernel and oracle cannot drift.
+    """
+    if return_probs:
+        return _ref.paged_verify_attention_reference(
+            q, k_pool, v_pool, block_tables, lengths, q_offsets,
+            sm_scale=sm_scale, n_slots=n_slots, return_probs=True)
+    return _ref.paged_verify_attention_reference(
+        q, k_pool, v_pool, block_tables, lengths, q_offsets,
+        sm_scale=sm_scale, n_slots=n_slots)
+
+
 def paged_ring_decode_attention(q, k_pool, v_pool, block_tables, ring_pos,
                                 next_pos, *, window: int, sm_scale=None,
                                 impl: Optional[str] = None):

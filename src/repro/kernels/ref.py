@@ -133,6 +133,48 @@ def paged_decode_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
     return out[:, 0]
 
 
+def paged_verify_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                     v_pool: jnp.ndarray,
+                                     block_tables: jnp.ndarray,
+                                     lengths: jnp.ndarray,
+                                     q_offsets: jnp.ndarray, *,
+                                     sm_scale: Optional[float] = None,
+                                     n_slots: Optional[int] = None,
+                                     return_probs: bool = False):
+    """Multi-token causal decode attention through a paged block table.
+
+    The verify step of draft/verify speculative decoding (and the chunked
+    streaming-prefill step): ``T`` query tokens per lane attend causally over
+    the lane's slot buffer, whose tail holds those same ``T`` freshly
+    appended tokens.
+
+    q: [b, T, h, d]; k_pool/v_pool: [n_blocks, block_size, kv, d];
+    block_tables: [b, max_blocks] int32 (-1 = unmapped); lengths: [b] int32
+    (occupied prefix *including* the appended chunk); q_offsets: [b] int32
+    (slot of each lane's first query token — ``lengths - T`` when nothing
+    clamped). Each lane runs :func:`mha_reference` causally at its own
+    offset, so query ``i`` sees ``[whole compacted past || chunk[:i+1]]`` —
+    bit-for-bit the dense chunk computation, per lane.
+
+    ``return_probs`` additionally returns [b, h, T, S] attention
+    probabilities (the same contract single-token ``return_probs`` carries
+    for score-accumulating policies). This is the semantics contract for
+    :func:`repro.kernels.ops.paged_verify_attention`.
+    """
+    k, v, valid = paged_logical_view(k_pool, v_pool, block_tables, lengths,
+                                     n_slots)
+
+    def one(qi, ki, vi, offi, vldi):
+        return mha_reference(qi[None], ki[None], vi[None], causal=True,
+                             q_offset=offi, kv_valid=vldi[None],
+                             sm_scale=sm_scale, return_probs=return_probs)
+
+    if return_probs:
+        o, p = jax.vmap(one)(q, k, v, q_offsets, valid)
+        return o[:, 0], p[:, 0]
+    return jax.vmap(one)(q, k, v, q_offsets, valid)[:, 0]
+
+
 def ring_valid_mask(ring_pos: jnp.ndarray, next_pos: jnp.ndarray,
                     window: int) -> jnp.ndarray:
     """Slot-validity mask of a sliding-window ring cache: occupied, inside

@@ -621,12 +621,8 @@ def attention_decode_chunk_paged(w, cfg: ModelConfig, x,
         kvp, st, k_store, v_new,
         (start[:, None] + jnp.arange(tc)[None]).astype(jnp.int32))
 
-    from repro.kernels import ref as kref
-    kk, vv = pagedlib.paged_gather_view(kvp, st, st.n_slots)
-    valid = jnp.arange(st.n_slots)[None] < st.length[:, None]  # [b, s]
-    o = jax.vmap(lambda qi, ki, vi, offi, vldi: kref.mha_reference(
-        qi[None], ki[None], vi[None], causal=True, q_offset=offi,
-        kv_valid=vldi[None])[0])(qq, kk, vv, q_off, valid)
+    o = kops.paged_verify_attention(qq, kvp.k, kvp.v, st.blocks, st.length,
+                                    q_off, n_slots=st.n_slots)
     y = o.reshape(b, tc, h * cfg.head_dim_) @ w["wo"]
     return shard(y, "batch", "seq", "residual"), st, kvp
 

@@ -847,7 +847,13 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens
     policy = eviction_policy(cfg)
     budget = _state_budget(state)
     if budget is not None:
-        lspec = lspec._replace(budget=budget)
+        # compaction still *triggers* on buffer overflow (n_slots), but it
+        # keeps to the configured ladder budget when the buffer is larger:
+        # extra engine slots are decode headroom between compactions, not a
+        # silent raise of the ladder budget. (Clamping down is still
+        # required when the buffer is smaller than the configured budget —
+        # the keep set must fit the buffer.)
+        lspec = lspec._replace(budget=min(lspec.budget, budget))
     paged = state.kv_pool is not None
     pos = state.pos                        # scalar (dense) or [b] (paged)
     x = _embed_tokens(params, cfg, tokens)
@@ -953,7 +959,9 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
     policy = eviction_policy(cfg)
     budget = _state_budget(state)
     if budget is not None:
-        lspec = lspec._replace(budget=budget)
+        # same headroom rule as decode_step: overflow-triggered, but keep
+        # to the configured ladder budget when the buffer is larger
+        lspec = lspec._replace(budget=min(lspec.budget, budget))
     paged = state.kv_pool is not None
     pos0 = state.pos                       # scalar (dense) or [b] (paged)
     tc = tokens.shape[1]
@@ -1045,3 +1053,146 @@ def decode_chunk(params, cfg: ModelConfig, state: DecodeState, tokens
     new_state = state._replace(pos=pos0 + tc, blocks=new_blocks,
                                tail=new_tail, kv_pool=kvp)
     return logits, new_state
+
+
+# =========================================================================== #
+# Self-speculative decoding: ladder-compacted draft fork / rollback
+# =========================================================================== #
+def spec_decode_eligible(cfg: ModelConfig) -> bool:
+    """Whether the self-speculative draft/verify loop supports this config.
+
+    The draft decodes through a compacted fork of the live block tables and
+    the target verifies ``k`` tokens in one chunk, then *rolls back* the
+    rejected suffix. Rollback is only exact for global-attention paged
+    caches (unmapping the newest slots restores the prior state bit-exactly):
+
+    * ring layers overwrite old rows in place (``slot = pos % w``) — the
+      overwritten content is gone, so a rejected token cannot be rewound,
+    * SSM layers advance a recurrence — no inverse step exists,
+    * score-carrying policies accumulate observations per dispatch, so a
+      chunked verify would diverge from the stepwise score trajectory even
+      when every token is accepted.
+
+    Those configs simply run the normal stepwise decode (the engine falls
+    back transparently; spec == non-spec trivially).
+    """
+    if not paged_decode_eligible(cfg):
+        return False
+    if any(s.kind != "attn" or s.attn != "global" for s in cfg.layer_specs()):
+        return False
+    return not eviction_policy(cfg).needs_scores
+
+
+def fork_draft_state(cfg: ModelConfig, state: DecodeState, planes: PoolKV,
+                     draft_owned: Dict[str, jnp.ndarray], draft_budget: int,
+                     page_size: int,
+                     draft_slots: Optional[int] = None) -> DecodeState:
+    """Fork the live paged state into a ladder-compacted draft view.
+
+    ``state`` is the live batched decode state *without* its pool planes
+    (the caller moves them in via ``planes`` so they can be donated);
+    ``draft_owned[key]`` is the draft's own fully-covering block
+    reservation for kv leaf ``key`` (same shape as that leaf's ``owned``).
+    Every lane is compacted down to ``draft_budget`` live slots with the
+    standard keep-mask + RoPE slot-delta fixup and its surviving rows are
+    *copied* into ``draft_owned`` — even lanes already under the draft
+    budget, which keep all their rows. The resulting draft view never
+    aliases a live block, so it can outlive this wave: the caller may keep
+    decoding through it across many draft/verify waves (rolling back the
+    rejected suffix each time) without holding refcounts on the live
+    tables, and live appends/compactions can never corrupt it. The live
+    tables are never written.
+
+    ``draft_slots`` (page-aligned, ``>= draft_budget + the appends the
+    draft will absorb``) trims the draft's slot buffers to that width.
+    This is where the draft actually gets *cheap*: paged attention
+    gathers and masks over the full slot buffer regardless of occupancy,
+    so a compacted draft at live width pays live-width attention — the
+    trimmed state gives the draft decode step its own small executable
+    whose attention cost scales with ``draft_slots``, not the live
+    ``n_slots``. Compaction has already packed survivors into the slot
+    prefix (dead table entries are ``-1``), so the trim is a static slice
+    of table/pos/score leaves.
+    """
+    if not spec_decode_eligible(cfg):
+        raise ValueError("config is not spec-decode eligible")
+    layout = cache_positions(cfg)
+    policy = eviction_policy(cfg)
+    dspec = ladder_spec(cfg)._replace(budget=draft_budget)
+    cache_rope = (cfg.pos_emb == "rope" and cfg.lacache.rope_mode == "cache"
+                  and not cfg.mrope)
+    theta = cfg.rope_theta if cache_rope else None
+    gpp = layout["gpp"]
+
+    kvp = planes
+    new_blocks = {}
+    if layout["n_full"]:
+        def body(carry, xs):
+            kvp = carry
+            caches, owned, pidx = xs["caches"], xs["owned"], xs["idx"]
+            out = {}
+            for p in range(layout["period"]):
+                key = f"p{p}"
+                rank = sum(1 for q in range(p)
+                           if layout["pspecs"][q].attn == "global")
+                ordl = pidx * gpp + rank
+                st = caches[key]._replace(owned=owned[key])
+                kvp, st = pagedlib.paged_draft_compact(
+                    kvp, st, dspec, ordl, policy, rope_theta=theta)
+                out[key] = st
+            return kvp, out
+
+        xs = {"caches": state.blocks,
+              "owned": {k: draft_owned[k] for k in state.blocks},
+              "idx": jnp.arange(layout["n_full"])}
+        kvp, new_blocks = jax.lax.scan(body, kvp, xs)
+
+    n_tail_base = layout["n_full"] * gpp
+    new_tail = {}
+    for i in range(len(layout["tail_specs"])):
+        key = f"t{i}"
+        st = state.tail[key]._replace(owned=draft_owned[key])
+        kvp, st = pagedlib.paged_draft_compact(
+            kvp, st, dspec, n_tail_base + i, policy, rope_theta=theta)
+        new_tail[key] = st
+
+    if draft_slots is not None:
+        if draft_slots % page_size:
+            raise ValueError(f"draft_slots={draft_slots} must be a multiple "
+                             f"of the page size {page_size}")
+        nb = draft_slots // page_size
+
+        def trim(st):
+            if draft_slots >= st.n_slots:
+                return st
+            return st._replace(
+                blocks=st.blocks[..., :nb], owned=st.owned[..., :nb],
+                pos=st.pos[..., :draft_slots],
+                scores=None if st.scores is None
+                else st.scores[..., :draft_slots])
+
+        new_blocks = {k: trim(v) for k, v in new_blocks.items()}
+        new_tail = {k: trim(v) for k, v in new_tail.items()}
+
+    # `pos + 0` forces a fresh buffer: the draft state is donated into the
+    # subsequent draft decode steps, so none of its leaves may alias a
+    # buffer the live state (held host-side meanwhile) still references.
+    return state._replace(pos=state.pos + 0, blocks=new_blocks,
+                          tail=new_tail, kv_pool=kvp)
+
+
+def spec_rollback_state(cfg: ModelConfig, state: DecodeState, drop,
+                        page_size: int) -> DecodeState:
+    """Rewind the newest ``drop[b]`` tokens of every kv leaf (metadata-only
+    unmap via :func:`repro.core.paged.paged_rollback`) and the per-lane
+    clock — the commit step after verify rejects a speculative suffix."""
+    def roll(leaf):
+        if isinstance(leaf, PagedKVCache):
+            return pagedlib.paged_rollback(leaf, drop, page_size)
+        return leaf
+
+    drop = jnp.asarray(drop, jnp.int32)
+    return state._replace(
+        pos=jnp.maximum(state.pos - drop, 0),
+        blocks={k: roll(v) for k, v in state.blocks.items()},
+        tail={k: roll(v) for k, v in state.tail.items()})

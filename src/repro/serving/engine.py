@@ -183,6 +183,9 @@ class Request:
     deadline: Optional[float] = None    # earlier admits first ("deadline")
     cache_prefix: bool = False          # opt into the shared-prefix cache
     on_token: Optional[Callable[["Request", int], None]] = None
+    spec_waves: int = 0                 # draft/verify waves on this lane
+    spec_proposed: int = 0              # draft tokens proposed for it
+    spec_accepted: int = 0              # draft tokens the target accepted
     _key: Any = None                    # per-request PRNG chain (runtime)
     _resume: Any = None                 # (PagedSnapshot, last token) while
     #                                     preempted; None otherwise
@@ -202,6 +205,12 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.output_tokens) >= self.max_new_tokens
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of this request's proposed draft tokens the verifier
+        accepted (0.0 until the first wave touches its lane)."""
+        return self.spec_accepted / max(1, self.spec_proposed)
 
 
 class Scheduler:
@@ -295,7 +304,9 @@ class Engine:
                  bucket_prefill: bool = False, min_bucket: int = 16,
                  kv_backend: str = "dense", page_size: int = 16,
                  pool_blocks: Optional[int] = None,
-                 preempt: Optional[bool] = None):
+                 preempt: Optional[bool] = None,
+                 spec_config: Optional["SpecConfig"] = None,
+                 prewarm: bool = False):
         if kv_backend not in ("dense", "paged"):
             raise ValueError(
                 f"kv_backend must be 'dense' or 'paged', got {kv_backend!r}")
@@ -409,6 +420,20 @@ class Engine:
         self.prefill_tokens = 0
         self.prefill_shapes: Set[Tuple[str, int]] = set()
         self.prefix_tokens_reused = 0
+        # self-speculative decoding: a draft/verify loop over a ladder-
+        # compacted fork of the live tables. Constructing the decoder on
+        # any backend keeps the API uniform; it only *runs* on eligible
+        # paged configs and otherwise falls back to stepwise decode.
+        self._spec = None
+        if spec_config is not None:
+            from repro.serving.speculative import SpecDecoder
+            self._spec = SpecDecoder(self, spec_config)
+        # compile-inclusive cold start: optionally execute the decode-side
+        # executables once at construction so the first serving wave runs
+        # compile-free (benchmarks report both numbers).
+        self.prewarm = bool(prewarm)
+        if self.prewarm and self._paged_in_model:
+            self._prewarm()
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -425,6 +450,28 @@ class Engine:
     def kv_bytes_in_use(self) -> int:
         """Physical bytes of live pool blocks (paged backend)."""
         return self.kv_store.bytes_in_use if self.kv_store is not None else 0
+
+    @property
+    def draft_owned_bytes(self) -> int:
+        """Physical pool bytes reserved for the speculative draft view
+        (0 when speculation is off or the first wave hasn't run)."""
+        if self._spec is None or self.kv_store is None:
+            return 0
+        return self._spec.owned_blocks * self.kv_store.pool.block_bytes
+
+    @property
+    def spec_stats(self) -> Dict[str, float]:
+        """Aggregate speculative-decoding telemetry: waves run, draft
+        (re-)forks, stepwise fallbacks, draft tokens proposed/accepted and
+        the acceptance rate."""
+        s = self._spec
+        if s is None:
+            return {"waves": 0, "forks": 0, "fallback_steps": 0,
+                    "proposed": 0, "accepted": 0, "acceptance_rate": 0.0}
+        return {"waves": s.waves, "forks": s.forks,
+                "fallback_steps": s.fallback_steps,
+                "proposed": s.proposed, "accepted": s.accepted,
+                "acceptance_rate": s.acceptance_rate}
 
     def _prefix_cache_blocks(self) -> int:
         """Distinct pool blocks currently mapped by prefix-cache entries
@@ -479,6 +526,8 @@ class Engine:
                     self.kv_store.release_blocks(held)
             else:
                 self.kv_store.release(parcel)
+        if self._spec is not None:
+            self._spec.release()
         self.prefix_cache.clear()
         sanlib.check_shutdown(self)
 
@@ -506,8 +555,14 @@ class Engine:
                                      frames=frames)
         key = jax.random.PRNGKey(seed)
         outs = []
-        tok = (sampling.greedy(logits) if temperature == 0.0 else
-               sampling.sample(key, logits, temperature, top_k))[:, None]
+        # split before first use: sampling with the unsplit root key and
+        # then splitting the SAME key for later tokens reuses randomness
+        # (token 0's draw correlates with the whole downstream chain)
+        if temperature == 0.0:
+            tok = sampling.greedy(logits)[:, None]
+        else:
+            key, sub = jax.random.split(key)
+            tok = sampling.sample(sub, logits, temperature, top_k)[:, None]
         for i in range(max_new_tokens):
             outs.append(np.asarray(tok[:, 0]))
             logits, state = self._decode(self.params, state=state, tokens=tok)
@@ -672,6 +727,59 @@ class Engine:
             lambda x: jnp.broadcast_to(
                 x[None], (self.max_batch,) + x.shape).copy(), one)
 
+    def _prewarm(self) -> None:
+        """Execute the paged decode-side executables once at construction.
+
+        The paged cold start is dominated by the first batched step/chunk
+        compiles (ROADMAP: paged 4.3 vs dense 18.4 tok/s incl. compile);
+        real warm dispatches here move that cost out of the first serving
+        wave. The jits already key their caches on static aux only (the
+        batched state's shapes are fixed at construction; slot index and
+        true_len are traced), so the warm executables are exactly the ones
+        live traffic hits. The garbage tokens the warm step appends are
+        harmless: every lane is ``_lane_reset`` at admission, and inactive
+        lanes are never read. Prefill executables are left cold — their
+        shapes depend on prompt lengths the engine cannot know yet (and
+        the dense backend pays the same prefill compiles).
+        """
+        self._ensure_slot_states()
+        zero = jnp.asarray(0, jnp.int32)
+        # lane splice chain (admission path)
+        rest, sub = self._lane_take(self._slot_states, zero)
+        sub = self._lane_reset(sub)
+        # chunk-prefill executable at the batch-1 cap width
+        cap = max(1, self.budget // 2)
+        w = 1 << (cap.bit_length() - 1) if self.bucket_prefill else cap
+        _, sub = self._paged_chunk(self.params, state=sub,
+                                   tokens=jnp.zeros((1, w), jnp.int32))
+        self._slot_states = self._lane_put(rest, sub, zero)
+        # the batched decode step (the hot path)
+        _, self._slot_states = self._paged_step(
+            self.params, state=self._slot_states,
+            tokens=jnp.zeros((self.max_batch, 1), jnp.int32))
+        if self._spec is not None and self._spec.enabled:
+            # fork / draft-step / verify-chunk / rollback executables (the
+            # draft state is trimmed, so its step and rollback compile
+            # separately from the live-shaped ones); the k+1-wide live
+            # rollback also erases the warm chunk's garbage appends
+            sp = self._spec
+            state = self._slot_states
+            sp.ensure_reserved(state)
+            planes = state.kv_pool
+            live = state._replace(kv_pool=None)
+            draft = sp._fork(live, planes, dict(sp._owned))
+            _, draft = self._paged_step(
+                self.params, state=draft,
+                tokens=jnp.zeros((self.max_batch, 1), jnp.int32))
+            live = live._replace(kv_pool=draft.kv_pool)
+            draft = draft._replace(kv_pool=None)
+            sp._rollback(draft, jnp.ones((self.max_batch,), jnp.int32))
+            _, live = self._paged_chunk(
+                self.params, state=live,
+                tokens=jnp.zeros((self.max_batch, sp.k + 1), jnp.int32))
+            self._slot_states = sp._rollback(
+                live, jnp.full((self.max_batch,), sp.k + 1, jnp.int32))
+
     # -- prefill paths (cold / bucketed / prefix-reusing) ---------------- #
     def _bucket_len(self, n: int) -> int:
         """Smallest power-of-two bucket (>= min_bucket) covering ``n``,
@@ -799,27 +907,69 @@ class Engine:
         spliced table copy-on-writes into the lane's reserved blocks because
         the spliced ids are not in its ``owned`` set. Ring layers splice
         their residue-class tables the same way; SSM layers copy their
-        (small) dense state back verbatim."""
-        sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
+        (small) dense state back verbatim.
+
+        All per-layer fields are packed into one flat host staging buffer
+        per dtype and shipped in a single host->device transfer each — the
+        previous per-layer-per-field uploads were the per-admission host
+        round-trips that kept hybrid paged splices behind dense. The
+        per-field views below are device-side static slices."""
+        parts: Dict[str, List[np.ndarray]] = {}
+        sizes: Dict[str, int] = {}
+
+        def stage(arr, dtype):
+            d = np.dtype(dtype)
+            a = np.asarray(arr).reshape(-1).astype(d, copy=False)
+            name = d.name
+            start = sizes.get(name, 0)
+            parts.setdefault(name, []).append(a)
+            sizes[name] = start + a.size
+            return name, start, a.size
+
+        plan = []
         for section, key, leaf in self._lane_layers(sub):
             layer = snap.tables[section][key]
             if isinstance(leaf, pagedlib.PagedKVCache):
+                fields = {"blocks": stage(layer["blocks"], np.int32),
+                          "pos": stage(layer["pos"], np.int32),
+                          "length": stage(layer["length"], np.int32)}
+                if leaf.scores is not None:
+                    fields["scores"] = stage(layer["scores"], np.float32)
+            elif isinstance(leaf, pagedlib.PagedRingCache):
+                fields = {"blocks": stage(layer["blocks"], np.int32),
+                          "pos": stage(layer["pos"], np.int32),
+                          "next_pos": stage(layer["next_pos"], np.int32)}
+            else:                                   # SSM state
+                fields = {"conv": stage(layer["conv"], leaf.conv.dtype),
+                          "ssm": stage(layer["ssm"], leaf.ssm.dtype)}
+            plan.append((section, key, leaf, fields))
+        pos_h = stage(snap.state_pos, np.int32)
+        staged = {name: jnp.asarray(np.concatenate(bufs))
+                  for name, bufs in parts.items()}
+
+        def view(handle, shape):
+            name, start, size = handle
+            return staged[name][start:start + size].reshape(shape)
+
+        sections = {"blocks": dict(sub.blocks), "tail": dict(sub.tail)}
+        for section, key, leaf, fields in plan:
+            if isinstance(leaf, pagedlib.PagedKVCache):
                 sections[section][key] = leaf._replace(
-                    blocks=jnp.asarray(layer["blocks"], jnp.int32),
-                    pos=jnp.asarray(layer["pos"], jnp.int32),
-                    length=jnp.asarray(layer["length"], jnp.int32),
+                    blocks=view(fields["blocks"], leaf.blocks.shape),
+                    pos=view(fields["pos"], leaf.pos.shape),
+                    length=view(fields["length"], leaf.length.shape),
                     scores=None if leaf.scores is None
-                    else jnp.asarray(layer["scores"], jnp.float32))
+                    else view(fields["scores"], leaf.scores.shape))
             elif isinstance(leaf, pagedlib.PagedRingCache):
                 sections[section][key] = leaf._replace(
-                    blocks=jnp.asarray(layer["blocks"], jnp.int32),
-                    pos=jnp.asarray(layer["pos"], jnp.int32),
-                    next_pos=jnp.asarray(layer["next_pos"], jnp.int32))
+                    blocks=view(fields["blocks"], leaf.blocks.shape),
+                    pos=view(fields["pos"], leaf.pos.shape),
+                    next_pos=view(fields["next_pos"], leaf.next_pos.shape))
             else:                                   # SSM state
                 sections[section][key] = MambaState(
-                    conv=jnp.asarray(layer["conv"], leaf.conv.dtype),
-                    ssm=jnp.asarray(layer["ssm"], leaf.ssm.dtype))
-        return sub._replace(pos=jnp.asarray(snap.state_pos, jnp.int32),
+                    conv=view(fields["conv"], leaf.conv.shape),
+                    ssm=view(fields["ssm"], leaf.ssm.shape))
+        return sub._replace(pos=view(pos_h, sub.pos.shape),
                             blocks=sections["blocks"],
                             tail=sections["tail"])
 
@@ -1107,6 +1257,10 @@ class Engine:
             return self.scheduler.retire(slot)
 
         for slot, req in self.scheduler.admit():
+            if self._spec is not None:
+                # a prefill/resume rewrites this lane's tables: the
+                # persistent draft view no longer mirrors the live lanes
+                self._spec.invalidate()
             if req._resume is not None:
                 # preempted request: continue exactly where it stopped (the
                 # last sampled token re-enters the batched decode below)
@@ -1146,26 +1300,34 @@ class Engine:
                 finished.append(retire(slot))
 
         if self.scheduler.running:
-            if self._paged_in_model:
-                # ONE batched paged decode step — the pool is shared across
-                # lanes, so the slot axis is real batch, not a vmap; each
-                # lane advances on its own pos/length clock.
-                toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None]
-                logits, self._slot_states = self._paged_step(
-                    self.params, state=self._slot_states, tokens=toks)
-                logits = np.asarray(logits)      # [max_batch, V]
-            else:
-                toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None, None]
-                logits, self._slot_states = self._slot_step(
-                    self.params, self._slot_states, toks)
-                logits = np.asarray(logits)      # [max_batch, 1, V]
-            for slot in sorted(self.scheduler.running):
-                req = self.scheduler.running[slot]
-                self._record(req,
-                             self._sample_next(req,
-                                               logits[slot].reshape(1, -1)))
-                if req.done:
+            spec_done = self._spec.wave() if self._spec is not None else None
+            if spec_done is not None:
+                # speculative wave: tokens were emitted and recorded inside
+                # the wave (up to k+1 per lane); retire what finished.
+                for slot in spec_done:
                     finished.append(retire(slot))
+            else:
+                if self._paged_in_model:
+                    # ONE batched paged decode step — the pool is shared
+                    # across lanes, so the slot axis is real batch, not a
+                    # vmap; each lane advances on its own pos/length clock.
+                    toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None]
+                    logits, self._slot_states = self._paged_step(
+                        self.params, state=self._slot_states, tokens=toks)
+                    logits = np.asarray(logits)      # [max_batch, V]
+                else:
+                    toks = jnp.asarray(self._slot_tokens,
+                                       jnp.int32)[:, None, None]
+                    logits, self._slot_states = self._slot_step(
+                        self.params, self._slot_states, toks)
+                    logits = np.asarray(logits)      # [max_batch, 1, V]
+                for slot in sorted(self.scheduler.running):
+                    req = self.scheduler.running[slot]
+                    self._record(req,
+                                 self._sample_next(req,
+                                                   logits[slot].reshape(1, -1)))
+                    if req.done:
+                        finished.append(retire(slot))
         if self._sanitizer is not None and self._paged_in_model:
             sanlib.check_lanes(self)
         return finished

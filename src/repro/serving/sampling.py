@@ -19,6 +19,26 @@ def sample(key, logits: jnp.ndarray, temperature: float = 1.0,
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
 
 
+def greedy_verify(drafts, targets):
+    """Greedy acceptance rule for self-speculative decoding (host-side).
+
+    drafts [b, k]: the draft's proposed tokens; targets [b, k+1]: the
+    target model's greedy argmax at every verified position (position j is
+    conditioned on the accepted prefix plus ``drafts[:, :j]``). Returns
+    ``emit [b]`` in ``[1, k+1]``: the accepted draft prefix length plus the
+    one free token the target supplies at the first disagreement (or the
+    bonus token when all k agree) — the standard rule that makes the
+    emitted stream token-for-token equal to non-speculative greedy.
+    """
+    import numpy as np
+    drafts = np.asarray(drafts)
+    targets = np.asarray(targets)
+    k = drafts.shape[1]
+    ok = drafts == targets[:, :k]                             # [b, k]
+    accepted = np.where(ok.all(axis=1), k, np.argmin(ok, axis=1))
+    return (accepted + 1).astype(np.int64)
+
+
 def log_prob_of(logits: jnp.ndarray, token: jnp.ndarray) -> jnp.ndarray:
     """log p(token | context); logits [b, V], token [b]."""
     lf = logits.astype(jnp.float32)

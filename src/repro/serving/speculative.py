@@ -1,0 +1,337 @@
+"""Self-speculative decoding through a ladder-compacted draft cache.
+
+Long-context decode is memory-bound: each step streams the whole budgeted
+KV once to produce one token. LaCache's iterative compaction already
+manufactures the artifact speculation needs — a cheap, aggressively
+compressed KV view of the *same* model — so the draft is not a second
+model but a **compacted copy fork** of the live lane:
+
+1. **fork** — every live lane is compacted down to ``draft_budget`` slots
+   with the standard keep-mask + RoPE slot-delta machinery, its surviving
+   rows *copied* into the draft's own engine-lifetime block reservation,
+   and the draft's slot buffers trimmed to a page-aligned ``draft_slots``
+   window. The copy (never aliasing a live block) is what lets the fork
+   **persist across waves**; the trim is what makes it cheap — paged
+   attention costs scale with the slot-buffer width, not its occupancy,
+   so the draft decodes through its own small executable.
+2. **draft** — ``k + 1`` greedy steps through the trimmed view: the first
+   ``k`` produce the proposals, the extra step pre-ingests the last
+   proposal's KV so a fully-accepted wave leaves the draft cache
+   consistent with the live stream. Appends land in draft-owned blocks;
+   capacity is gated host-side so the draft never compacts mid-wave.
+3. **verify** — the target feeds ``[last_token, d_1..d_k]`` (``k + 1``
+   tokens) through the existing paged ``decode_chunk`` in one dispatch
+   and takes the greedy argmax at every position.
+4. **commit** — greedy acceptance (emit the matching draft prefix plus
+   the target's token at the first disagreement — or its bonus token when
+   all ``k`` agree), then a metadata-only rollback of the SAME rejected
+   suffix on both the live state and the draft. Both caches end the wave
+   holding exactly the emitted stream minus its last token (the next
+   wave's first feed), so the draft stays valid and the expensive fork
+   amortizes over many waves. The emitted stream is token-for-token
+   identical to non-speculative greedy decode.
+
+The draft is **invalidated** (re-forked on the next wave) whenever the
+live lanes advance or change outside a wave: any fallback to stepwise
+decode (ineligible config, a stochastic request, or an active lane
+without ``k + 1`` free slots — the stepwise step then fires compaction
+exactly as non-speculative decode would), any admission/resume prefill
+into a lane, and when the draft's own slot window fills up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import paged as pagedlib
+from repro.models import model as M
+from repro.serving import sampling
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Draft/verify loop configuration (``Engine(spec_config=...)``).
+
+    ``k``: draft tokens proposed per wave — the target verifies ``k + 1``
+    positions in one chunk and emits between 1 and ``k + 1`` tokens.
+    ``draft_budget``: live slots the draft view is compacted down to at
+    fork time; ``None`` resolves to ``max(n_sink + 1, budget // 4)``
+    clamped so ``draft_budget + k <= budget``.
+    ``draft_slots``: width of the draft's trimmed slot buffers (rounded up
+    to a page multiple). The gap above ``draft_budget`` is cross-wave
+    headroom: the draft grows by the accepted tokens each wave and is only
+    re-forked (the expensive part) when the window fills. ``None``
+    resolves to ``draft_budget + 8 * (k + 1)`` — roughly eight waves of
+    fork amortization at full acceptance.
+    """
+
+    k: int = 4
+    draft_budget: Optional[int] = None
+    draft_slots: Optional[int] = None
+
+    def validate(self) -> "SpecConfig":
+        if not isinstance(self.k, (int, np.integer)) \
+                or isinstance(self.k, bool) or self.k < 1:
+            raise ValueError(f"k must be an int >= 1, got {self.k!r}")
+        for name, v in (("draft_budget", self.draft_budget),
+                        ("draft_slots", self.draft_slots)):
+            if v is not None and (
+                    not isinstance(v, (int, np.integer))
+                    or isinstance(v, bool) or v < 1):
+                raise ValueError(
+                    f"{name} must be None or an int >= 1, got {v!r}")
+        return self
+
+
+class SpecDecoder:
+    """Engine-side driver of the draft/verify wave.
+
+    Holds the draft's engine-lifetime block reservation (one fully-
+    covering ``owned`` set per kv leaf, same shape as the lanes' own —
+    released by ``Engine.close()`` before the shutdown leak audit), the
+    persistent cross-wave draft state, and the per-wave telemetry
+    aggregates. Per-request acceptance counters live on
+    :class:`repro.serving.engine.Request`.
+    """
+
+    def __init__(self, engine, config: SpecConfig):
+        config = config.validate()
+        self.engine = engine
+        self.config = config
+        self.k = int(config.k)
+        cfg = engine.cfg
+        self.enabled = (engine.kv_backend == "paged"
+                        and engine._paged_in_model
+                        and M.spec_decode_eligible(cfg))
+        # telemetry (aggregates across requests)
+        self.waves = 0
+        self.forks = 0
+        self.fallback_steps = 0
+        self.proposed = 0
+        self.accepted = 0
+        self.draft_budget = 0
+        self.draft_slots = 0
+        self._owned: Optional[Dict[str, np.ndarray]] = None
+        self._owned_blocks = 0
+        # the persistent draft: a trimmed DecodeState without pool planes
+        # (planes are threaded in from the live state at each use), plus a
+        # host-side upper bound on its occupancy for the capacity gate
+        self._draft = None
+        self._draft_len_ub = 0
+        if not self.enabled:
+            return
+        spec = M.ladder_spec(cfg)
+        db = config.draft_budget
+        if db is None:
+            db = min(max(spec.n_sink + 1, engine.budget // 4),
+                     engine.budget - self.k)
+        if db < 1 or db + self.k > engine.budget:
+            raise ValueError(
+                f"draft_budget={db} with k={self.k} does not fit the lane "
+                f"budget {engine.budget} (need 1 <= draft_budget and "
+                "draft_budget + k <= budget so the draft never compacts "
+                "mid-wave)")
+        self.draft_budget = int(db)
+        ps = engine.page_size
+        ds = config.draft_slots
+        if ds is None:
+            ds = self.draft_budget + 8 * (self.k + 1)
+        ds = max(int(ds), self.draft_budget + self.k + 1)
+        self.draft_slots = -(-ds // ps) * ps
+        # donate ONLY the pool planes into the fork: the live tables stay
+        # host-referenced across the wave and must survive it, while the
+        # planes move draft -> live and back.
+        self._fork = jax.jit(
+            lambda state, planes, owned: M.fork_draft_state(
+                cfg, state, planes, owned, self.draft_budget, ps,
+                draft_slots=self.draft_slots),
+            donate_argnames=("planes",))
+        # one jit, two executables: the live-shaped and draft-shaped
+        # rollbacks specialize on their state shapes
+        self._rollback = jax.jit(
+            lambda state, drop: M.spec_rollback_state(cfg, state, drop, ps),
+            donate_argnames=("state",))
+
+    # ------------------------------------------------------------------ #
+    # Draft reservation lifecycle
+    # ------------------------------------------------------------------ #
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.accepted / max(1, self.proposed)
+
+    def _kv_leaves(self, state):
+        for key in sorted(state.blocks):
+            leaf = state.blocks[key]
+            if isinstance(leaf, pagedlib.PagedKVCache):
+                yield key, leaf
+        for key in sorted(state.tail):
+            leaf = state.tail[key]
+            if isinstance(leaf, pagedlib.PagedKVCache):
+                yield key, leaf
+
+    def ensure_reserved(self, state) -> None:
+        """Allocate the draft's own block reservation (engine lifetime,
+        first wave): per kv leaf, one block set shaped exactly like the
+        leaf's ``owned``. Full coverage is required for safety, not just
+        capacity — the policy compaction pass may transiently scatter up
+        to the full pre-compact length before the forced pass trims it."""
+        if self._owned is not None:
+            return
+        store = self.engine.kv_store
+        owned: Dict[str, np.ndarray] = {}
+        total = 0
+        for key, leaf in self._kv_leaves(state):
+            shape = tuple(leaf.owned.shape)
+            n = int(np.prod(shape, dtype=int))
+            while True:
+                try:
+                    ids = store.alloc_blocks(n)
+                    break
+                except pagedlib.PoolExhausted:
+                    if not self.engine.prefix_cache.evict_lru():
+                        raise
+            owned[key] = np.asarray(ids, np.int32).reshape(shape)
+            total += n
+        self._owned = owned
+        self._owned_blocks = total
+
+    def invalidate(self) -> None:
+        """Drop the persistent draft view. Called whenever the live lanes
+        advance or change outside a wave — a fallback stepwise decode, an
+        admission/resume prefill into a lane — and on capacity re-forks.
+        The block reservation stays; only the (cheap) metadata dies, and
+        the next wave re-forks."""
+        self._draft = None
+        self._draft_len_ub = 0
+
+    def release(self) -> None:
+        """Drop the draft reservation (``Engine.close()``)."""
+        self.invalidate()
+        if self._owned is None:
+            return
+        ids = np.concatenate([a.reshape(-1).astype(np.int64)
+                              for a in self._owned.values()])
+        self.engine.kv_store.release_blocks(ids)
+        self._owned = None
+        self._owned_blocks = 0
+
+    @property
+    def owned_blocks(self) -> int:
+        return self._owned_blocks
+
+    # ------------------------------------------------------------------ #
+    # The wave
+    # ------------------------------------------------------------------ #
+    def wave(self) -> Optional[List[int]]:
+        """Run one draft/verify wave over the running lanes.
+
+        Returns the slots whose requests finished (the caller retires
+        them), or ``None`` when this tick must fall back to a normal
+        stepwise decode: the config is ineligible, a running request
+        samples stochastically (acceptance below is greedy), or some
+        active lane lacks ``k + 1`` free slots — in which case the
+        stepwise path lets compaction fire exactly as non-speculative
+        decode would, keeping the streams token-for-token equal. Every
+        fallback invalidates the persistent draft (the live stream
+        advances without it).
+        """
+        eng = self.engine
+        if not self.enabled:
+            return None
+        running = eng.scheduler.running
+        slots = sorted(running)
+        k_chunk = self.k + 1
+        if any(r.sampling.temperature != 0.0 for r in running.values()):
+            self.invalidate()
+            self.fallback_steps += 1
+            return None
+        state = eng._slot_states
+        # chunk-verify gate over ACTIVE lanes only: retired lanes keep
+        # stale (possibly full) tables until their next reset and are
+        # never read, so they must not pin the headroom at zero.
+        for _, leaf in self._kv_leaves(state):
+            ln = np.asarray(leaf.length)[..., slots]
+            if ln.size and int(ln.max()) + k_chunk > leaf.n_slots:
+                self.invalidate()
+                self.fallback_steps += 1
+                return None
+        self.ensure_reserved(state)
+        self.waves += 1
+
+        # --- fork (or reuse): compacted copy of the live tables -------- #
+        if self._draft is not None \
+                and self._draft_len_ub + k_chunk > self.draft_slots:
+            self.invalidate()                      # window full: re-fork
+        planes = state.kv_pool
+        live = state._replace(kv_pool=None)
+        if self._draft is None:
+            draft = self._fork(live, planes, dict(self._owned))
+            self.forks += 1
+            self._draft_len_ub = self.draft_budget
+        else:
+            draft = self._draft._replace(kv_pool=planes)
+        # the draft's buffers are donated through the steps below; clear
+        # the persistent handle so an exception mid-wave re-forks cleanly
+        self._draft = None
+
+        # --- draft: k proposals + one pre-ingest step ------------------ #
+        # the extra step appends d_k's KV (its output is discarded) so a
+        # fully-accepted wave leaves the draft holding the whole accepted
+        # stream minus the last emitted token — the next wave's first feed
+        toks = jnp.asarray(eng._slot_tokens, jnp.int32)[:, None]
+        drafts = []
+        for i in range(k_chunk):
+            dlogits, draft = eng._paged_step(eng.params, state=draft,
+                                             tokens=toks)
+            tok = sampling.greedy(dlogits)               # [b]
+            if i < self.k:
+                drafts.append(tok)
+            toks = tok[:, None]
+        drafts_np = np.stack([np.asarray(t) for t in drafts], axis=1)
+        live = live._replace(kv_pool=draft.kv_pool)
+        draft = draft._replace(kv_pool=None)
+
+        # --- verify: k+1 positions in ONE batched chunk dispatch ------- #
+        feed = np.concatenate(
+            [np.asarray(eng._slot_tokens, np.int64)[:, None],
+             drafts_np.astype(np.int64)], axis=1)             # [b, k+1]
+        vlogits, live = eng._paged_chunk(eng.params, state=live,
+                                         tokens=jnp.asarray(feed, jnp.int32))
+        targets = np.asarray(sampling.greedy(vlogits))        # [b, k+1]
+
+        # --- accept + commit ------------------------------------------- #
+        emit_raw = sampling.greedy_verify(drafts_np, targets)  # [b], 1..k+1
+        emit = np.zeros_like(emit_raw)
+        for slot in slots:
+            req = running[slot]
+            room = req.max_new_tokens - len(req.output_tokens)
+            emit[slot] = min(int(emit_raw[slot]), room)
+            req.spec_waves += 1
+            req.spec_proposed += self.k
+            req.spec_accepted += int(emit_raw[slot]) - 1
+        self.proposed += self.k * len(slots)
+        if slots:
+            self.accepted += int((emit_raw[slots] - 1).sum())
+        # both caches appended k+1 tokens; rolling the SAME rejected
+        # suffix off each leaves both holding the emitted stream minus
+        # its last token. Inactive lanes emit 0 => full rollback; their
+        # clocks and tables return to the (stale, never-read) pre-wave
+        # values on both sides.
+        drop = jnp.asarray(k_chunk - emit, jnp.int32)
+        eng._slot_states = self._rollback(live, drop)
+        self._draft = self._rollback(draft, drop)
+        self._draft_len_ub += int(emit.max()) if slots else 0
+
+        finished: List[int] = []
+        for slot in slots:
+            req = running[slot]
+            for t in targets[slot, :emit[slot]].tolist():
+                eng._record(req, int(t))
+            if req.done:
+                finished.append(slot)
+        return finished

@@ -35,11 +35,20 @@ agree:
     per-policy x {compaction on, off} matrix — paged serving equals dense
     token-for-token while provably decoding through block tables
     (``PagedKVCache``/``PagedRingCache``/per-lane ``MambaState`` leaves,
-    never a dense ``KVCache``/``RingKVCache`` slot state).
+    never a dense ``KVCache``/``RingKVCache`` slot state),
+(f) self-speculative decoding: with ``Engine(spec_config=...)`` the
+    emitted stream is token-for-token identical to non-speculative greedy
+    across {dense, paged} x {global, ring, hybrid} x {compaction on, off}.
+    Eligible configs (paged + all-global-attn + score-free policy) must
+    actually run draft/verify waves; ineligible ones must transparently
+    fall back (zero waves) and still match. The draft's block reservation
+    is conserved (refcount accounting balances around it) and the engine
+    closes leak-free under the sanitizer with the draft loop enabled.
 """
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -50,6 +59,7 @@ from repro.core.policy import policy_names
 from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.engine import Engine
+from repro.serving.speculative import SpecConfig
 
 # snapshot at collection: the harness must cover every registered policy
 POLICIES = policy_names()
@@ -521,3 +531,216 @@ def test_sanitized_arch_serving_drains_pool(kind, _sanitized, arch_models):
         eng.submit(p, 5, cache_prefix=(i < 2))
     eng.run()
     _close_clean(eng)
+
+
+# --------------------------------------------------------------------------- #
+# (f) self-speculative decoding through a ladder-compacted draft cache
+# --------------------------------------------------------------------------- #
+SPEC_KINDS = ("global", "ring", "hybrid")
+
+
+@pytest.mark.parametrize(
+    "compaction",
+    [False, pytest.param(True, marks=pytest.mark.slow)],
+    ids=["no-compaction", "compaction"])
+@pytest.mark.parametrize("kv_backend", BACKENDS)
+@pytest.mark.parametrize("kind", SPEC_KINDS)
+def test_spec_matches_nonspec_greedy(kind, kv_backend, compaction,
+                                     small_model, arch_models):
+    """(f) spec on == spec off token-for-token on mixed-length greedy
+    traffic. All-global paged configs must really run waves (when no
+    compaction pressure keeps the headroom gate shut); dense backends and
+    ring/hybrid stacks are ineligible and must fall back with zero waves
+    while still matching exactly."""
+    cfg, params = small_model if kind == "global" else arch_models(kind)
+    budget = (24 if compaction else 48) if kind == "global" else \
+        (12 if compaction else 24)
+    rng = np.random.default_rng(41)
+    base = budget + 6 if compaction else budget // 4
+    prompts = [rng.integers(0, cfg.vocab_size, (base + 3 * i,))
+               for i in range(3)]
+
+    def serve(spec):
+        eng = Engine(cfg, params, budget=budget, max_batch=2,
+                     kv_backend=kv_backend,
+                     spec_config=SpecConfig(k=3) if spec else None)
+        reqs = [eng.submit(p, 8) for p in prompts]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    _, base_toks = serve(spec=False)
+    eng, spec_toks = serve(spec=True)
+    for b, s in zip(base_toks, spec_toks):
+        np.testing.assert_array_equal(s, b)
+    eligible = kv_backend == "paged" and kind == "global"
+    assert (eng._spec is not None and eng._spec.enabled) == eligible
+    if eligible and not compaction:
+        assert eng.spec_stats["waves"] > 0          # waves really ran
+    if not eligible:
+        assert eng.spec_stats["waves"] == 0         # transparent fallback
+
+
+def test_spec_draft_refcount_conservation(small_model):
+    """(f) the draft view's block reservation is conserved: pool
+    invariants hold after every request retires, the byte accounting
+    splits exactly into lane reservations + the draft reservation, the
+    per-request acceptance telemetry is populated and consistent, and
+    ``close()`` returns the pool to lane-reservations-only."""
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=2, kv_backend="paged",
+                 spec_config=SpecConfig(k=4))
+    rng = np.random.default_rng(42)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, (10 + 2 * i,)), 8,
+                       cache_prefix=(i < 2)) for i in range(3)]
+    eng.run()
+    assert eng.spec_stats["waves"] > 0
+    stats = eng.spec_stats
+    assert stats["proposed"] >= stats["accepted"] >= 0
+    assert sum(r.spec_proposed for r in reqs) == stats["proposed"]
+    assert sum(r.spec_accepted for r in reqs) == stats["accepted"]
+    for r in reqs:
+        assert r.spec_waves > 0
+        assert 0.0 <= r.spec_acceptance_rate <= 1.0
+    pagedlib.check_invariants(eng.kv_store.pool)
+    eng.prefix_cache.clear()
+    pagedlib.check_invariants(eng.kv_store.pool)
+    assert eng.draft_owned_bytes > 0
+    assert eng.kv_bytes_in_use == eng.lane_owned_bytes \
+        + eng.draft_owned_bytes
+    eng.close()                     # releases the draft reservation
+    ref = np.asarray(eng.kv_store.pool.ref)
+    lanes = eng.lane_owned_bytes // eng.kv_store.pool.block_bytes
+    assert int((ref > 0).sum()) == lanes
+
+
+def test_spec_rng_first_token_regression(small_model):
+    """Satellite: stochastic ``generate`` must split the PRNG key before
+    the FIRST sample — a 1-token run and a longer run agree on token 0
+    (the old unsplit-key draw correlated token 0 with the rest of the
+    chain and diverged from the k>1 run's first token)."""
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48)
+    prompts = np.random.default_rng(43).integers(0, cfg.vocab_size, (4, 12))
+    one = eng.generate(prompts, 1, temperature=0.9, top_k=16, seed=5)
+    many = eng.generate(prompts, 6, temperature=0.9, top_k=16, seed=5)
+    np.testing.assert_array_equal(one[:, 0], many[:, 0])
+    # the discriminating check: every draw (including the first) must come
+    # from a fresh subkey of the chain, never from the root key itself
+    from repro.serving import sampling
+    logits, state = eng.prefill(jnp.asarray(prompts))
+    key = jax.random.PRNGKey(5)
+    expect = []
+    for _ in range(6):
+        key, sub = jax.random.split(key)
+        tok = sampling.sample(sub, logits, 0.9, 16)[:, None]
+        expect.append(np.asarray(tok[:, 0]))
+        logits, state = eng._decode(eng.params, state=state, tokens=tok)
+    np.testing.assert_array_equal(many, np.stack(expect, axis=1))
+
+
+def test_prewarm_engine_matches_cold(small_model):
+    """Satellite: ``Engine(prewarm=True)`` pre-compiles the batched
+    decode/chunk/fork dispatches at construction without perturbing the
+    served stream (lane resets erase the warmup garbage)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(44)
+    prompts = [rng.integers(0, cfg.vocab_size, (10 + i,)) for i in range(3)]
+
+    def serve(prewarm):
+        eng = Engine(cfg, params, budget=48, max_batch=2,
+                     kv_backend="paged", spec_config=SpecConfig(k=3),
+                     prewarm=prewarm)
+        reqs = [eng.submit(p, 6) for p in prompts]
+        eng.run()
+        return [r.tokens for r in reqs]
+
+    for c, w in zip(serve(False), serve(True)):
+        np.testing.assert_array_equal(w, c)
+
+
+@pytest.mark.slow
+def test_sanitized_spec_serving_drains_pool(_sanitized, small_model):
+    """(f) the draft loop under the sanitizer: every wave's retain/release
+    pair balances (the per-op audits would raise on a use-after-free or a
+    writable shared block), waves really run, and close() releases the
+    draft reservation down to lane-reservations-only."""
+    cfg, params = small_model
+    eng = Engine(cfg, params, budget=48, max_batch=2, kv_backend="paged",
+                 spec_config=SpecConfig(k=3), prewarm=True)
+    rng = np.random.default_rng(45)
+    shared = rng.integers(0, cfg.vocab_size, (10,))
+    for i in range(3):
+        eng.submit(np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, (3 + i,))]), 6,
+            cache_prefix=(i < 2))
+    eng.run()
+    assert eng.spec_stats["waves"] > 0
+    _close_clean(eng)
+
+
+def _spec_churn_ops(ops, small_model):
+    """Drive spec + non-spec engines through the same submit/step/drain
+    interleaving (tight budget so live compaction fires between waves and
+    the headroom gate flips between wave and stepwise fallback) and
+    assert token equality plus pool invariants after every op."""
+    cfg, params = small_model
+    c = with_policy(cfg, "lacache", 24)
+    rng = np.random.default_rng(46)
+    plan = [rng.integers(0, cfg.vocab_size, (int(rng.integers(8, 30)),))
+            for _ in range(6)]
+
+    def serve(spec):
+        eng = Engine(c, params, budget=24, max_batch=2, kv_backend="paged",
+                     spec_config=SpecConfig(k=2) if spec else None)
+        reqs, nxt = [], 0
+        for op in ops:
+            if op == "submit" and nxt < len(plan):
+                reqs.append(eng.submit(plan[nxt], 5))
+                nxt += 1
+            elif op == "step":
+                eng.step()
+            elif op == "drain":
+                eng.run()
+            pagedlib.check_invariants(eng.kv_store.pool)
+        while nxt < len(plan):                     # serve the full plan
+            reqs.append(eng.submit(plan[nxt], 5))
+            nxt += 1
+        eng.run()
+        pagedlib.check_invariants(eng.kv_store.pool)
+        return eng, [r.tokens for r in reqs]
+
+    _, base_toks = serve(spec=False)
+    eng, spec_toks = serve(spec=True)
+    for b, s in zip(base_toks, spec_toks):
+        np.testing.assert_array_equal(s, b)
+    eng.close()
+    ref = np.asarray(eng.kv_store.pool.ref)
+    lanes = eng.lane_owned_bytes // eng.kv_store.pool.block_bytes
+    assert int((ref > 0).sum()) == lanes
+
+
+def test_spec_churn_deterministic(small_model):
+    """(f) a fixed branch-covering interleaving (runs without hypothesis):
+    waves fire against lanes that compact mid-stream, admissions splice
+    lanes while the draft reservation is live, and drains retire lanes
+    between waves."""
+    _spec_churn_ops(["submit", "step", "step", "submit", "step", "drain",
+                     "submit", "submit", "step", "step", "step", "drain"],
+                    small_model)
+
+
+@pytest.mark.slow
+def test_spec_churn_property(small_model):
+    """(f) hypothesis property: any submit/step/drain interleaving keeps
+    spec == non-spec token-for-token while conserving pool refcounts
+    around the draft fork/discard churn."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(st.sampled_from(["submit", "step", "drain"]),
+                    min_size=2, max_size=10))
+    def run(ops):
+        _spec_churn_ops(ops, small_model)
+
+    run()

@@ -104,3 +104,57 @@ def test_decode_state_continuity_chunked_vs_onepass():
                              impl="pallas", block_q=8, block_k=8)
     np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
                                np.asarray(full), atol=2e-5, rtol=2e-5)
+
+
+def _verify_layout(rng, b, n_slots, bs, kvh, d, totals):
+    """Random pool + block tables mapping each lane's first ``totals[i]``
+    slots (spare unmapped blocks left in the pool, -1 rows past the end)."""
+    n_blocks = b * (n_slots // bs) + 4
+    kp = jnp.asarray(rng.normal(size=(n_blocks, bs, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_blocks, bs, kvh, d)), jnp.float32)
+    tables = -np.ones((b, n_slots // bs), np.int32)
+    perm, idx = rng.permutation(n_blocks), 0
+    for i in range(b):
+        nb = -(-int(totals[i]) // bs)
+        tables[i, :nb] = perm[idx:idx + nb]
+        idx += nb
+    return kp, vp, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("b,h,kv,d,T", [
+    (2, 4, 2, 16, 4), (1, 4, 4, 32, 1), (3, 4, 1, 16, 3),
+])
+def test_paged_verify_attention_matches_stepwise(b, h, kv, d, T):
+    """The multi-token verify dispatch == T sequential single-token paged
+    decode dispatches: position j of the chunk output must equal a
+    single-query call whose occupied length stops at that position (the
+    causal+offset masking contract behind spec-decode verification)."""
+    rng = np.random.default_rng(8)
+    bs, n_slots = 4, 32
+    base = rng.integers(1, n_slots - T + 1, size=b)
+    totals = base + T                     # chunk K/V already appended
+    kp, vp, tables = _verify_layout(rng, b, n_slots, bs, kv, d, totals)
+    q = rnd(jax.random.PRNGKey(11), (b, T, h, d), jnp.float32)
+    o_chunk = ops.paged_verify_attention(
+        q, kp, vp, tables, jnp.asarray(totals, jnp.int32),
+        jnp.asarray(base, jnp.int32), n_slots=n_slots)
+    assert o_chunk.shape == (b, T, h, d)
+    for j in range(T):
+        o_j = ops.paged_decode_attention(
+            q[:, j], kp, vp, tables, jnp.asarray(base + j + 1, jnp.int32),
+            n_slots=n_slots)
+        np.testing.assert_allclose(np.asarray(o_chunk[:, j]),
+                                   np.asarray(o_j), atol=2e-5, rtol=2e-5)
+    # return_probs: same output plus row-stochastic probabilities over the
+    # logical view, zero beyond each query's causal frontier
+    o_p, probs = ops.paged_verify_attention(
+        q, kp, vp, tables, jnp.asarray(totals, jnp.int32),
+        jnp.asarray(base, jnp.int32), n_slots=n_slots, return_probs=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_chunk),
+                               atol=2e-5, rtol=2e-5)
+    assert probs.shape == (b, h, T, n_slots)
+    p = np.asarray(probs)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+    for i in range(b):
+        for j in range(T):
+            assert np.all(p[i, :, j, int(base[i]) + j + 1:] == 0.0)
