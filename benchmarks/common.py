@@ -1,5 +1,6 @@
 """Shared benchmark infrastructure: the evaluation model (trained once and
-checkpointed), timing and CSV helpers.
+checkpointed), timing and CSV helpers, and the ``write_bench`` envelope
+writer every committed ``results/BENCH_*.json`` goes through.
 
 All paper-table benchmarks run on ``bench_model()`` — a llama-family miniature
 (paper models are Llama2/3; absolute PPLs differ by construction, the claims
@@ -7,9 +8,11 @@ validated are orderings/scalings — DESIGN.md §8)."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import subprocess
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +29,46 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 VOCAB = 512
 SEQ = 256          # training context length; PPL explosion expected beyond
 BENCH_LAYERS = 8
+
+# Bump when the envelope layout (not a benchmark's payload) changes.
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> Optional[str]:
+    """Short SHA of the repo HEAD, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def write_bench(name: str, payload: Dict, config: Optional[Dict] = None,
+                ) -> str:
+    """Write ``results/BENCH_<name>.json`` in the shared envelope.
+
+    Every committed benchmark artifact carries the same provenance header
+    — schema version, the git SHA it was produced at, and the benchmark's
+    configuration — with the benchmark-specific numbers under ``data``.
+    Cross-PR diffs then always answer "what ran, at which commit, with
+    which knobs" without per-benchmark archaeology. Returns the path.
+    """
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    env = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": name,
+        "git_sha": git_sha(),
+        "config": config or {},
+        "data": payload,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(env, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def bench_cfg(**kw) -> ModelConfig:

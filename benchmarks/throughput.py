@@ -8,8 +8,6 @@ shared eval stream.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
@@ -200,10 +198,6 @@ def hybrid_paged_vs_dense(budget=64, n_requests=6, prefix_len=96,
     assert dense_toks == paged_toks, "backends must agree token-for-token"
     out = {
         "scenario": "hybrid_paged_vs_dense",
-        "arch": {"attn_every": cfg.attn_every,
-                 "local_global_pattern": cfg.local_global_pattern,
-                 "sliding_window": cfg.sliding_window,
-                 "n_layers": cfg.n_layers},
         "paged_in_model": paged_eng._paged_in_model,
         "tok_per_s": {"dense": dense_tps, "paged": paged_tps},
         "tok_per_s_incl_compile": {"dense": dense_cold, "paged": paged_cold},
@@ -217,9 +211,14 @@ def hybrid_paged_vs_dense(budget=64, n_requests=6, prefix_len=96,
         "kv_bytes_in_use": paged_eng.kv_bytes_in_use,
         "lane_owned_bytes": paged_eng.lane_owned_bytes,
     }
-    with open(os.path.join(common.RESULTS, "BENCH_hybrid_paged.json"),
-              "w") as f:
-        json.dump(out, f, indent=1)
+    common.write_bench("hybrid_paged", out, config={
+        "arch": {"attn_every": cfg.attn_every,
+                 "local_global_pattern": cfg.local_global_pattern,
+                 "sliding_window": cfg.sliding_window,
+                 "n_layers": cfg.n_layers},
+        "budget": budget, "n_requests": n_requests,
+        "prefix_len": prefix_len, "tail_len": tail_len,
+        "max_new": max_new})
     return out
 
 
@@ -278,10 +277,6 @@ def spec_vs_greedy(cfg, params, budget=384, headroom=96, n_requests=4,
     stats = spec_eng.spec_stats
     out = {
         "scenario": "spec_vs_greedy",
-        "k": k, "draft_budget": spec_eng._spec.draft_budget,
-        "budget": budget, "n_slots": budget + headroom,
-        "prefix_len": prefix_len, "max_new": max_new,
-        "n_requests": n_requests,
         "tok_per_s": {"greedy": base_tps, "spec": spec_tps},
         "spec_over_greedy_tok_per_s": spec_tps / max(base_tps, 1e-9),
         "acceptance_rate": stats["acceptance_rate"],
@@ -291,8 +286,11 @@ def spec_vs_greedy(cfg, params, budget=384, headroom=96, n_requests=4,
         "proposed": stats["proposed"], "accepted": stats["accepted"],
         "draft_owned_bytes": spec_eng.draft_owned_bytes,
     }
-    with open(os.path.join(common.RESULTS, "BENCH_spec.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    common.write_bench("spec", out, config={
+        "k": k, "draft_budget": spec_eng._spec.draft_budget,
+        "budget": budget, "n_slots": budget + headroom,
+        "prefix_len": prefix_len, "tail_len": tail_len,
+        "max_new": max_new, "n_requests": n_requests})
     return out
 
 
@@ -352,38 +350,40 @@ def main(quick: bool = False):
           f"{pd['tok_per_s_paged_first_wave']:.1f} tok/s first wave)")
     # machine-readable perf trajectory: tok/s + peak KV bytes per backend,
     # so paged regressions are tracked across PRs instead of rediscovered
-    with open(os.path.join(common.RESULTS, "BENCH_paged.json"), "w") as f:
-        json.dump({
-            "scenario": "paged_vs_dense",
-            "paged_in_model": pd["paged_in_model"],
-            "tok_per_s": {"dense": pd["tok_per_s_dense"],
-                          "paged": pd["tok_per_s_paged"]},
-            "prewarm_s": {"dense": pd["prewarm_s_dense"],
-                          "paged": pd["prewarm_s_paged"]},
-            "tok_per_s_first_wave": {
-                "dense": pd["tok_per_s_dense_first_wave"],
-                "paged": pd["tok_per_s_paged_first_wave"]},
-            "tok_per_s_incl_compile": {
-                "dense": pd["tok_per_s_dense_incl_compile"],
-                "paged": pd["tok_per_s_paged_incl_compile"]},
-            "peak_kv_bytes": {"dense": pd["peak_kv_bytes_dense"],
-                              "paged": pd["peak_kv_bytes_paged"]},
-            "paged_over_dense_tok_per_s":
-                pd["tok_per_s_paged"] / max(pd["tok_per_s_dense"], 1e-9),
-            "paged_over_dense_peak_kv":
-                pd["peak_kv_bytes_paged"]
-                / max(pd["peak_kv_bytes_dense"], 1),
-            "bytes_shared": pd["bytes_shared"],
-        }, f, indent=1)
+    common.write_bench("paged", {
+        "scenario": "paged_vs_dense",
+        "paged_in_model": pd["paged_in_model"],
+        "tok_per_s": {"dense": pd["tok_per_s_dense"],
+                      "paged": pd["tok_per_s_paged"]},
+        "prewarm_s": {"dense": pd["prewarm_s_dense"],
+                      "paged": pd["prewarm_s_paged"]},
+        "tok_per_s_first_wave": {
+            "dense": pd["tok_per_s_dense_first_wave"],
+            "paged": pd["tok_per_s_paged_first_wave"]},
+        "tok_per_s_incl_compile": {
+            "dense": pd["tok_per_s_dense_incl_compile"],
+            "paged": pd["tok_per_s_paged_incl_compile"]},
+        "peak_kv_bytes": {"dense": pd["peak_kv_bytes_dense"],
+                          "paged": pd["peak_kv_bytes_paged"]},
+        "paged_over_dense_tok_per_s":
+            pd["tok_per_s_paged"] / max(pd["tok_per_s_dense"], 1e-9),
+        "paged_over_dense_peak_kv":
+            pd["peak_kv_bytes_paged"]
+            / max(pd["peak_kv_bytes_dense"], 1),
+        "bytes_shared": pd["bytes_shared"],
+    }, config={"budget": budget, "n_requests": pd["n_requests"],
+               "prefix_len": pd["prefix_len"]})
     print(f"{'prefix-reuse':10s} {pr['prefill_tokens_cold']:5d} -> "
           f"{pr['prefill_tokens_warm']:5d} prefill tokens "
           f"(hit rate {pr['prefix_hit_rate']:.2f}, "
           f"{pr['tokens_reused']} reused; "
           f"{pr['s_cold']:.2f}s -> {pr['s_warm']:.2f}s incl. compile — "
           f"the token counters are the compile-free signal)")
-    dt = time.perf_counter() - t0
-    with open(os.path.join(common.RESULTS, "throughput.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    out["wall_s"] = time.perf_counter() - t0
+    # was results/throughput.json (untracked, schema-less) before the
+    # write_bench envelope unified benchmark artifacts
+    common.write_bench("throughput", out,
+                       config={"quick": quick, "budget": budget, "T": T})
     speedup = out["h2o"]["us_per_step"] / out["lacache"]["us_per_step"]
     common.emit("throughput", out["lacache"]["us_per_step"],
                 f"lacache_vs_h2o_speedup={speedup:.2f};"

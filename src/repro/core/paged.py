@@ -1028,9 +1028,45 @@ class PagedStateStore:
         #: registers this — the store cannot see the cache)
         self.pressure_context = None
         self._sanitizer = None
+        # published metric handles (no-ops until bind_metrics)
+        from repro.obs.metrics import NULL_INSTRUMENT
+        self._m_alloc = NULL_INSTRUMENT
+        self._m_release = NULL_INSTRUMENT
+        self._m_exhausted = NULL_INSTRUMENT
         from repro.analysis import sanitizer as _sanlib
         if _sanlib.enabled():
             _sanlib.attach_store(self)
+
+    def bind_metrics(self, registry) -> None:
+        """Publish allocator activity into a metrics registry (the engine
+        calls this at construction): block alloc/release event counters and
+        :class:`PoolExhausted` pressure, plus snapshot-time callback gauges
+        for free blocks / bytes in use / utilization (sampled only at
+        export, so the allocator hot path never reads the device)."""
+        self._m_alloc = registry.counter(
+            "pool_blocks_allocated_total", "fresh blocks popped (refcount 1)")
+        self._m_release = registry.counter(
+            "pool_block_releases_total",
+            "block references dropped (frees when the refcount reaches 0)")
+        self._m_exhausted = registry.counter(
+            "pool_exhausted_total",
+            "allocations refused by an empty free list (callers evict "
+            "prefix entries and retry)")
+        if registry.enabled:
+            registry.gauge_fn("pool_blocks_free",
+                              lambda: int(self.pool.n_free),
+                              "blocks on the free stack")
+            registry.gauge_fn("pool_blocks_total",
+                              lambda: int(self.pool.ref.shape[0]),
+                              "physical blocks in the pool")
+            registry.gauge_fn("pool_bytes_in_use",
+                              lambda: self.bytes_in_use,
+                              "physical bytes of live blocks")
+            registry.gauge_fn(
+                "pool_utilization",
+                lambda: 1.0 - int(self.pool.n_free)
+                / max(1, int(self.pool.ref.shape[0])),
+                "fraction of pool blocks live")
 
     def _cache_blocks(self) -> Optional[int]:
         if self.pressure_context is None:
@@ -1084,8 +1120,10 @@ class PagedStateStore:
             return np.zeros((0,), np.int64)
         free = int(self.pool.n_free)
         if n > free:
+            self._m_exhausted.inc()
             raise exhausted(self.pool, n, what="lane block reservation: ",
                             cache_blocks=self._cache_blocks())
+        self._m_alloc.inc(n)
         ids = np.asarray(self.pool.free)[free - n:free][::-1].astype(np.int64)
         self.pool = self.pool._replace(
             ref=self.pool.ref.at[jnp.asarray(ids)].set(1),
@@ -1104,6 +1142,7 @@ class PagedStateStore:
         free stack."""
         ids = np.asarray(ids, np.int64)
         if ids.size:
+            self._m_release.inc(ids.size)
             self.pool = _decref(self.pool, jnp.asarray(ids, jnp.int32))
 
     def put(self, tree, parent: Optional[PagedSnapshot] = None
@@ -1143,6 +1182,7 @@ class PagedStateStore:
                               shared))
             plan.append((i, entry, stacked))
         if needed > self.free_blocks:
+            self._m_exhausted.inc()
             raise exhausted(self.pool, needed, what="state snapshot: ",
                             cache_blocks=self._cache_blocks())
 

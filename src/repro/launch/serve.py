@@ -13,6 +13,14 @@ request extend one long common prompt prefix through the shared-prefix
 cache; ``--bucket-prefill`` pads prompts to power-of-two buckets so mixed
 lengths share prefill executables; ``--stream`` prints tokens as they are
 sampled (per-request on_token callback).
+
+Observability (:mod:`repro.obs`): ``--trace-out trace.json`` records the
+request lifecycle (submit -> admit -> prefill -> decode ticks -> retire,
+plus preempt/resume and spec waves) as Chrome/Perfetto ``trace_event``
+JSON — load it at https://ui.perfetto.dev or ``chrome://tracing``.
+``--metrics-out metrics.prom`` exports the engine's metric registry in
+Prometheus text format (``.json`` extension switches to the JSON
+snapshot). Either flag arms real (non-null) instrumentation.
 """
 from __future__ import annotations
 
@@ -71,6 +79,13 @@ def main():
                     help="paged backend: slots per physical block")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "request lifecycle (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="export the metrics registry: Prometheus text "
+                         "exposition, or a JSON snapshot when PATH ends "
+                         "in .json")
     args = ap.parse_args()
     if not args.request_mode and (args.share_prefix or args.bucket_prefill
                                   or args.stream):
@@ -87,10 +102,16 @@ def main():
         params = ckpt.load(args.ckpt, params)
 
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+    metrics = MetricsRegistry() if (args.metrics_out
+                                    or args.trace_out) else None
+    tracer = Tracer() if args.trace_out else None
     eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch,
                  admission=args.admission,
                  bucket_prefill=args.bucket_prefill,
-                 kv_backend=args.kv_backend, page_size=args.page_size)
+                 kv_backend=args.kv_backend, page_size=args.page_size,
+                 metrics=metrics, tracer=tracer)
     print(f"policy={args.policy} admission={args.admission} "
           f"kv-backend={args.kv_backend} "
           f"budget={args.budget} prompt={args.prompt_len} new={args.max_new}")
@@ -112,9 +133,12 @@ def main():
                 prompt = corpus.stream(max(8, args.prompt_len - 16 * i),
                                        seed=i)
             # staggered priorities/deadlines give non-FIFO admission
-            # policies something to reorder
+            # policies something to reorder; deadlines are instants on the
+            # engine clock so the SLO metrics read sensibly
             eng.submit(prompt, args.max_new, SamplingParams(seed=i),
-                       priority=i % 3, deadline=float(args.batch - i),
+                       priority=i % 3,
+                       deadline=time.perf_counter()
+                       + 30.0 + float(args.batch - i),
                        cache_prefix=args.share_prefix, on_token=on_token)
         t0 = time.perf_counter()
         done = eng.run()
@@ -148,6 +172,15 @@ def main():
     state = eng.new_state(args.batch)
     print(f"cache bytes/layer-state: {eng.cache_bytes(state)/1e6:.2f} MB "
           f"(constant in sequence length — the paper's O(1) claim)")
+    if tracer is not None:
+        n = tracer.export(args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.to_json() if args.metrics_out.endswith(".json")
+                    else metrics.to_prometheus())
+        print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""Engine observability: metrics registry + request-lifecycle tracing.
+
+Everything in this package is strictly **host-side** (pure Python over
+plain floats/dicts — no jax imports anywhere): instrumentation must never
+leak into a traced region, and with the default no-op registry/tracer the
+serving hot path pays nothing beyond a handful of no-op method calls.
+
+* :mod:`repro.obs.metrics` — counters, gauges and fixed-bucket histograms
+  with labels; snapshot-to-dict, Prometheus text exposition and JSON
+  export. ``NULL_REGISTRY`` is the engine default.
+* :mod:`repro.obs.trace` — request-lifecycle spans (submit -> admit ->
+  prefill -> decode ticks -> retire, plus preempt/resume and speculative
+  waves) exported as Chrome/Perfetto ``trace_event`` JSON.
+"""
+from repro.obs.metrics import (MetricsRegistry, NullRegistry,  # noqa: F401
+                               NULL_REGISTRY)
+from repro.obs.trace import Tracer, NullTracer, NULL_TRACER    # noqa: F401

@@ -1,0 +1,405 @@
+"""Low-overhead serving metrics: counters, gauges, fixed-bucket histograms.
+
+The registry is the single publication point for the serving stack's
+telemetry: the engine, scheduler, prefix cache, paged pool and speculative
+decoder all resolve their instruments once (at construction) and then
+increment plain Python floats on the hot path — no locks, no string
+formatting, no allocation per event. Everything is host-side; this module
+deliberately imports no jax/numpy so nothing here can ever end up under a
+trace.
+
+Three instrument kinds, mirroring the Prometheus data model:
+
+* :class:`Counter` — monotone ``inc(v)``,
+* :class:`Gauge` — ``set/inc/dec``, plus registry-level *callback* gauges
+  (:meth:`MetricsRegistry.gauge_fn`) sampled lazily at snapshot time so
+  expensive values (pool utilization scans) cost nothing per step,
+* :class:`Histogram` — fixed upper-bound buckets (+Inf implicit),
+  cumulative counts, ``sum``/``count``, and a bucket-interpolated
+  :meth:`Histogram.percentile` estimate.
+
+Instruments are grouped into *families* keyed by metric name; a family
+with ``labels=(...)`` vends children via ``family.labels(v1, ...)``.
+Label-less families proxy the instrument API directly, so
+``registry.counter("x").inc()`` just works.
+
+Exports: :meth:`MetricsRegistry.snapshot` (plain dict),
+:meth:`MetricsRegistry.to_prometheus` (text exposition format) and
+:meth:`MetricsRegistry.to_json`.
+
+The default everywhere is :data:`NULL_REGISTRY` — a no-op registry whose
+instruments swallow every call, so metrics-off serving pays only the
+no-op method dispatch (and code can gate costlier sampling on
+``registry.enabled``).
+"""
+from __future__ import annotations
+
+import bisect
+import json
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+#: default latency buckets (seconds): 1ms .. 60s, roughly log-spaced
+DEFAULT_LATENCY_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                           0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+#: buckets for signed slack values (seconds before/after a deadline)
+DEFAULT_SLACK_BUCKETS = (-30.0, -5.0, -1.0, -0.1, 0.0, 0.1, 0.5, 1.0,
+                         5.0, 30.0)
+
+
+class Counter:
+    """Monotonically increasing value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counters only go up (inc by {v!r})")
+        self.value += v
+
+
+class Gauge:
+    """Point-in-time value (set/inc/dec)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+    def dec(self, v: float = 1.0) -> None:
+        self.value -= v
+
+
+class Histogram:
+    """Fixed-bucket histogram: cumulative bucket counts, sum and count.
+
+    ``buckets`` are inclusive upper bounds in increasing order; an +Inf
+    bucket is implicit. ``observe`` is O(log n_buckets) (bisect), no
+    allocation.
+    """
+
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS):
+        b = tuple(float(x) for x in buckets)
+        if not b or any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(
+                f"histogram buckets must be non-empty and strictly "
+                f"increasing, got {buckets!r}")
+        self.buckets = b
+        self.counts = [0] * (len(b) + 1)    # last = +Inf overflow
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.sum += v
+        self.count += 1
+
+    def percentile(self, q: float) -> float:
+        """Bucket-interpolated percentile estimate (``q`` in [0, 100]).
+
+        Exact percentiles need the raw samples (callers that report SLO
+        numbers keep those themselves); this is the cheap registry-side
+        estimate: linear interpolation within the bucket containing the
+        target rank, with the overflow bucket clamped to its lower bound.
+        """
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {q!r}")
+        if self.count == 0:
+            return 0.0
+        rank = q / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if seen + c >= rank and c > 0:
+                lo = self.buckets[i - 1] if i > 0 else 0.0
+                if i >= len(self.buckets):      # overflow bucket
+                    return self.buckets[-1]
+                hi = self.buckets[i]
+                frac = (rank - seen) / c
+                return lo + (hi - lo) * min(1.0, max(0.0, frac))
+            seen += c
+        return self.buckets[-1]
+
+
+class _NullInstrument:
+    """Shared no-op child: absorbs the whole instrument API."""
+
+    __slots__ = ()
+
+    def inc(self, v: float = 1.0) -> None:
+        pass
+
+    def dec(self, v: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def labels(self, *values: str) -> "_NullInstrument":
+        return self
+
+    def percentile(self, q: float) -> float:
+        return 0.0
+
+
+NULL_INSTRUMENT = _NullInstrument()
+
+
+class Family:
+    """One named metric: a set of children keyed by label values.
+
+    Label-less families proxy the child API directly (the single child at
+    the empty label tuple is created eagerly), so call sites never need to
+    distinguish the two shapes.
+    """
+
+    __slots__ = ("name", "type", "help", "labelnames", "children",
+                 "_solo", "_make")
+
+    def __init__(self, name: str, kind: str, help: str,
+                 labelnames: Tuple[str, ...], make: Callable):
+        self.name = name
+        self.type = kind
+        self.help = help
+        self.labelnames = labelnames
+        self._make = make
+        self.children: Dict[Tuple[str, ...], object] = {}
+        self._solo = self.labels() if not labelnames else None
+
+    def labels(self, *values: str):
+        if len(values) != len(self.labelnames):
+            raise ValueError(
+                f"metric {self.name!r} takes {len(self.labelnames)} label "
+                f"value(s) {self.labelnames}, got {values!r}")
+        key = tuple(str(v) for v in values)
+        child = self.children.get(key)
+        if child is None:
+            child = self.children[key] = self._make()
+        return child
+
+    # -- label-less proxying ------------------------------------------- #
+    def _only(self):
+        if self._solo is None:
+            raise ValueError(
+                f"metric {self.name!r} has labels {self.labelnames}; "
+                "resolve a child with .labels(...) first")
+        return self._solo
+
+    def inc(self, v: float = 1.0) -> None:
+        self._only().inc(v)
+
+    def dec(self, v: float = 1.0) -> None:
+        self._only().dec(v)
+
+    def set(self, v: float) -> None:
+        self._only().set(v)
+
+    def observe(self, v: float) -> None:
+        self._only().observe(v)
+
+    def percentile(self, q: float) -> float:
+        return self._only().percentile(q)
+
+    @property
+    def value(self) -> float:
+        return self._only().value       # type: ignore[union-attr]
+
+    @property
+    def count(self) -> int:
+        return self._only().count       # type: ignore[union-attr]
+
+    @property
+    def sum(self) -> float:
+        return self._only().sum         # type: ignore[union-attr]
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(v: float) -> str:
+    return repr(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+class MetricsRegistry:
+    """Publication point and exporter for a set of metric families.
+
+    ``counter/gauge/histogram`` are idempotent by name: the first call
+    defines the family (type, help, labels); later calls return it (and
+    raise on a conflicting redefinition), so independent components —
+    engine, prefix cache, pool, speculative decoder — can resolve the
+    same registry without coordination.
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._families: Dict[str, Family] = {}
+        self._gauge_fns: Dict[str, Tuple[str, Callable[[], float]]] = {}
+
+    # ------------------------------------------------------------------ #
+    # Instrument definition
+    # ------------------------------------------------------------------ #
+    def _family(self, name: str, kind: str, help: str,
+                labels: Sequence[str], make: Callable) -> Family:
+        fam = self._families.get(name)
+        if fam is not None:
+            if fam.type != kind or fam.labelnames != tuple(labels):
+                raise ValueError(
+                    f"metric {name!r} already registered as {fam.type} "
+                    f"with labels {fam.labelnames}; cannot redefine as "
+                    f"{kind} with labels {tuple(labels)}")
+            return fam
+        fam = Family(name, kind, help, tuple(labels), make)
+        self._families[name] = fam
+        return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Family:
+        return self._family(name, "counter", help, labels, Counter)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Family:
+        return self._family(name, "gauge", help, labels, Gauge)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS,
+                  labels: Sequence[str] = ()) -> Family:
+        b = tuple(buckets)
+        return self._family(name, "histogram", help, labels,
+                            lambda: Histogram(b))
+
+    def gauge_fn(self, name: str, fn: Callable[[], float],
+                 help: str = "") -> None:
+        """Register a callback gauge sampled at snapshot time only — for
+        values that are cheap to describe but costly to compute per step
+        (pool utilization, queue depth). Re-registering a name replaces
+        the callback (latest engine wins)."""
+        self._gauge_fns[name] = (help, fn)
+
+    # ------------------------------------------------------------------ #
+    # Reads / export
+    # ------------------------------------------------------------------ #
+    def value(self, name: str, *labels: str) -> float:
+        """Current value of a counter/gauge child (test/report helper)."""
+        child = self._families[name].labels(*labels)
+        return child.value          # type: ignore[union-attr]
+
+    def get(self, name: str, *labels: str):
+        """The raw instrument child (e.g. a Histogram for percentiles)."""
+        return self._families[name].labels(*labels)
+
+    def _sampled_gauges(self) -> List[Tuple[str, str, float]]:
+        out = []
+        for name, (help, fn) in sorted(self._gauge_fns.items()):
+            try:
+                out.append((name, help, float(fn())))
+            except Exception:       # a dead provider must not kill export
+                continue
+        return out
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Plain-dict view of every family (callback gauges sampled now)."""
+        out: Dict[str, dict] = {}
+        for name, fam in sorted(self._families.items()):
+            vals = []
+            for key, child in sorted(fam.children.items()):
+                lab = dict(zip(fam.labelnames, key))
+                if fam.type == "histogram":
+                    h: Histogram = child       # type: ignore[assignment]
+                    cum, acc = [], 0
+                    for le, c in zip(h.buckets + (float("inf"),), h.counts):
+                        acc += c
+                        cum.append([le, acc])
+                    vals.append({"labels": lab, "buckets": cum,
+                                 "sum": h.sum, "count": h.count})
+                else:
+                    vals.append({"labels": lab,
+                                 "value": child.value})  # type: ignore
+            out[name] = {"type": fam.type, "help": fam.help,
+                         "values": vals}
+        for name, help, v in self._sampled_gauges():
+            out[name] = {"type": "gauge", "help": help,
+                         "values": [{"labels": {}, "value": v}]}
+        return out
+
+    def to_json(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        lines: List[str] = []
+        for name, fam in sorted(self._families.items()):
+            if fam.help:
+                lines.append(f"# HELP {name} {fam.help}")
+            lines.append(f"# TYPE {name} {fam.type}")
+            for key, child in sorted(fam.children.items()):
+                base = ",".join(f'{ln}="{_escape(lv)}"'
+                                for ln, lv in zip(fam.labelnames, key))
+                if fam.type == "histogram":
+                    h: Histogram = child       # type: ignore[assignment]
+                    acc = 0
+                    for le, c in zip(h.buckets + (float("inf"),), h.counts):
+                        acc += c
+                        le_s = "+Inf" if le == float("inf") else _fmt(le)
+                        sep = "," if base else ""
+                        lines.append(f'{name}_bucket{{{base}{sep}'
+                                     f'le="{le_s}"}} {acc}')
+                    suffix = f"{{{base}}}" if base else ""
+                    lines.append(f"{name}_sum{suffix} {_fmt(h.sum)}")
+                    lines.append(f"{name}_count{suffix} {h.count}")
+                else:
+                    suffix = f"{{{base}}}" if base else ""
+                    lines.append(
+                        f"{name}{suffix} "
+                        f"{_fmt(child.value)}")    # type: ignore[union-attr]
+        for name, help, v in self._sampled_gauges():
+            if help:
+                lines.append(f"# HELP {name} {help}")
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {_fmt(v)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+class NullRegistry(MetricsRegistry):
+    """No-op registry: every instrument is the shared null child, exports
+    are empty. This is the engine default — metrics-off serving never
+    builds a real instrument and call sites can skip costlier sampling by
+    checking ``registry.enabled``."""
+
+    enabled = False
+
+    def counter(self, name, help="", labels=()):
+        return NULL_INSTRUMENT
+
+    def gauge(self, name, help="", labels=()):
+        return NULL_INSTRUMENT
+
+    def histogram(self, name, help="", buckets=DEFAULT_LATENCY_BUCKETS,
+                  labels=()):
+        return NULL_INSTRUMENT
+
+    def gauge_fn(self, name, fn, help=""):
+        pass
+
+    def value(self, name, *labels):
+        raise KeyError(f"null registry records nothing ({name!r})")
+
+    def get(self, name, *labels):
+        return NULL_INSTRUMENT
+
+
+NULL_REGISTRY = NullRegistry()

@@ -1,0 +1,216 @@
+"""Request-lifecycle tracing as Chrome/Perfetto ``trace_event`` JSON.
+
+The tracer records host-side spans over the serving engine's request
+lifecycle — submit -> admit -> prefill -> decode ticks -> retire, plus
+preempt/resume handoffs and speculative waves — and exports them in the
+Chrome tracing format (the JSON ``traceEvents`` array), which both
+``chrome://tracing`` and https://ui.perfetto.dev load directly.
+
+Layout convention used by the engine:
+
+* ``pid`` 0 is the whole engine process.
+* ``tid`` 0 is the *engine* row: ``step``/``prefill``/``spec_wave``
+  spans and scheduler instants live here.
+* ``tid`` ``request_id + 1`` is one row per request: its ``queued`` span
+  (submit -> admit), ``running`` span(s) (admit -> retire, split around
+  preemptions), per-tick instants and the terminal status.
+
+Spans that start and end in different engine calls use the *keyed* API —
+``begin(key, name, tid)`` … ``end(key, **args)`` — so the engine never
+holds timestamps itself; short same-frame sections can use the
+:meth:`Tracer.span` context manager. All events carry microsecond
+timestamps relative to the tracer's construction (or the injected
+``clock``, which the simulated-clock load harness uses so traces line up
+with its virtual time).
+
+Like the metrics registry, this module is strictly host-side and imports
+no jax; the engine default is :data:`NULL_TRACER`, whose methods are all
+no-ops, so tracing-off serving pays nothing.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class Tracer:
+    """Bounded in-memory recorder of Chrome ``trace_event`` dicts.
+
+    ``clock`` is any zero-arg callable returning seconds (monotonic or
+    simulated); timestamps are stored in microseconds relative to the
+    first reading. ``max_events`` bounds memory on long runs — once full,
+    new events are counted in :attr:`dropped` instead of stored (begin/
+    end bookkeeping still happens, so spans that *end* before the limit
+    is hit are never truncated mid-flight).
+    """
+
+    enabled = True
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 max_events: int = 200_000):
+        self._clock = clock if clock is not None else time.perf_counter
+        self._t0 = self._clock()
+        self._events: List[dict] = []
+        self._open: Dict[object, Tuple[float, str, int, dict]] = {}
+        self._names: Dict[int, str] = {}
+        self.max_events = int(max_events)
+        self.dropped = 0
+
+    # ------------------------------------------------------------------ #
+    def now(self) -> float:
+        """Seconds since tracer start (same clock the events use)."""
+        return self._clock() - self._t0
+
+    def _emit(self, ev: dict) -> None:
+        if len(self._events) >= self.max_events:
+            self.dropped += 1
+            return
+        self._events.append(ev)
+
+    def thread_name(self, tid: int, name: str) -> None:
+        """Label a row (Perfetto shows this instead of the raw tid)."""
+        if self._names.get(tid) == name:
+            return
+        self._names[tid] = name
+        self._emit({"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+                    "args": {"name": name}})
+
+    # -- keyed spans (start/end in different engine calls) ------------- #
+    def begin(self, key: object, name: str, tid: int = 0,
+              **args: object) -> None:
+        """Open a span under ``key``; a later :meth:`end` closes it.
+
+        Re-beginning a live key silently replaces it (the half-open span
+        is dropped) so engine restarts can't poison the table.
+        """
+        self._open[key] = (self.now(), name, tid, dict(args))
+
+    def end(self, key: object, **args: object) -> None:
+        """Close the span opened under ``key`` (no-op if absent)."""
+        opened = self._open.pop(key, None)
+        if opened is None:
+            return
+        t0, name, tid, a0 = opened
+        if args:
+            a0.update(args)
+        dur = max(0.0, self.now() - t0)
+        ev = {"ph": "X", "name": name, "pid": 0, "tid": tid,
+              "ts": t0 * 1e6, "dur": dur * 1e6}
+        if a0:
+            ev["args"] = a0
+        self._emit(ev)
+
+    def discard(self, key: object) -> None:
+        """Forget a half-open span without emitting it."""
+        self._open.pop(key, None)
+
+    # -- same-frame helpers -------------------------------------------- #
+    def span(self, name: str, tid: int = 0, **args: object):
+        """Context manager for a span contained in one engine call."""
+        return _Span(self, name, tid, args)
+
+    def instant(self, name: str, tid: int = 0, **args: object) -> None:
+        ev = {"ph": "i", "name": name, "pid": 0, "tid": tid,
+              "ts": self.now() * 1e6, "s": "t"}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    # -- export --------------------------------------------------------- #
+    def to_dict(self) -> dict:
+        """Chrome tracing JSON object (half-open spans flushed as-is)."""
+        tail = []
+        now = self.now()
+        for t0, name, tid, a0 in self._open.values():
+            ev = {"ph": "X", "name": name, "pid": 0, "tid": tid,
+                  "ts": t0 * 1e6, "dur": max(0.0, now - t0) * 1e6}
+            a = dict(a0, unfinished=True)
+            ev["args"] = a
+            tail.append(ev)
+        return {"traceEvents": self._events + tail,
+                "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> int:
+        """Write the trace JSON to ``path``; returns the event count."""
+        d = self.to_dict()
+        with open(path, "w") as f:
+            json.dump(d, f)
+        return len(d["traceEvents"])
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+
+class _Span:
+    __slots__ = ("_tr", "_name", "_tid", "_args", "_t0")
+
+    def __init__(self, tr: Tracer, name: str, tid: int, args: dict):
+        self._tr = tr
+        self._name = name
+        self._tid = tid
+        self._args = args
+
+    def __enter__(self) -> "_Span":
+        self._t0 = self._tr.now()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        dur = max(0.0, self._tr.now() - self._t0)
+        ev = {"ph": "X", "name": self._name, "pid": 0, "tid": self._tid,
+              "ts": self._t0 * 1e6, "dur": dur * 1e6}
+        if self._args:
+            ev["args"] = self._args
+        self._tr._emit(ev)
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer(Tracer):
+    """No-op tracer: records nothing, exports an empty trace."""
+
+    enabled = False
+
+    def __init__(self):                     # no clock reads at all
+        self._events = []
+        self._open = {}
+        self.max_events = 0
+        self.dropped = 0
+
+    def now(self) -> float:
+        return 0.0
+
+    def thread_name(self, tid, name):
+        pass
+
+    def begin(self, key, name, tid=0, **args):
+        pass
+
+    def end(self, key, **args):
+        pass
+
+    def discard(self, key):
+        pass
+
+    def span(self, name, tid=0, **args):
+        return _NULL_SPAN
+
+    def instant(self, name, tid=0, **args):
+        pass
+
+    def to_dict(self):
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+
+NULL_TRACER = NullTracer()

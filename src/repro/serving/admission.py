@@ -124,3 +124,11 @@ class DeadlineAdmission(AdmissionPolicy):
     def key(self, req, seq):
         d = req.deadline if req.deadline is not None else math.inf
         return (d, seq)
+
+
+def deadline_slack(req, now: float) -> float:
+    """Seconds of headroom before ``req``'s deadline at time ``now``
+    (``inf`` for requests without one; negative once missed). Shared by
+    the engine's SLO metrics and the traffic harness's goodput accounting
+    so "met the deadline" means the same thing everywhere."""
+    return math.inf if req.deadline is None else req.deadline - now

@@ -53,6 +53,7 @@ import dataclasses
 import functools
 import heapq
 import math
+import time
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import jax
@@ -64,6 +65,8 @@ from repro.configs.base import ModelConfig
 from repro.core import paged as pagedlib
 from repro.core.cache import MambaState
 from repro.models import model as M
+from repro.obs.metrics import DEFAULT_SLACK_BUCKETS, NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.serving import sampling
 from repro.serving.admission import AdmissionLike, get_admission
 from repro.serving.prefix import PrefixCache
@@ -166,6 +169,7 @@ class SamplingParams:
 
 
 PENDING, RUNNING, FINISHED = "pending", "running", "finished"
+FAILED = "failed"       # terminal: the request's on_token callback raised
 
 
 @dataclasses.dataclass(eq=False)   # identity equality: holds ndarrays
@@ -186,6 +190,16 @@ class Request:
     spec_waves: int = 0                 # draft/verify waves on this lane
     spec_proposed: int = 0              # draft tokens proposed for it
     spec_accepted: int = 0              # draft tokens the target accepted
+    error: Optional[BaseException] = None   # set when on_token raised: the
+    #                                     request retires FAILED instead of
+    #                                     unwinding mid-step()
+    n_preempts: int = 0                 # times swapped out of a slot
+    # lifecycle timestamps on the engine's clock (None until reached);
+    # latency histograms (queue wait / TTFT / TPOT) derive from these
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None     # first admission only
+    t_first: Optional[float] = None     # first token sampled
+    t_finish: Optional[float] = None    # retirement
     _key: Any = None                    # per-request PRNG chain (runtime)
     _resume: Any = None                 # (PagedSnapshot, last token) while
     #                                     preempted; None otherwise
@@ -204,7 +218,8 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return len(self.output_tokens) >= self.max_new_tokens
+        return (self.error is not None
+                or len(self.output_tokens) >= self.max_new_tokens)
 
     @property
     def spec_acceptance_rate(self) -> float:
@@ -297,6 +312,70 @@ class Scheduler:
 # --------------------------------------------------------------------------- #
 # Engine
 # --------------------------------------------------------------------------- #
+class _EngineInstruments:
+    """The engine's metric handles, resolved once at construction so the hot
+    path increments plain floats (or, under the default null registry, hits
+    shared no-op methods) without any per-event registry lookup. The metric
+    catalogue here is documented in docs/API.md ("Observability")."""
+
+    def __init__(self, m):
+        self.submitted = m.counter(
+            "engine_submitted_total", "requests submitted")
+        self.admitted = m.counter(
+            "engine_admissions_total",
+            "admissions into a batch slot (resumes included)")
+        self.resumed = m.counter(
+            "engine_resumes_total", "preempted requests readmitted")
+        self.preempted = m.counter(
+            "engine_preemptions_total",
+            "RUNNING requests swapped out under admission pressure")
+        self.retired = m.counter(
+            "engine_retired_total", "requests retired, by terminal status",
+            labels=("status",))
+        self.callback_errors = m.counter(
+            "engine_callback_errors_total",
+            "on_token callbacks that raised (request FAILED)")
+        self.tokens = m.counter(
+            "engine_tokens_total", "tokens emitted to requests")
+        self.steps = m.counter("engine_steps_total", "engine ticks")
+        self.decode_dispatches = m.counter(
+            "engine_decode_dispatches_total",
+            "batched decode dispatches (spec waves excluded)")
+        self.prefill_dispatches = m.counter(
+            "engine_prefill_dispatches_total",
+            "prefill / chunk-prefill dispatches")
+        self.prefill_tokens = m.counter(
+            "engine_prefill_tokens_total",
+            "prompt tokens by origin: computed vs prefix-cache reused",
+            labels=("kind",))
+        self.compactions = m.counter(
+            "engine_compaction_events_total",
+            "lane decode appends whose KV occupancy did not grow "
+            "(ladder compaction fired; or a saturated non-evicting buffer)")
+        self.queue_wait = m.histogram(
+            "engine_queue_wait_seconds", "submit -> first admission")
+        self.ttft = m.histogram(
+            "engine_ttft_seconds", "submit -> first token")
+        self.tpot = m.histogram(
+            "engine_tpot_seconds",
+            "mean inter-token interval per retired request")
+        self.deadline_slack = m.histogram(
+            "engine_deadline_slack_seconds",
+            "deadline - finish time at retirement (negative = missed)",
+            buckets=DEFAULT_SLACK_BUCKETS)
+        self.deadline = m.counter(
+            "engine_deadline_outcomes_total",
+            "retired requests that carried a deadline, met vs missed",
+            labels=("outcome",))
+        # hot-path label children, resolved once
+        self.prefill_computed = self.prefill_tokens.labels("computed")
+        self.prefill_reused = self.prefill_tokens.labels("reused")
+        self.retired_finished = self.retired.labels(FINISHED)
+        self.retired_failed = self.retired.labels(FAILED)
+        self.deadline_met = self.deadline.labels("met")
+        self.deadline_missed = self.deadline.labels("missed")
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, budget: Optional[int] = None,
                  max_batch: int = 8, *, admission: AdmissionLike = "fifo",
@@ -306,10 +385,23 @@ class Engine:
                  pool_blocks: Optional[int] = None,
                  preempt: Optional[bool] = None,
                  spec_config: Optional["SpecConfig"] = None,
-                 prewarm: bool = False):
+                 prewarm: bool = False,
+                 metrics=None, tracer=None,
+                 clock: Optional[Callable[[], float]] = None):
         if kv_backend not in ("dense", "paged"):
             raise ValueError(
                 f"kv_backend must be 'dense' or 'paged', got {kv_backend!r}")
+        # observability: both default to shared no-op sinks, so metrics-off
+        # serving pays only no-op method calls (and anything costlier — the
+        # compaction probe's device reads — is gated on metrics.enabled).
+        # ``clock`` (seconds; monotonic or simulated — the traffic harness
+        # injects virtual time) stamps request lifecycle timestamps.
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.clock = clock if clock is not None else time.perf_counter
+        self._inst = _EngineInstruments(self.metrics)
+        self._tick = 0
+        self.tracer.thread_name(0, "engine")
         self.cfg = cfg
         self.params = params
         self.budget = budget if budget is not None else cfg.lacache.budget
@@ -365,6 +457,7 @@ class Engine:
             self.kv_store = pagedlib.PagedStateStore(
                 pool_blocks, page_size, cfg.n_kv_heads, cfg.head_dim_,
                 jnp.dtype(cfg.dtype))
+            self.kv_store.bind_metrics(self.metrics)
             self._paged_in_model = M.paged_decode_eligible(cfg)
             self._lane_shared = [np.zeros((0,), np.int64)
                                  for _ in range(max_batch)]
@@ -396,6 +489,15 @@ class Engine:
         self.preemptions = 0
         self.prefix_cache = PrefixCache(max_bytes=prefix_cache_bytes,
                                         store=self.kv_store)
+        self.prefix_cache.bind_metrics(self.metrics)
+        if self.metrics.enabled:
+            # sampled at snapshot time only — zero per-step cost
+            self.metrics.gauge_fn(
+                "engine_queue_depth", lambda: len(self.scheduler.pending),
+                "requests pending admission")
+            self.metrics.gauge_fn(
+                "engine_running", lambda: len(self.scheduler.running),
+                "requests occupying batch slots")
         self._sanitizer = getattr(self.kv_store, "_sanitizer", None)
         if self.kv_store is not None:
             # actionable PoolExhausted: the store can't see the cache, so
@@ -688,8 +790,17 @@ class Engine:
                       sampling=sp, request_id=self._next_id,
                       priority=int(priority), deadline=deadline,
                       cache_prefix=cache_prefix, on_token=on_token,
+                      t_submit=self.clock(),
                       _key=jax.random.PRNGKey(sp.seed))
         self._next_id += 1
+        self._inst.submitted.inc()
+        tr = self.tracer
+        if tr.enabled:
+            tid = req.request_id + 1
+            tr.thread_name(tid, f"req {req.request_id}")
+            tr.begin(("queued", req.request_id), "queued", tid=tid,
+                     prompt_len=req.prompt_len,
+                     max_new_tokens=max_new_tokens)
         return self.scheduler.submit(req)
 
     @property
@@ -802,6 +913,8 @@ class Engine:
         self.prefill_dispatches += 1
         self.prefill_tokens += n_tokens
         self.prefill_shapes.add((kind, shape))
+        self._inst.prefill_dispatches.inc()
+        self._inst.prefill_computed.inc(n_tokens)
 
     def _cold_prefill(self, prompt: np.ndarray):
         """Full-prompt prefill; bucketed (padded to a power-of-two length,
@@ -866,6 +979,7 @@ class Engine:
         entry = self.prefix_cache.lookup(req.prompt)
         if entry is not None:
             self.prefix_tokens_reused += entry.length
+            self._inst.prefill_reused.inc(entry.length)
             if entry.length == req.prompt_len:
                 # zero prefill compute; paged entries gather a fresh
                 # working state, the stored blocks stay shared
@@ -1112,6 +1226,7 @@ class Engine:
         start, logits = 0, None
         if entry is not None:
             self.prefix_tokens_reused += entry.length
+            self._inst.prefill_reused.inc(entry.length)
             ids = entry.snap.block_ids()
             self.kv_store.retain_blocks(ids)
             self._lane_shared[slot] = np.concatenate(
@@ -1153,10 +1268,56 @@ class Engine:
         return int(tok[0])
 
     def _record(self, req: Request, tok: int) -> None:
+        if req.error is not None:
+            # already FAILED (a spec wave can record several tokens per
+            # lane per tick): drop everything after the failing token so
+            # the stream ends where the callback broke
+            return
         req.output_tokens.append(tok)
         self._slot_tokens[req.slot] = tok
+        if req.t_first is None:
+            req.t_first = self.clock()
+            self._inst.ttft.observe(req.t_first - req.t_submit)
+        self._inst.tokens.inc()
         if req.on_token is not None:
-            req.on_token(req, tok)
+            try:
+                req.on_token(req, tok)
+            except Exception as e:
+                # a raising user callback must not unwind mid-step() (the
+                # other lanes' bookkeeping would be lost and the slot would
+                # leak): mark the request FAILED and let the normal retire
+                # path reclaim the slot this same tick.
+                req.error = e
+                self._inst.callback_errors.inc()
+                self.tracer.instant("callback_error",
+                                    tid=req.request_id + 1,
+                                    error=repr(e))
+
+    def _probe_lengths(self) -> Optional[np.ndarray]:
+        """Per-lane occupied-slot count of one representative budgeted-KV
+        layer. Ladder compaction fires *inside* the traced decode step
+        (``lax.cond``), invisible to host code — so the engine detects it
+        by watching occupancy across an append: a lane that appended a
+        token but did not grow must have compacted. Only called when
+        metrics are enabled (two small D2H reads per tick); returns None
+        for stacks with no such layer (pure-SSM / ring-only: nothing
+        ladder-compacts)."""
+        state = self._slot_states
+        for sec in (state.tail, state.blocks):
+            for key in sorted(sec):
+                leaf = sec[key]
+                length = getattr(leaf, "length", None)
+                if length is None:
+                    continue
+                arr = np.asarray(length)
+                if arr.size % self.max_batch:
+                    continue
+                if isinstance(leaf, pagedlib.PagedKVCache):
+                    # paged layer stacks put the lane axis last
+                    return arr.reshape(-1, self.max_batch)[0]
+                # dense engine states broadcast the lane axis first
+                return arr.reshape(self.max_batch, -1)[:, 0]
+        return None
 
     # -- preemption (paged backend) -------------------------------------- #
     def preempt(self, slot: int) -> Optional[Request]:
@@ -1211,6 +1372,16 @@ class Engine:
             req._resume = (snap, int(self._slot_tokens[slot]))
         self.scheduler.requeue(slot)
         self.preemptions += 1
+        req.n_preempts += 1
+        self._inst.preempted.inc()
+        tr = self.tracer
+        if tr.enabled:
+            tid = req.request_id + 1
+            tr.end(("running", req.request_id), outcome="preempted",
+                   tokens=len(req.output_tokens))
+            tr.instant("preempt", tid=tid, slot=slot)
+            tr.begin(("queued", req.request_id), "queued", tid=tid,
+                     resumption=True)
         return req
 
     def _maybe_preempt(self) -> None:
@@ -1250,13 +1421,46 @@ class Engine:
         self._ensure_slot_states()
         self._maybe_preempt()
         finished: List[Request] = []
+        self._tick += 1
+        self._inst.steps.inc()
 
         def retire(slot):
             if self._paged_in_model:
                 self._release_lane(slot)
-            return self.scheduler.retire(slot)
+            req = self.scheduler.retire(slot)
+            if req.error is not None:
+                req.status = FAILED
+            req.t_finish = self.clock()
+            inst = self._inst
+            (inst.retired_failed if req.error is not None
+             else inst.retired_finished).inc()
+            n = len(req.output_tokens)
+            if n >= 2 and req.t_first is not None:
+                inst.tpot.observe((req.t_finish - req.t_first) / (n - 1))
+            if req.deadline is not None:
+                slack = req.deadline - req.t_finish
+                inst.deadline_slack.observe(slack)
+                (inst.deadline_met if slack >= 0
+                 else inst.deadline_missed).inc()
+            if self.tracer.enabled:
+                self.tracer.end(("running", req.request_id),
+                                outcome=req.status, tokens=n)
+            return req
 
         for slot, req in self.scheduler.admit():
+            now = self.clock()
+            self._inst.admitted.inc()
+            resuming = req._resume is not None
+            if resuming:
+                self._inst.resumed.inc()
+            elif req.t_admit is None:
+                req.t_admit = now
+                self._inst.queue_wait.observe(now - req.t_submit)
+            if self.tracer.enabled:
+                self.tracer.end(("queued", req.request_id), slot=slot)
+                self.tracer.begin(("running", req.request_id), "running",
+                                  tid=req.request_id + 1, slot=slot,
+                                  resumed=resuming)
             if self._spec is not None:
                 # a prefill/resume rewrites this lane's tables: the
                 # persistent draft view no longer mirrors the live lanes
@@ -1287,14 +1491,18 @@ class Engine:
                         jnp.asarray(slot, jnp.int32))
                 self._slot_tokens[slot] = tok
                 continue
-            if self._paged_in_model:
-                logits, sub = self._prefill_request_paged(req, slot)
-                self._slot_states = self._lane_put(
-                    self._slot_states, sub, jnp.asarray(slot, jnp.int32))
-            else:
-                logits, state1 = self._prefill_request(req)
-                self._slot_states = self._splice(self._slot_states, state1,
-                                                 jnp.asarray(slot, jnp.int32))
+            with self.tracer.span("prefill", tid=0,
+                                  request_id=req.request_id, slot=slot,
+                                  prompt_len=req.prompt_len):
+                if self._paged_in_model:
+                    logits, sub = self._prefill_request_paged(req, slot)
+                    self._slot_states = self._lane_put(
+                        self._slot_states, sub, jnp.asarray(slot, jnp.int32))
+                else:
+                    logits, state1 = self._prefill_request(req)
+                    self._slot_states = self._splice(
+                        self._slot_states, state1,
+                        jnp.asarray(slot, jnp.int32))
             self._record(req, self._sample_next(req, logits))
             if req.done:
                 finished.append(retire(slot))
@@ -1307,20 +1515,41 @@ class Engine:
                 for slot in spec_done:
                     finished.append(retire(slot))
             else:
-                if self._paged_in_model:
-                    # ONE batched paged decode step — the pool is shared
-                    # across lanes, so the slot axis is real batch, not a
-                    # vmap; each lane advances on its own pos/length clock.
-                    toks = jnp.asarray(self._slot_tokens, jnp.int32)[:, None]
-                    logits, self._slot_states = self._paged_step(
-                        self.params, state=self._slot_states, tokens=toks)
-                    logits = np.asarray(logits)      # [max_batch, V]
-                else:
-                    toks = jnp.asarray(self._slot_tokens,
-                                       jnp.int32)[:, None, None]
-                    logits, self._slot_states = self._slot_step(
-                        self.params, self._slot_states, toks)
-                    logits = np.asarray(logits)      # [max_batch, 1, V]
+                # occupancy probe before/after the append (compaction
+                # detection); a spec wave appends k+1 and rolls back, so
+                # only this stepwise branch probes. Reads complete before
+                # the donating dispatch consumes the state.
+                probe = (self._probe_lengths() if self.metrics.enabled
+                         else None)
+                lanes = sorted(self.scheduler.running)
+                with self.tracer.span("decode", tid=0, tick=self._tick,
+                                      lanes=len(lanes)):
+                    if self._paged_in_model:
+                        # ONE batched paged decode step — the pool is
+                        # shared across lanes, so the slot axis is real
+                        # batch, not a vmap; each lane advances on its own
+                        # pos/length clock.
+                        toks = jnp.asarray(self._slot_tokens,
+                                           jnp.int32)[:, None]
+                        logits, self._slot_states = self._paged_step(
+                            self.params, state=self._slot_states,
+                            tokens=toks)
+                        logits = np.asarray(logits)    # [max_batch, V]
+                    else:
+                        toks = jnp.asarray(self._slot_tokens,
+                                           jnp.int32)[:, None, None]
+                        logits, self._slot_states = self._slot_step(
+                            self.params, self._slot_states, toks)
+                        logits = np.asarray(logits)    # [max_batch, 1, V]
+                self._inst.decode_dispatches.inc()
+                if probe is not None:
+                    after = self._probe_lengths()
+                    for slot in lanes:
+                        if after[slot] <= probe[slot]:
+                            self._inst.compactions.inc()
+                            self.tracer.instant(
+                                "compaction", tid=0, slot=slot,
+                                occupancy=int(after[slot]))
                 for slot in sorted(self.scheduler.running):
                     req = self.scheduler.running[slot]
                     self._record(req,

@@ -62,6 +62,7 @@ import jax
 import numpy as np
 
 from repro.core.paged import PagedStateStore, PoolExhausted
+from repro.obs.metrics import NULL_INSTRUMENT
 
 
 def _digest(tokens: np.ndarray) -> bytes:
@@ -109,6 +110,31 @@ class PrefixCache:
         self.hits = 0
         self.insertions = 0
         self.evictions = 0
+        # published metric handles (no-ops until bind_metrics)
+        self._m_lookups = NULL_INSTRUMENT
+        self._m_hits = NULL_INSTRUMENT
+        self._m_insertions = NULL_INSTRUMENT
+        self._m_evictions = NULL_INSTRUMENT
+
+    def bind_metrics(self, registry) -> None:
+        """Publish cache activity into a metrics registry (the engine calls
+        this at construction): event counters mirror the attribute counters
+        above; entry count / resident bytes are snapshot-time callback
+        gauges, so the hot path never samples them."""
+        self._m_lookups = registry.counter(
+            "prefix_lookups_total", "prefix-cache lookups")
+        self._m_hits = registry.counter(
+            "prefix_hits_total", "lookups that found a reusable prefix")
+        self._m_insertions = registry.counter(
+            "prefix_insertions_total", "snapshots registered")
+        self._m_evictions = registry.counter(
+            "prefix_evictions_total",
+            "entries evicted (LRU budget or pool pressure)")
+        if registry.enabled:
+            registry.gauge_fn("prefix_entries", lambda: len(self._entries),
+                              "resident prefix-cache entries")
+            registry.gauge_fn("prefix_bytes", lambda: self._nbytes,
+                              "bytes charged to resident entries")
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -129,6 +155,7 @@ class PrefixCache:
     def lookup(self, tokens) -> Optional[PrefixEntry]:
         """Longest cached prefix of ``tokens`` (LRU-refreshing), or None."""
         self.lookups += 1
+        self._m_lookups.inc()
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         # probe by the distinct-length index, not a scan of every entry:
         # O(distinct lengths), which stays small (block-aligned snapshots)
@@ -141,6 +168,7 @@ class PrefixCache:
                                                     tokens[:length]):
                 self._entries.move_to_end(h)
                 self.hits += 1
+                self._m_hits.inc()
                 return entry
         return None
 
@@ -201,6 +229,7 @@ class PrefixCache:
                                                             0) + 1
         self._nbytes += entry.nbytes
         self.insertions += 1
+        self._m_insertions.inc()
         # the `self._entries` guard matters for in-model table snapshots:
         # evicting an entry whose blocks a RUNNING lane still reads frees
         # nothing yet (the charge stays until the lane retires and calls
@@ -210,6 +239,7 @@ class PrefixCache:
             _, evicted = self._entries.popitem(last=False)
             self._drop_entry(evicted)
             self.evictions += 1
+            self._m_evictions.inc()
         # one basis for both backends: bytes the cache holds resident
         # (paged: live blocks charged to entries + dense overhead; dense:
         # full snapshot copies) — so peak_bytes is comparable across
@@ -237,6 +267,7 @@ class PrefixCache:
         _, evicted = self._entries.popitem(last=False)
         self._drop_entry(evicted)
         self.evictions += 1
+        self._m_evictions.inc()
         return True
 
     def _insert_paged(self, tokens, state, logits, parent):

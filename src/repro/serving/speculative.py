@@ -113,6 +113,24 @@ class SpecDecoder:
         self.fallback_steps = 0
         self.proposed = 0
         self.accepted = 0
+        # published metric handles (no-ops under the engine's default
+        # null registry; resolved once here, incremented per wave)
+        m = engine.metrics
+        self._m_waves = m.counter("spec_waves_total",
+                                  "draft/verify waves run")
+        self._m_forks = m.counter("spec_forks_total",
+                                  "draft view (re-)forks")
+        self._m_fallbacks = m.counter(
+            "spec_fallback_steps_total",
+            "ticks that fell back to stepwise decode, by reason",
+            labels=("reason",))
+        tokens = m.counter("spec_tokens_total",
+                           "draft tokens, proposed vs accepted",
+                           labels=("kind",))
+        self._m_proposed = tokens.labels("proposed")
+        self._m_accepted = tokens.labels("accepted")
+        self._m_fb_stochastic = self._m_fallbacks.labels("stochastic")
+        self._m_fb_headroom = self._m_fallbacks.labels("headroom")
         self.draft_budget = 0
         self.draft_slots = 0
         self._owned: Optional[Dict[str, np.ndarray]] = None
@@ -249,6 +267,7 @@ class SpecDecoder:
         if any(r.sampling.temperature != 0.0 for r in running.values()):
             self.invalidate()
             self.fallback_steps += 1
+            self._m_fb_stochastic.inc()
             return None
         state = eng._slot_states
         # chunk-verify gate over ACTIVE lanes only: retired lanes keep
@@ -259,9 +278,13 @@ class SpecDecoder:
             if ln.size and int(ln.max()) + k_chunk > leaf.n_slots:
                 self.invalidate()
                 self.fallback_steps += 1
+                self._m_fb_headroom.inc()
                 return None
         self.ensure_reserved(state)
         self.waves += 1
+        self._m_waves.inc()
+        eng.tracer.begin(("spec_wave", eng._tick), "spec_wave", tid=0,
+                         lanes=len(slots))
 
         # --- fork (or reuse): compacted copy of the live tables -------- #
         if self._draft is not None \
@@ -272,6 +295,7 @@ class SpecDecoder:
         if self._draft is None:
             draft = self._fork(live, planes, dict(self._owned))
             self.forks += 1
+            self._m_forks.inc()
             self._draft_len_ub = self.draft_budget
         else:
             draft = self._draft._replace(kv_pool=planes)
@@ -315,8 +339,13 @@ class SpecDecoder:
             req.spec_proposed += self.k
             req.spec_accepted += int(emit_raw[slot]) - 1
         self.proposed += self.k * len(slots)
+        self._m_proposed.inc(self.k * len(slots))
         if slots:
-            self.accepted += int((emit_raw[slots] - 1).sum())
+            acc = int((emit_raw[slots] - 1).sum())
+            self.accepted += acc
+            self._m_accepted.inc(acc)
+        eng.tracer.end(("spec_wave", eng._tick),
+                       emitted=int(emit.sum()) if slots else 0)
         # both caches appended k+1 tokens; rolling the SAME rejected
         # suffix off each leaves both holding the emitted stream minus
         # its last token. Inactive lanes emit 0 => full rollback; their

@@ -1,0 +1,407 @@
+"""Observability layer: metrics registry / tracer semantics, engine
+instrumentation against hand-computed expectations, the no-op-registry
+zero-overhead contract, and the benchmark envelope + traffic harness.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.models import model as M
+from repro.obs.metrics import (MetricsRegistry, NullRegistry, NULL_REGISTRY,
+                               DEFAULT_LATENCY_BUCKETS)
+from repro.obs.trace import Tracer, NullTracer, NULL_TRACER
+from repro.serving.engine import (Engine, SamplingParams, FAILED, FINISHED)
+from repro.serving.speculative import SpecConfig
+
+# benchmarks/ is a repo-root package (reachable when pytest runs as
+# ``python -m pytest`` from the root); make the import robust to bare
+# ``pytest`` invocations too
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+from benchmarks import common as bench_common          # noqa: E402
+from benchmarks import traffic                         # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16, dtype="float32",
+        lacache=LaCacheConfig(budget=48, n_sink=2, n_recent=8, chunk=2))
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# --------------------------------------------------------------------------- #
+# Metrics registry (pure host, no model)
+# --------------------------------------------------------------------------- #
+def test_counter_and_gauge_basics():
+    m = MetricsRegistry()
+    c = m.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(3)
+    assert m.value("reqs_total") == 4
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = m.gauge("depth", "queue depth")
+    g.set(5)
+    g.inc()
+    g.dec(2)
+    assert m.value("depth") == 4
+
+
+def test_counter_labels_are_independent_children():
+    m = MetricsRegistry()
+    fam = m.counter("toks_total", "tokens", labels=("kind",))
+    fam.labels("computed").inc(10)
+    fam.labels("reused").inc(3)
+    assert m.value("toks_total", "computed") == 10
+    assert m.value("toks_total", "reused") == 3
+    # a labeled family has no label-less child to proxy to
+    with pytest.raises(ValueError):
+        fam.inc()
+
+
+def test_histogram_hand_computed():
+    m = MetricsRegistry()
+    h = m.histogram("lat", "latency", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 5
+    assert h.sum == pytest.approx(56.05)
+    snap = m.snapshot()["lat"]["values"][0]
+    # cumulative bucket counts: le=0.1 ->1, le=1 ->3, le=10 ->4, +Inf ->5
+    assert snap["buckets"] == [[0.1, 1], [1.0, 3], [10.0, 4],
+                               [float("inf"), 5]]
+    # median rank falls in the (0.1, 1.0] bucket
+    assert 0.1 < h.percentile(50.0) <= 1.0
+    assert h.percentile(100.0) == 10.0     # overflow clamps to lower bound
+
+
+def test_registry_idempotent_and_conflict():
+    m = MetricsRegistry()
+    a = m.counter("x_total", "x")
+    b = m.counter("x_total", "x")
+    assert a is b
+    with pytest.raises(ValueError):
+        m.gauge("x_total", "redefined as a gauge")
+
+
+def test_gauge_fn_sampled_at_snapshot_and_errors_skipped():
+    m = MetricsRegistry()
+    depth = [7]
+    m.gauge_fn("live_depth", lambda: depth[0], "sampled")
+    m.gauge_fn("broken", lambda: 1 / 0, "raises")
+    depth[0] = 9                      # mutate after registration
+    snap = m.snapshot()
+    assert snap["live_depth"]["values"][0]["value"] == 9
+    assert "broken" not in snap
+
+
+def test_prometheus_exposition_format():
+    m = MetricsRegistry()
+    m.counter("a_total", "a counter").inc(2)
+    m.histogram("h", "a histogram", buckets=(1.0,)).observe(0.5)
+    m.counter("lbl_total", "labeled", labels=("k",)).labels("v").inc()
+    text = m.to_prometheus()
+    assert "# TYPE a_total counter" in text
+    assert "a_total 2" in text
+    assert 'h_bucket{le="+Inf"} 1' in text
+    assert "h_sum 0.5" in text and "h_count 1" in text
+    assert 'lbl_total{k="v"} 1' in text
+    json.loads(m.to_json())           # valid JSON snapshot
+
+
+def test_null_registry_is_inert():
+    n = NullRegistry()
+    assert not n.enabled and not NULL_REGISTRY.enabled
+    c = n.counter("x_total", "x")
+    c.inc()
+    c.labels("a").inc(5)
+    n.gauge("g", "g").set(3)
+    n.histogram("h", "h").observe(1.0)
+    n.gauge_fn("f", lambda: 1, "f")
+    assert n.snapshot() == {}
+    with pytest.raises(KeyError):
+        n.value("x_total")
+    assert n.get("h").percentile(50.0) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Tracer
+# --------------------------------------------------------------------------- #
+def _fake_clock(times):
+    seq = list(times)
+
+    def clock():
+        return seq.pop(0) if len(seq) > 1 else seq[0]
+    return clock
+
+
+def test_tracer_spans_instants_export(tmp_path):
+    # reads: t0 at construction, begin, end, span enter/exit, instant
+    tr = Tracer(clock=_fake_clock([0.0, 0.001, 0.003, 0.004, 0.0045,
+                                   0.005]))
+    tr.thread_name(1, "req 0")
+    tr.begin(("run", 0), "running", tid=1, slot=2)
+    tr.end(("run", 0), outcome="finished")
+    with tr.span("decode", tid=0, tick=1):
+        pass
+    tr.instant("compaction", tid=0, slot=2)
+    d = tr.to_dict()
+    evs = {e["name"]: e for e in d["traceEvents"] if e["ph"] != "M"}
+    run = evs["running"]
+    assert run["ph"] == "X" and run["ts"] == 1000 and run["dur"] == 2000
+    assert run["args"] == {"slot": 2, "outcome": "finished"}
+    assert evs["decode"]["ph"] == "X"
+    assert evs["compaction"]["ph"] == "i"
+    path = os.path.join(tmp_path, "t.json")
+    n = tr.export(path)
+    with open(path) as f:
+        assert len(json.load(f)["traceEvents"]) == n
+
+
+def test_tracer_unfinished_spans_and_event_bound():
+    tr = Tracer(clock=_fake_clock([float(i) for i in range(10)]),
+                max_events=2)
+    tr.begin("a", "a")                 # never ended: flushed as unfinished
+    tr.instant("i1")
+    tr.instant("i2")
+    tr.instant("dropped")              # over max_events
+    d = tr.to_dict()
+    names = [e["name"] for e in d["traceEvents"]]
+    assert "dropped" not in names
+    a = [e for e in d["traceEvents"] if e["name"] == "a"]
+    assert a and a[0]["args"]["unfinished"] is True
+    assert tr.dropped >= 1
+
+
+def test_null_tracer_records_nothing():
+    tr = NullTracer()
+    assert not tr.enabled and not NULL_TRACER.enabled
+    tr.begin("k", "n")
+    tr.end("k")
+    with tr.span("s"):
+        pass
+    tr.instant("i")
+    tr.thread_name(1, "row")
+    assert len(tr) == 0
+    assert tr.to_dict()["traceEvents"] == []
+
+
+# --------------------------------------------------------------------------- #
+# Benchmark envelope
+# --------------------------------------------------------------------------- #
+def test_write_bench_envelope(tmp_path, monkeypatch):
+    monkeypatch.setattr(bench_common, "RESULTS", str(tmp_path))
+    path = bench_common.write_bench("unit", {"x": 1},
+                                    config={"seed": 0})
+    assert os.path.basename(path) == "BENCH_unit.json"
+    with open(path) as f:
+        env = json.load(f)
+    assert env["schema_version"] == bench_common.SCHEMA_VERSION
+    assert env["bench"] == "unit"
+    assert env["config"] == {"seed": 0}
+    assert env["data"] == {"x": 1}
+    assert "git_sha" in env           # None outside a checkout is fine
+
+
+# --------------------------------------------------------------------------- #
+# Engine instrumentation: scripted workloads, hand-computed counters
+# --------------------------------------------------------------------------- #
+def test_engine_counters_shared_prefix_workload(small_model):
+    """Two sequential requests where the second's prompt strictly extends
+    the first's: the second reuses the whole 24-token cached prefix, so
+    prefill computes 24 + 8 tokens and reuses 24."""
+    cfg, params = small_model
+    m = MetricsRegistry()
+    eng = Engine(cfg, params, budget=48, max_batch=2, metrics=m)
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(0, cfg.vocab_size, (24,))
+    p2 = np.concatenate([p1, rng.integers(0, cfg.vocab_size, (8,))])
+    eng.submit(p1, 4, cache_prefix=True)
+    eng.run()
+    eng.submit(p2, 4, cache_prefix=True)
+    eng.run()
+    assert m.value("engine_submitted_total") == 2
+    assert m.value("engine_retired_total", FINISHED) == 2
+    assert m.value("engine_tokens_total") == 8
+    assert m.value("engine_prefill_tokens_total", "computed") == 32
+    assert m.value("engine_prefill_tokens_total", "reused") == 24
+    assert m.value("prefix_lookups_total") == 2
+    assert m.value("prefix_hits_total") == 1
+    # the registry mirrors the engine's own host counters exactly
+    assert m.value("engine_prefill_tokens_total", "computed") \
+        == eng.prefill_tokens
+    assert m.value("engine_prefill_tokens_total", "reused") \
+        == eng.prefix_tokens_reused
+    assert m.value("prefix_hits_total") == eng.prefix_cache.hits
+    assert m.get("engine_ttft_seconds").count == 2
+    assert m.get("engine_tpot_seconds").count == 2
+    assert m.get("engine_queue_wait_seconds").count == 2
+    snap = m.snapshot()
+    assert snap["engine_running"]["values"][0]["value"] == 0
+
+
+def test_engine_counters_preemption_and_deadline(small_model):
+    """One slot, deadline admission: a tighter-deadline request preempts
+    the runner (1 preemption + 1 resume), and both deadline outcomes are
+    recorded against the injected virtual clock."""
+    cfg, params = small_model
+    m = MetricsRegistry()
+    t = [0.0]
+    # deadline-pressure preemption swaps state through the paged pool,
+    # so it only arms on the paged backend
+    eng = Engine(cfg, params, budget=48, max_batch=1, admission="deadline",
+                 kv_backend="paged", metrics=m, clock=lambda: t[0])
+    rng = np.random.default_rng(1)
+    r1 = eng.submit(rng.integers(0, cfg.vocab_size, (12,)), 10,
+                    deadline=100.0)
+    eng.step()                         # r1 admitted and running
+    r2 = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2, deadline=1.0)
+    while eng.scheduler.has_work:
+        eng.step()
+        t[0] += 0.1
+    assert r1.status == FINISHED and r2.status == FINISHED
+    assert r1.n_preempts == 1
+    assert m.value("engine_preemptions_total") == 1
+    assert m.value("engine_resumes_total") == 1
+    assert m.value("engine_retired_total", FINISHED) == 2
+    # r2 finishes well before t=1.0; r1 well before t=100
+    assert m.value("engine_deadline_outcomes_total", "met") == 2
+    assert m.get("engine_deadline_slack_seconds").count == 2
+
+
+def test_spec_fallback_counter(small_model):
+    """A stochastically-sampling request forces the speculative decoder
+    to fall back to stepwise decode every tick, labeled 'stochastic'."""
+    cfg, params = small_model
+    m = MetricsRegistry()
+    eng = Engine(cfg, params, budget=48, max_batch=2, kv_backend="paged",
+                 spec_config=SpecConfig(k=3), metrics=m)
+    rng = np.random.default_rng(2)
+    eng.submit(rng.integers(0, cfg.vocab_size, (10,)), 6,
+               SamplingParams(temperature=1.0, seed=7))
+    eng.run()
+    assert eng._spec.fallback_steps > 0
+    assert m.value("spec_fallback_steps_total", "stochastic") \
+        == eng._spec.fallback_steps
+    assert m.value("spec_waves_total") == 0
+
+
+def test_compaction_events_counted(small_model):
+    """Generation past the ladder budget (48) compacts inside the jitted
+    decode; the host-side occupancy probe surfaces it as a counter."""
+    cfg, params = small_model
+    m = MetricsRegistry()
+    eng = Engine(cfg, params, budget=48, max_batch=1, metrics=m)
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(0, cfg.vocab_size, (16,)), 60)
+    eng.run()
+    assert m.value("engine_compaction_events_total") >= 1
+
+
+def test_on_token_failure_marks_request_failed(small_model):
+    """A raising on_token callback fails its own request (recorded in the
+    registry) without unwinding step() or poisoning other requests."""
+    cfg, params = small_model
+    m = MetricsRegistry()
+    eng = Engine(cfg, params, budget=48, max_batch=2, metrics=m)
+    rng = np.random.default_rng(4)
+
+    def bad(req, tok):
+        raise ValueError("stream broke")
+
+    r_bad = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 6,
+                       on_token=bad)
+    r_ok = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 6)
+    done = eng.run()
+    assert len(done) == 2
+    assert r_bad.status == FAILED
+    assert isinstance(r_bad.error, ValueError)
+    assert len(r_bad.output_tokens) == 1       # failed on its first token
+    assert r_ok.status == FINISHED and len(r_ok.output_tokens) == 6
+    assert m.value("engine_callback_errors_total") == 1
+    assert m.value("engine_retired_total", FAILED) == 1
+    assert m.value("engine_retired_total", FINISHED) == 1
+    # the engine still serves new work after the failure
+    r3 = eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 2)
+    eng.run()
+    assert r3.status == FINISHED
+
+
+def test_noop_registry_output_bit_identical(small_model):
+    """Default (null) instrumentation vs live metrics + tracer: the
+    generated streams must be bit-identical — observability must never
+    perturb the computation."""
+    cfg, params = small_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (10 + 3 * i,))
+               for i in range(3)]
+
+    def serve(**kw):
+        eng = Engine(cfg, params, budget=48, max_batch=2, **kw)
+        reqs = [eng.submit(p, 6, SamplingParams(seed=i))
+                for i, p in enumerate(prompts)]
+        eng.run()
+        return [r.tokens.tolist() for r in reqs]
+
+    base = serve()
+    instrumented = serve(metrics=MetricsRegistry(), tracer=Tracer())
+    assert base == instrumented
+
+
+def test_engine_trace_spans(small_model):
+    """The request lifecycle shows up as Perfetto events: queued/running
+    rows per request, prefill/decode spans on the engine row."""
+    cfg, params = small_model
+    tr = Tracer()
+    eng = Engine(cfg, params, budget=48, max_batch=1, metrics=None,
+                 tracer=tr)
+    rng = np.random.default_rng(6)
+    eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 3)
+    eng.submit(rng.integers(0, cfg.vocab_size, (8,)), 3)
+    eng.run()
+    evs = tr.to_dict()["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert {"queued", "running", "prefill", "decode"} <= names
+    runs = [e for e in evs if e["name"] == "running"]
+    assert len(runs) == 2 and all(e["ph"] == "X" for e in runs)
+    assert {e["tid"] for e in runs} == {1, 2}      # one row per request
+    assert all(e["args"]["outcome"] == FINISHED for e in runs)
+
+
+# --------------------------------------------------------------------------- #
+# Traffic harness
+# --------------------------------------------------------------------------- #
+def test_traffic_workload_deterministic_and_sorted():
+    w1 = traffic.gen_workload(16, seed=0, pattern="bursty", rate=20.0,
+                              vocab=128)
+    w2 = traffic.gen_workload(16, seed=0, pattern="bursty", rate=20.0,
+                              vocab=128)
+    arr = [w["arrival"] for w in w1]
+    assert arr == [w["arrival"] for w in w2]
+    assert arr == sorted(arr)
+    assert all(np.array_equal(a["prompt"], b["prompt"])
+               for a, b in zip(w1, w2))
+    with pytest.raises(ValueError):
+        traffic.gen_workload(4, 0, "sawtooth", 20.0, 128)
+
+
+def test_traffic_scenario_report(small_model):
+    cfg, params = small_model
+    work = traffic.gen_workload(4, seed=0, pattern="steady", rate=20.0,
+                                vocab=cfg.vocab_size)
+    for w in work:
+        w["max_new"] = min(w["max_new"], 6)
+    rep = traffic.run_scenario(cfg, params, work, "fifo", budget=48)
+    assert rep["n_finished"] == 4 and rep["n_failed"] == 0
+    assert rep["ttft_s"]["p50"] > 0 and rep["tpot_s"]["p50"] > 0
+    assert rep["goodput_tok_per_s"] <= rep["throughput_tok_per_s"]
+    assert rep["deadline"]["met"] + rep["deadline"]["missed"] == 4
+    assert set(rep["per_tenant"]) == {"interactive", "batch"}
+    assert rep["prefill_tokens"]["computed"] > 0
