@@ -1,0 +1,126 @@
+"""Sharded paged serving on a forced-multi-device host mesh.
+
+The tentpole claim behind ``Engine(mesh=...)``: sharding the physical
+pool's kv-head axis over the ``model`` mesh axis divides the per-chip
+cached-KV footprint by the model-axis extent while the emitted tokens
+stay identical to single-device paged serving (the kv-head split is
+bitwise clean — each shard computes its own query-head group end to end,
+no collective inside attention). This benchmark runs both engines over
+the same shared-prefix request mix on an 8-way forced host-device CPU
+"mesh" (4 data x 2 model), asserts token parity and the ~1/model per-chip
+plane footprint, and emits ``results/BENCH_sharded.json`` through the
+shared ``write_bench`` envelope.
+
+Run directly (the XLA device-count flag must be set before jax imports,
+which this module does for itself):
+
+  PYTHONPATH=src python benchmarks/sharded.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+# must precede any jax import: the forced host device count is read once
+# at backend initialization
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+if __package__ in (None, ""):     # `python benchmarks/sharded.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+from benchmarks import common  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+
+DATA_AXIS, MODEL_AXIS = 4, 2
+
+
+def sharded_vs_single(cfg, params, budget=96, n_requests=6, prefix_len=192,
+                      tail_len=16, max_new=8):
+    """Serve one shared-prefix mix on a single-device paged engine and on
+    a mesh-sharded one; return parity + footprint + throughput numbers."""
+    c = common.with_policy(cfg, "lacache", budget)
+    co = common.corpus()
+    shared = co.stream(prefix_len, seed=910)
+
+    def wave(seed0):
+        return [np.concatenate([shared, co.stream(tail_len, seed=seed0 + i)])
+                for i in range(n_requests)]
+
+    def serve(mesh):
+        eng = Engine(c, params, budget=budget, max_batch=4,
+                     kv_backend="paged", mesh=mesh)
+        for p in wave(911):
+            eng.submit(p, max_new, cache_prefix=True)
+        eng.run()
+        for p in wave(931):
+            eng.submit(p, 4 * max_new, cache_prefix=True)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.output_tokens) for r in done)
+        toks = [r.tokens.tolist() for r in done]
+        per_dev = eng.kv_pool_bytes_per_device
+        eng.close()
+        return toks, n_tok / dt, per_dev
+
+    single_toks, single_tps, single_bytes = serve(None)
+    mesh = jax.make_mesh((DATA_AXIS, MODEL_AXIS), ("data", "model"))
+    shard_toks, shard_tps, shard_bytes = serve(mesh)
+
+    assert shard_toks == single_toks, \
+        "sharded paged decode must match single-device token-for-token"
+    ratio = shard_bytes / max(single_bytes, 1)
+    # kv-head-sharded planes (bench_cfg has n_kv_heads=4, model axis 2):
+    # per-chip plane bytes must scale as ~1/model
+    assert abs(ratio - 1.0 / MODEL_AXIS) < 1e-6, \
+        f"per-device plane bytes ratio {ratio} != 1/{MODEL_AXIS}"
+    return {
+        "scenario": "sharded_vs_single_device",
+        "mesh": {"data": DATA_AXIS, "model": MODEL_AXIS},
+        "devices": len(jax.devices()),
+        "tokens_match": True,
+        "kv_pool_bytes_per_device": {"single": single_bytes,
+                                     "sharded": shard_bytes},
+        "per_device_bytes_ratio": ratio,
+        "expected_ratio": 1.0 / MODEL_AXIS,
+        # CPU host-"devices" share one socket, so tok/s is a smoke signal
+        # (collective + partitioning overhead), not a speedup claim
+        "tok_per_s": {"single": single_tps, "sharded": shard_tps},
+    }
+
+
+def main():
+    n = len(jax.devices())
+    if n < DATA_AXIS * MODEL_AXIS:
+        print(f"need {DATA_AXIS * MODEL_AXIS} devices, have {n}; "
+              "set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return 1
+    cfg, params = common.bench_model()
+    budget = 96
+    out = sharded_vs_single(cfg, params, budget=budget)
+    print(f"sharded ({DATA_AXIS}x{MODEL_AXIS} mesh): tokens match; "
+          f"pool bytes/device "
+          f"{out['kv_pool_bytes_per_device']['single']/1e6:.2f} MB -> "
+          f"{out['kv_pool_bytes_per_device']['sharded']/1e6:.2f} MB "
+          f"(ratio {out['per_device_bytes_ratio']:.3f}, expected "
+          f"{out['expected_ratio']:.3f}); "
+          f"{out['tok_per_s']['single']:.1f} -> "
+          f"{out['tok_per_s']['sharded']:.1f} tok/s steady-state "
+          "(CPU smoke, not a speedup claim)")
+    common.write_bench("sharded", out, config={
+        "mesh": f"{DATA_AXIS}x{MODEL_AXIS}", "budget": budget,
+        "n_kv_heads": cfg.n_kv_heads, "page_size": 16})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

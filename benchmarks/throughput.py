@@ -80,14 +80,23 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
     first pass is the cold start, the second measures the steady-state
     serving rate (the regression-tracked number — PR 3's paged backend
     lost 3x wall-clock to eager per-snapshot pool scatters that in-model
-    decode eliminates). The paged engine is built with ``prewarm=True``:
-    the batched decode/chunk executables compile at construction, so the
-    cold start splits into an explicit ``prewarm_s`` compile phase plus a
-    compile-light first wave (prefill executables are prompt-length
-    dependent and still compile in wave 1 — dense pays the same there).
-    ``tok_per_s_first_wave`` is the compile-free cold number;
-    ``tok_per_s_*_incl_compile`` charges construction + wave 1 together.
-    Machine-readable trajectory in ``results/BENCH_paged.json``.
+    decode eliminates). The paged engine is built with ``prewarm=True``
+    and ``bucket_prefill=True``: the batched decode/chunk executables AND
+    the bucketed prefill ladder compile at construction, so the cold
+    start splits into an explicit ``prewarm_s`` compile phase plus a
+    compile-free first wave. A third paged serve with
+    ``prewarm_prefill=False`` isolates the prefill ladder's share of the
+    compile-inclusive number (the former cold-start soft spot: prefill
+    compiles used to land inside wave 1). ``tok_per_s_first_wave`` is the
+    compile-free cold number; ``tok_per_s_*_incl_compile`` charges
+    construction + wave 1 together. Read the reported
+    ``prefill_prewarm_delta_tok_per_s`` with the scenario in mind: this
+    workload's prompts all land in ONE bucket, so wave 1 cold pays a
+    single prefill compile while the ladder warms every bucket up front —
+    the delta prices that insurance (it can go negative here; the ladder
+    pays off on mixed-length traffic, where each distinct bucket would
+    otherwise spike a later request's TTFT). Machine-readable trajectory
+    in ``results/BENCH_paged.json``.
     """
     c = common.with_policy(cfg, "lacache", budget)
     co = common.corpus()
@@ -98,10 +107,11 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
                                                   seed=seed0 + i)])
                 for i in range(n_requests)]
 
-    def serve(kv_backend):
+    def serve(kv_backend, prewarm_prefill=True):
         t0 = time.perf_counter()
         eng = Engine(c, params, budget=budget, max_batch=4,
-                     kv_backend=kv_backend, prewarm=True)
+                     kv_backend=kv_backend, prewarm=True,
+                     bucket_prefill=True, prewarm_prefill=prewarm_prefill)
         build_s = time.perf_counter() - t0   # prewarm compile (paged only)
         # wave 1 (cold): builds the shared-prefix cache and pays whatever
         # compilation prewarm could not move to construction
@@ -129,9 +139,21 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
 
     (dense_eng, dense_toks, dense_build, dense_first, dense_cold,
      dense_tps) = serve("dense")
+    # each paged serve starts from an empty compilation cache — the three
+    # serves share one process, and a warm jit cache would hand the later
+    # serves the earlier ones' compiles, turning the prewarm-scope
+    # comparison into a no-op
+    jax.clear_caches()
     (paged_eng, paged_toks, paged_build, paged_first, paged_cold,
      paged_tps) = serve("paged")
+    # prefill ladder left cold: wave 1 re-pays the prefill compiles, so
+    # the gap to the full-prewarm numbers is the prefill-prewarm delta
+    jax.clear_caches()
+    (_, nopre_toks, nopre_build, nopre_first, nopre_cold,
+     _) = serve("paged", prewarm_prefill=False)
     assert dense_toks == paged_toks, "backends must agree token-for-token"
+    assert nopre_toks == paged_toks, \
+        "prewarm scope must not change tokens"
     return {
         "n_requests": n_requests, "prefix_len": prefix_len,
         "tok_per_s_dense": dense_tps, "tok_per_s_paged": paged_tps,
@@ -140,6 +162,10 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
         "tok_per_s_paged_first_wave": paged_first,
         "tok_per_s_dense_incl_compile": dense_cold,
         "tok_per_s_paged_incl_compile": paged_cold,
+        "prewarm_s_paged_noprefill": nopre_build,
+        "tok_per_s_paged_first_wave_noprefill": nopre_first,
+        "tok_per_s_paged_incl_compile_noprefill": nopre_cold,
+        "prefill_prewarm_delta_tok_per_s": paged_cold - nopre_cold,
         "peak_kv_bytes_dense": dense_eng.prefix_cache.peak_bytes,
         "peak_kv_bytes_paged": paged_eng.prefix_cache.peak_bytes,
         "bytes_shared": paged_eng.bytes_shared,
@@ -283,6 +309,7 @@ def spec_vs_greedy(cfg, params, budget=384, headroom=96, n_requests=4,
         "acceptance_rate_per_request": acc,
         "waves": stats["waves"], "forks": stats["forks"],
         "fallback_steps": stats["fallback_steps"],
+        "catchup_steps": stats["catchup_steps"],
         "proposed": stats["proposed"], "accepted": stats["accepted"],
         "draft_owned_bytes": spec_eng.draft_owned_bytes,
     }
@@ -347,7 +374,11 @@ def main(quick: bool = False):
           f"steady-state ({pd['tok_per_s_dense_incl_compile']:.1f} -> "
           f"{pd['tok_per_s_paged_incl_compile']:.1f} incl. compile; "
           f"paged prewarm {pd['prewarm_s_paged']:.1f}s then "
-          f"{pd['tok_per_s_paged_first_wave']:.1f} tok/s first wave)")
+          f"{pd['tok_per_s_paged_first_wave']:.1f} tok/s first wave; "
+          f"prefill ladder cold: "
+          f"{pd['tok_per_s_paged_incl_compile_noprefill']:.1f} incl. "
+          f"compile, delta "
+          f"{pd['prefill_prewarm_delta_tok_per_s']:+.1f})")
     # machine-readable perf trajectory: tok/s + peak KV bytes per backend,
     # so paged regressions are tracked across PRs instead of rediscovered
     common.write_bench("paged", {
@@ -362,7 +393,11 @@ def main(quick: bool = False):
             "paged": pd["tok_per_s_paged_first_wave"]},
         "tok_per_s_incl_compile": {
             "dense": pd["tok_per_s_dense_incl_compile"],
-            "paged": pd["tok_per_s_paged_incl_compile"]},
+            "paged": pd["tok_per_s_paged_incl_compile"],
+            "paged_noprefill_prewarm":
+                pd["tok_per_s_paged_incl_compile_noprefill"]},
+        "prefill_prewarm_delta_tok_per_s":
+            pd["prefill_prewarm_delta_tok_per_s"],
         "peak_kv_bytes": {"dense": pd["peak_kv_bytes_dense"],
                           "paged": pd["peak_kv_bytes_paged"]},
         "paged_over_dense_tok_per_s":

@@ -1096,7 +1096,7 @@ class PagedStateStore:
     # The traced decode step never touches refcounts or the free list; the
     # engine pre-stages ownership through these eager primitives (lane
     # reserved sets, snapshot forks, preemption handoffs).
-    def detach_planes(self) -> "PoolKV":
+    def detach_planes(self, sharding=None) -> "PoolKV":
         """Hand the pool's K/V planes over to the in-model decode state.
 
         The in-model path keeps all KV content in the traced
@@ -1106,10 +1106,22 @@ class PagedStateStore:
         system. The store retains a 1-block stub (shape metadata for
         ``block_bytes``); the content paths (:meth:`put`/:meth:`get`)
         refuse afterwards.
+
+        ``sharding`` (a :class:`jax.sharding.NamedSharding` for one plane,
+        mesh serving) places the detached planes across the mesh at the
+        handoff — the single point where the system's largest allocation
+        changes owner, so no full-size replicated copy ever needs to exist
+        on one device afterwards. The allocator state the store keeps
+        (refcounts, free list) stays host-global regardless: sharding
+        never touches it.
         """
         if self.planes_detached:
             raise RuntimeError("pool planes already detached")
-        kvp = PoolKV(k=self.pool.k, v=self.pool.v)
+        k, v = self.pool.k, self.pool.v
+        if sharding is not None:
+            k = jax.device_put(k, sharding)
+            v = jax.device_put(v, sharding)
+        kvp = PoolKV(k=k, v=v)
         self.pool = self.pool._replace(k=self.pool.k[:1], v=self.pool.v[:1])
         self.planes_detached = True
         return kvp

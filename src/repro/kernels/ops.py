@@ -134,6 +134,30 @@ def _xla_decode_attention(q, k, v, length, *, sm_scale=None):
     return _masked_decode_attention(q, k, v, valid, sm_scale=sm_scale)
 
 
+def _masked_decode_attention_partial(q, k, v, valid, *, sm_scale=None):
+    """Unmerged partial-softmax pieces of :func:`_masked_decode_attention`.
+
+    Returns ``(acc, m, l)`` with ``acc = sum_s exp(s - m) * v`` ``[b, kv,
+    g, d]``, the row max ``m`` and mass ``l`` ``[b, kv, g]`` — what a mesh
+    shard contributes when the slot axis is sharded: the caller merges
+    shards with ``o = psum(acc * exp(m - pmax(m))) / psum(l * exp(m -
+    pmax(m)))`` (the partial-softmax all-reduce)."""
+    b, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    q4 = (q.reshape(b, kvh, g, d).astype(jnp.float32)) * sm_scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
+    vmask = valid[:, None, None, :]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
 def _masked_decode_attention(q, k, v, valid, *, sm_scale=None):
     """The shared decode-attention core over an explicit slot-validity mask.
 
@@ -181,6 +205,11 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
             q, k_pool, v_pool, block_tables, lengths, sm_scale=sm_scale,
             n_slots=n_slots, return_probs=True)
     impl = impl or default_impl()
+    pm = _pool_mesh_for_dispatch(impl)
+    if pm is not None:
+        return _sharded_paged_decode_attention(
+            pm, q, k_pool, v_pool, block_tables, lengths,
+            sm_scale=sm_scale, n_slots=n_slots)
     if impl == "pallas":
         from repro.kernels import paged_attention as pa
         return pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
@@ -190,6 +219,93 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return _xla_paged_decode_attention(q, k_pool, v_pool, block_tables,
                                        lengths, sm_scale=sm_scale,
                                        n_slots=n_slots)
+
+
+def _pool_mesh_for_dispatch(impl: str):
+    """The engine-installed pool-mesh spec, when the Pallas backend should
+    route per shard. The XLA implementations stay mesh-free on purpose:
+    they are GSPMD-partitionable (the masked core keeps the kv-head axis
+    intact), so sharded placement alone partitions them — ``shard_map``
+    exists to carry the Pallas kernel, whose scalar-prefetch index maps
+    GSPMD cannot see through."""
+    if impl != "pallas":
+        return None
+    from repro.kernels import pool_mesh as _pm
+    spec = _pm.current_pool_mesh()
+    return spec if spec is not None and spec.sharded else None
+
+
+def _sharded_paged_decode_attention(pm, q, k_pool, v_pool, block_tables,
+                                    lengths, *, sm_scale=None, n_slots=None):
+    """Per-shard paged decode over a mesh-sharded pool (DESIGN.md §7).
+
+    kv-head-sharded planes (``pm.kv_axis``): each shard owns a kv-head
+    slice of the pool and the matching query-head group, so the existing
+    scalar-prefetch Pallas kernel runs unchanged per shard with no
+    collective — bitwise equal to the single-device kernel.
+
+    slot-sharded planes (``pm.slot_axis`` — the MQA/GQA-small case of
+    ``launch/sharding``'s KV rule): Pallas inside ``shard_map`` has no
+    global-slot offset plumbing, so each shard falls back to the XLA
+    reference core over its in-block slot slice and the shards merge with
+    a partial-softmax all-reduce (``psum`` over rescaled ``acc``/``l``).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    b, h, d = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    lane = pm.lane_axis
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
+    if pm.kv_axis is not None:
+        def kv_body(qq, kp, vp, tb, ln):
+            from repro.kernels import paged_attention as pa
+            return pa.paged_decode_attention(
+                qq, kp, vp, tb, ln, sm_scale=scale, n_slots=n_slots,
+                interpret=_interpret())
+        fn = shard_map(
+            kv_body, mesh=pm.mesh,
+            in_specs=(P(lane, pm.kv_axis, None),
+                      P(None, None, pm.kv_axis, None),
+                      P(None, None, pm.kv_axis, None),
+                      P(lane, None), P(lane)),
+            out_specs=P(lane, pm.kv_axis, None), check_rep=False)
+        return fn(q, k_pool, v_pool, tables, lengths)
+
+    axis = pm.slot_axis
+    bs_global = k_pool.shape[1]
+    ns = n_slots if n_slots is not None else tables.shape[1] * bs_global
+
+    def slot_body(qq, kp, vp, tb, ln):
+        # local gathered view: shard p holds in-block rows
+        # [p*bs_loc, (p+1)*bs_loc) of every pool block, so local slot j
+        # is GLOBAL slot (j // bs_loc) * bs_global + p*bs_loc + j % bs_loc
+        bs_loc = kp.shape[1]
+        p_idx = jax.lax.axis_index(axis)
+        jloc = jnp.arange(tb.shape[1] * bs_loc)
+        blk = jnp.take(tb, jloc // bs_loc, axis=-1)            # [b, S_loc]
+        row = jnp.clip(blk, 0) * bs_loc + jloc % bs_loc
+        k = kp.reshape((-1,) + kp.shape[2:])[row]
+        v = vp.reshape((-1,) + vp.shape[2:])[row]
+        gslot = ((jloc // bs_loc) * bs_global + p_idx * bs_loc
+                 + jloc % bs_loc)
+        valid = (blk >= 0) & (gslot[None, :]
+                              < jnp.minimum(ln[:, None], ns))
+        acc, m, l = _masked_decode_attention_partial(qq, k, v, valid,
+                                                     sm_scale=scale)
+        m_all = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_all)
+        l_all = jax.lax.psum(l * corr, axis)
+        acc_all = jax.lax.psum(acc * corr[..., None], axis)
+        o = acc_all / jnp.where(l_all == 0.0, 1.0, l_all)[..., None]
+        return o.reshape(qq.shape).astype(qq.dtype)
+
+    fn = shard_map(
+        slot_body, mesh=pm.mesh,
+        in_specs=(P(lane, None, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(lane, None), P(lane)),
+        out_specs=P(lane, None, None), check_rep=False)
+    return fn(q, k_pool, v_pool, tables, lengths)
 
 
 def _xla_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
@@ -258,9 +374,17 @@ def paged_ring_decode_attention(q, k_pool, v_pool, block_tables, ring_pos,
     """
     impl = impl or default_impl()
     if impl == "pallas":
-        from repro.kernels import paged_attention as pa
         w = ring_pos.shape[-1]
         lengths = jnp.minimum(next_pos, w)
+        pm = _pool_mesh_for_dispatch(impl)
+        if pm is not None:
+            # the prefix-occupancy fact holds per shard too, so the ring
+            # reuses the sharded paged dispatch exactly as it reuses the
+            # single-device kernel
+            return _sharded_paged_decode_attention(
+                pm, q, k_pool, v_pool, block_tables, lengths,
+                sm_scale=sm_scale, n_slots=w)
+        from repro.kernels import paged_attention as pa
         return pa.paged_decode_attention(q, k_pool, v_pool, block_tables,
                                          lengths, sm_scale=sm_scale,
                                          n_slots=w, interpret=_interpret())

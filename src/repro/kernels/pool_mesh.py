@@ -1,0 +1,72 @@
+"""Active pool-mesh registry for sharded paged-decode kernel dispatch.
+
+The in-model paged hot loop calls :func:`repro.kernels.ops.paged_decode_attention`
+from deep inside a jitted ``decode_step`` — there is no argument slot to
+thread a :class:`jax.sharding.Mesh` through without touching every layer
+signature. Instead the engine installs a :class:`PoolMeshSpec` here (a
+thread-local, active only around its own jit dispatches so concurrently
+constructed single-device engines never see it), and the kernel dispatcher
+reads it **at trace time**: the traced program bakes in the ``shard_map``
+routing exactly like the ``REPRO_KERNEL_IMPL`` choice bakes in the backend.
+
+The spec records the axis decisions made once at engine construction by
+:func:`repro.launch.sharding.paged_pool_mesh_spec`:
+
+* ``kv_axis``   — pool planes sharded on the kv-head axis (the clean case:
+  every shard computes its own query-head group end-to-end, no collective),
+* ``slot_axis`` — MQA/GQA-small fallback: planes sharded on the in-block
+  slot axis; per-shard partial softmax merged with an all-reduce,
+* ``lane_axis`` — batch lanes sharded over the ``data`` axis when the
+  engine's ``max_batch`` divides it.
+
+This module is deliberately import-light (no repro imports) so both
+``repro.kernels.ops`` and ``repro.launch.sharding`` can depend on it
+without a cycle.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolMeshSpec:
+    """One engine's sharded-pool routing decision (see module docstring).
+
+    ``mesh`` is the :class:`jax.sharding.Mesh`; exactly one of
+    ``kv_axis`` / ``slot_axis`` is set when the model axis is wider than 1
+    (both ``None`` means every axis extent is 1 — a degenerate mesh the
+    dispatcher treats as single-device).
+    """
+
+    mesh: object
+    kv_axis: Optional[str] = None     # planes sharded on kv-heads
+    slot_axis: Optional[str] = None   # planes sharded on in-block slots
+    lane_axis: Optional[str] = None   # lanes sharded over "data"
+
+    @property
+    def sharded(self) -> bool:
+        return self.kv_axis is not None or self.slot_axis is not None
+
+
+_tls = threading.local()
+
+
+def current_pool_mesh() -> Optional[PoolMeshSpec]:
+    """The PoolMeshSpec installed by the innermost :func:`use_pool_mesh`,
+    or ``None`` (single-device dispatch)."""
+    return getattr(_tls, "spec", None)
+
+
+@contextlib.contextmanager
+def use_pool_mesh(spec: Optional[PoolMeshSpec]):
+    """Install ``spec`` for the duration of a jit dispatch (trace time is
+    what matters — cached executions re-enter for free)."""
+    prev = getattr(_tls, "spec", None)
+    _tls.spec = spec
+    try:
+        yield
+    finally:
+        _tls.spec = prev

@@ -18,6 +18,34 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_serving_mesh(spec: str):
+    """Parse a ``--mesh DxM`` spec (e.g. ``"4x2"``) into a ``(data, model)``
+    mesh for ``Engine(mesh=...)``.
+
+    ``D*M`` must equal the visible device count (on CPU, force it with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). The ``model``
+    extent is what shards the paged pool's kv-head (or in-block slot)
+    axis; ``data`` shards the batch-lane axis when ``max_batch`` divides
+    it."""
+    parts = str(spec).lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh expects 'DATAxMODEL' (e.g. '4x2'), got {spec!r}")
+    try:
+        d, m = (int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'DATAxMODEL' (e.g. '4x2'), got {spec!r}")
+    if d < 1 or m < 1:
+        raise ValueError(f"--mesh extents must be >= 1, got {spec!r}")
+    n = len(jax.devices())
+    if d * m != n:
+        raise ValueError(
+            f"--mesh {spec!r} needs {d * m} devices but {n} are visible "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 # v5e hardware constants for the roofline (DESIGN.md §6)
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

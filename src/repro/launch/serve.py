@@ -77,6 +77,14 @@ def main():
                          "store-backed snapshots with dense decode)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged backend: slots per physical block")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="paged backend: serve through a sharded pool on a "
+                         "(data, model) device mesh, e.g. '4x2' (model "
+                         "shards the pool's kv-head — or in-block slot — "
+                         "axis; data shards the batch lanes; the host-side "
+                         "allocator stays global). D*M must equal the "
+                         "visible device count; on CPU force it with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -107,14 +115,22 @@ def main():
     metrics = MetricsRegistry() if (args.metrics_out
                                     or args.trace_out) else None
     tracer = Tracer() if args.trace_out else None
+    mesh = None
+    if args.mesh is not None:
+        if args.kv_backend != "paged":
+            ap.error("--mesh requires --kv-backend paged (it shards the "
+                     "physical pool planes)")
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh)
     eng = Engine(cfg, params, budget=args.budget, max_batch=args.batch,
                  admission=args.admission,
                  bucket_prefill=args.bucket_prefill,
                  kv_backend=args.kv_backend, page_size=args.page_size,
-                 metrics=metrics, tracer=tracer)
+                 mesh=mesh, metrics=metrics, tracer=tracer)
     print(f"policy={args.policy} admission={args.admission} "
           f"kv-backend={args.kv_backend} "
-          f"budget={args.budget} prompt={args.prompt_len} new={args.max_new}")
+          + (f"mesh={args.mesh} " if mesh is not None else "")
+          + f"budget={args.budget} prompt={args.prompt_len} new={args.max_new}")
 
     if args.request_mode:
         on_token = None
@@ -159,6 +175,10 @@ def main():
                   f"live ({eng.lane_owned_bytes/1e6:.2f} MB lane reserve), "
                   f"{eng.bytes_shared/1e6:.2f} MB deduplicated by block "
                   f"sharing; {eng.preemptions} preemptions")
+            if mesh is not None:
+                print(f"  sharded pool: "
+                      f"{eng.kv_pool_bytes_per_device/1e6:.2f} MB of "
+                      f"plane bytes resident per device")
         print("sample:", done[0].tokens[:32].tolist())
     else:
         prompts = np.stack([corpus.stream(args.prompt_len, seed=i)

@@ -14,6 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.cache import CrossKVCache, KVCache, MambaState
+from repro.kernels.pool_mesh import PoolMeshSpec
 from repro.launch import axes as axlib
 from repro.models.layers import RingKVCache
 
@@ -118,6 +119,95 @@ def decode_state_shardings(mesh, rules, cfg: ModelConfig, state_sds):
         return _ns(mesh, _safe(mesh, P(*spec), leaf.shape))
 
     return jax.tree_util.tree_map_with_path(for_leaf, state_sds)
+
+
+# --------------------------------------------------------------------------- #
+# Sharded paged serving: pool-plane + paged-decode-state shardings
+# --------------------------------------------------------------------------- #
+# The physical pool planes are the one piece of serving state where silent
+# replication is NOT acceptable: a dropped partition entry quietly re-inflates
+# per-chip HBM by the model-axis factor — the exact failure the sharded pool
+# exists to remove. Params keep the lenient `_safe` behaviour (a 12-head model
+# on 16-way TP should train, just replicated); pool planes get a loud error.
+def pool_plane_spec(mesh, cfg: ModelConfig, *, page_size: int,
+                    axis: str = "model") -> P:
+    """PartitionSpec for the pool's K/V planes ``[n_blocks, bs, kv, hd]``.
+
+    Applies the KV rule (module docstring): kv-head axis over ``axis`` when
+    it divides; otherwise the in-block slot axis (MQA/GQA-small — attention
+    then merges per-shard partial softmaxes with an all-reduce). When
+    neither divides, raises a loud :class:`ValueError` naming the axis and
+    suggesting a divisible ``page_size``/``kv_heads`` pairing — never the
+    silent replication ``_safe`` applies to params.
+    """
+    m = dict(mesh.shape).get(axis, 1)
+    if m <= 1:
+        return P(None, None, None, None)
+    if cfg.n_kv_heads % m == 0:
+        return P(None, None, axis, None)
+    if page_size % m == 0:
+        return P(None, axis, None, None)
+    ps_up = -(-page_size // m) * m
+    kv_up = -(-cfg.n_kv_heads // m) * m
+    raise ValueError(
+        f"cannot shard the paged KV pool over mesh axis {axis!r} "
+        f"(extent {m}): neither kv_heads={cfg.n_kv_heads} nor "
+        f"page_size={page_size} is divisible by it. Pick a divisible "
+        f"pairing — e.g. page_size={ps_up} (slot-sharded planes) or "
+        f"kv_heads={kv_up} (head-sharded planes) — or use a mesh whose "
+        f"{axis!r} extent divides one of them. Silent replication is not "
+        f"applied here: it would re-inflate per-chip HBM by {m}x.")
+
+
+def paged_pool_mesh_spec(mesh, cfg: ModelConfig, *, page_size: int,
+                         max_batch: int) -> PoolMeshSpec:
+    """Resolve one engine's pool-mesh routing (kernel dispatch + placement).
+
+    ``kv_axis``/``slot_axis`` follow :func:`pool_plane_spec` (loud on
+    failure); ``lane_axis`` shards the batch-lane axis over ``data`` only
+    when ``max_batch`` divides it (lanes replicate silently otherwise —
+    lane metadata is small, unlike the planes).
+    """
+    spec = pool_plane_spec(mesh, cfg, page_size=page_size)
+    kv_axis = spec[2]
+    slot_axis = spec[1]
+    data = dict(mesh.shape).get("data", 1)
+    lane_axis = "data" if data > 1 and max_batch % data == 0 else None
+    return PoolMeshSpec(mesh=mesh, kv_axis=kv_axis, slot_axis=slot_axis,
+                        lane_axis=lane_axis)
+
+
+def paged_state_shardings(mesh, cfg: ModelConfig, state, *, page_size: int,
+                          max_batch: int):
+    """NamedSharding pytree for an ``init_paged_decode_state`` structure.
+
+    Pool planes (``state.kv_pool``) take the strict :func:`pool_plane_spec`
+    (kv-head or slot axis over ``model``); every other leaf is per-lane
+    metadata (block tables, slot positions, lengths, SSM states, the
+    per-lane ``pos`` clock) and shards its lane axis over ``data`` when the
+    batch divides — with the lenient `_safe` drop, since replicated tables
+    cost KBs, not the pool's GBs. The allocator (refcounts, free list)
+    never appears here: it stays host-side in :class:`PagedStateStore`.
+    """
+    plane_spec = pool_plane_spec(mesh, cfg, page_size=page_size)
+    pm = paged_pool_mesh_spec(mesh, cfg, page_size=page_size,
+                              max_batch=max_batch)
+    lane = pm.lane_axis
+
+    def for_leaf(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if "kv_pool" in keys:
+            return _ns(mesh, plane_spec)
+        # PagedKVCache itself has a field named "blocks", so only the
+        # state-level container position marks the scan-stacked period dim
+        lead = 1 if keys and keys[0] == "blocks" else 0
+        nd = getattr(leaf, "ndim", 0)
+        spec = [None] * nd
+        if nd > lead:
+            spec[lead] = lane
+        return _ns(mesh, _safe(mesh, P(*spec), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(for_leaf, state)
 
 
 def train_batch_shardings(mesh, rules, batch_sds):

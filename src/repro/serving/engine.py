@@ -59,11 +59,13 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.analysis import sanitizer as sanlib
 from repro.configs.base import ModelConfig
 from repro.core import paged as pagedlib
 from repro.core.cache import MambaState
+from repro.kernels import pool_mesh as pool_mesh_lib
 from repro.models import model as M
 from repro.obs.metrics import DEFAULT_SLACK_BUCKETS, NULL_REGISTRY
 from repro.obs.trace import NULL_TRACER
@@ -385,12 +387,18 @@ class Engine:
                  pool_blocks: Optional[int] = None,
                  preempt: Optional[bool] = None,
                  spec_config: Optional["SpecConfig"] = None,
-                 prewarm: bool = False,
+                 prewarm: bool = False, prewarm_prefill: bool = True,
+                 mesh=None,
                  metrics=None, tracer=None,
                  clock: Optional[Callable[[], float]] = None):
         if kv_backend not in ("dense", "paged"):
             raise ValueError(
                 f"kv_backend must be 'dense' or 'paged', got {kv_backend!r}")
+        if mesh is not None and kv_backend != "paged":
+            raise ValueError(
+                "Engine(mesh=...) shards the paged pool planes; it requires "
+                "kv_backend='paged' (dense decode states shard through the "
+                "launch-layer dry-run path instead)")
         # observability: both default to shared no-op sinks, so metrics-off
         # serving pays only no-op method calls (and anything costlier — the
         # compaction probe's device reads — is gated on metrics.enabled).
@@ -437,6 +445,26 @@ class Engine:
         self.kv_store = None
         self._paged_in_model = False
         self.page_size = page_size
+        # sharded paged serving: the pool planes live across `mesh` (kv-head
+        # axis over "model" when it divides, else in-block slots — resolved
+        # loudly at construction, never by silent replication), lanes over
+        # "data" when max_batch divides it. The ALLOCATOR — refcounts, free
+        # list, lane reservations, block-table bookkeeping — stays host-side
+        # and global: sharding changes where KV bytes live, never who owns
+        # them, so fork/splice/preempt/compaction semantics are untouched.
+        self.mesh = mesh
+        self._pool_mesh = None
+        if mesh is not None:
+            if not M.paged_decode_eligible(cfg):
+                raise ValueError(
+                    "Engine(mesh=...) requires the in-model paged decode "
+                    "path; cross-attention / M-RoPE architectures run the "
+                    "store-backed fallback, which is single-device")
+            from repro.launch import sharding as shardlib
+            # loud ValueError here (not at first decode) when neither
+            # kv_heads nor page_size divides the model axis
+            self._pool_mesh = shardlib.paged_pool_mesh_spec(
+                mesh, cfg, page_size=page_size, max_batch=max_batch)
         if kv_backend == "paged":
             specs = cfg.layer_specs()
             n_kv_layers = sum(1 for s in specs
@@ -472,18 +500,21 @@ class Engine:
             # pool planes in place instead of copying them every dispatch
             # (the engine holds the only live reference: snapshots are
             # refcount forks of *tables*, never of pool buffers)
-            self._paged_step = jax.jit(
+            self._paged_step = self._mesh_dispatch(jax.jit(
                 functools.partial(M.decode_step, cfg=cfg),
-                donate_argnames=("state",))
-            self._paged_chunk = jax.jit(
+                donate_argnames=("state",)))
+            self._paged_chunk = self._mesh_dispatch(jax.jit(
                 functools.partial(M.decode_chunk, cfg=cfg),
-                donate_argnames=("state",))
-            self._lane_take = jax.jit(_lane_take, donate_argnums=(0,))
-            self._lane_put = jax.jit(_lane_put, donate_argnums=(0, 1))
-            self._lane_reset = jax.jit(_lane_reset, donate_argnums=(0,))
-            self._page_in = jax.jit(functools.partial(
+                donate_argnames=("state",)))
+            self._lane_take = self._mesh_dispatch(
+                jax.jit(_lane_take, donate_argnums=(0,)))
+            self._lane_put = self._mesh_dispatch(
+                jax.jit(_lane_put, donate_argnums=(0, 1)))
+            self._lane_reset = self._mesh_dispatch(
+                jax.jit(_lane_reset, donate_argnums=(0,)))
+            self._page_in = self._mesh_dispatch(jax.jit(functools.partial(
                 M.page_in_dense_state, page_size=page_size),
-                donate_argnums=(0,))
+                donate_argnums=(0,)))
         self.preempt_enabled = (preempt if preempt is not None
                                 else kv_backend == "paged")
         self.preemptions = 0
@@ -534,8 +565,48 @@ class Engine:
         # executables once at construction so the first serving wave runs
         # compile-free (benchmarks report both numbers).
         self.prewarm = bool(prewarm)
+        self.prewarm_prefill = bool(prewarm_prefill)
         if self.prewarm and self._paged_in_model:
             self._prewarm()
+
+    def _mesh_dispatch(self, fn):
+        """Run a paged jit with this engine's pool-mesh spec installed.
+
+        The spec is read at *trace* time by the kernel dispatcher (the
+        Pallas route needs ``shard_map``; the XLA route partitions through
+        GSPMD from placement alone), so the wrapper makes each engine's
+        executables see exactly its own mesh — two engines in one process
+        (the differential harness's sharded-vs-single-device pair) never
+        leak routing into each other's traces."""
+        if self._pool_mesh is None:
+            return fn
+
+        @functools.wraps(fn)
+        def call(*args, **kwargs):
+            with pool_mesh_lib.use_pool_mesh(self._pool_mesh):
+                return fn(*args, **kwargs)
+        return call
+
+    @property
+    def kv_pool_bytes_per_device(self) -> int:
+        """Physical pool-plane bytes resident per device (k + v).
+
+        Single-device serving returns the full plane footprint; under
+        ``Engine(mesh=...)`` with kv-head- (or slot-) sharded planes this
+        is the per-chip share — the number the sharded-serving benchmark
+        asserts scales as ~1/model-axis."""
+        if not self._paged_in_model or self.kv_store is None:
+            return 0
+        self._ensure_slot_states()
+        kvp = self._slot_states.kv_pool
+        total = 0
+        for plane in (kvp.k, kvp.v):
+            shape = plane.shape
+            sharding = getattr(plane, "sharding", None)
+            if sharding is not None and hasattr(sharding, "shard_shape"):
+                shape = sharding.shard_shape(plane.shape)
+            total += int(np.prod(shape, dtype=np.int64)) * plane.dtype.itemsize
+        return total
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -569,9 +640,11 @@ class Engine:
         s = self._spec
         if s is None:
             return {"waves": 0, "forks": 0, "fallback_steps": 0,
+                    "catchup_steps": 0,
                     "proposed": 0, "accepted": 0, "acceptance_rate": 0.0}
         return {"waves": s.waves, "forks": s.forks,
                 "fallback_steps": s.fallback_steps,
+                "catchup_steps": s.catchup_steps,
                 "proposed": s.proposed, "accepted": s.accepted,
                 "acceptance_rate": s.acceptance_rate}
 
@@ -821,7 +894,13 @@ class Engine:
             # place without invalidating store-held references — and
             # without keeping a dead second copy of the system's largest
             # allocation alive.
-            kvp = self.kv_store.detach_planes()
+            plane_sharding = None
+            if self.mesh is not None:
+                from repro.launch import sharding as shardlib
+                plane_sharding = NamedSharding(
+                    self.mesh, shardlib.pool_plane_spec(
+                        self.mesh, self.cfg, page_size=self.page_size))
+            kvp = self.kv_store.detach_planes(plane_sharding)
             allocated = [0]
 
             def alloc(n):
@@ -831,6 +910,15 @@ class Engine:
             self._slot_states = M.init_paged_decode_state(
                 self.cfg, self.max_batch, self.budget, self.page_size,
                 kvp, alloc)
+            if self.mesh is not None:
+                # tables/lengths/SSM leaves get their lane-axis placement
+                # here; the planes already carry theirs from the detach, so
+                # this device_put moves KBs of metadata, not the pool
+                from repro.launch import sharding as shardlib
+                self._slot_states = jax.device_put(
+                    self._slot_states, shardlib.paged_state_shardings(
+                        self.mesh, self.cfg, self._slot_states,
+                        page_size=self.page_size, max_batch=self.max_batch))
             self._lane_owned_blocks = allocated[0]
             return
         one = self.new_state(1)
@@ -849,20 +937,58 @@ class Engine:
         true_len are traced), so the warm executables are exactly the ones
         live traffic hits. The garbage tokens the warm step appends are
         harmless: every lane is ``_lane_reset`` at admission, and inactive
-        lanes are never read. Prefill executables are left cold — their
-        shapes depend on prompt lengths the engine cannot know yet (and
-        the dense backend pays the same prefill compiles).
+        lanes are never read.
+
+        With ``prewarm_prefill`` (default) and bucketed prefill, the
+        prefill side warms too: bucketing makes prompt-side shapes
+        enumerable (one executable per power-of-two bucket, traced
+        true_len), so the engine can walk the ladder up front instead of
+        paying one compile per distinct bucket inside wave 1 — previously
+        the dominant residual cold-start cost (paged ~4.7 vs dense ~22.5
+        tok/s compile-inclusive; ``benchmarks/throughput.py`` reports the
+        delta). Unbucketed engines still leave prefill cold — their shapes
+        depend on prompt lengths the engine cannot know yet.
         """
         self._ensure_slot_states()
         zero = jnp.asarray(0, jnp.int32)
         # lane splice chain (admission path)
         rest, sub = self._lane_take(self._slot_states, zero)
         sub = self._lane_reset(sub)
-        # chunk-prefill executable at the batch-1 cap width
+        # chunk-prefill executables: the greedy splitter emits power-of-two
+        # widths up to the batch-1 cap, so warm each one (unbucketed
+        # engines dispatch at the cap width only). The lane resets between
+        # widths so occupancy restarts from zero each time.
         cap = max(1, self.budget // 2)
-        w = 1 << (cap.bit_length() - 1) if self.bucket_prefill else cap
-        _, sub = self._paged_chunk(self.params, state=sub,
-                                   tokens=jnp.zeros((1, w), jnp.int32))
+        if self.bucket_prefill:
+            top = 1 << (cap.bit_length() - 1)
+            widths, w = [], min(max(1, self.min_bucket), top)
+            while w <= top:
+                widths.append(w)
+                w *= 2
+        else:
+            widths = [cap]
+        for w in widths:
+            _, sub = self._paged_chunk(self.params, state=sub,
+                                       tokens=jnp.zeros((1, w), jnp.int32))
+            sub = self._lane_reset(sub)
+        if self.prewarm_prefill and self.bucket_prefill:
+            # prefill bucket ladder: every bucket a prompt up to ~2x the
+            # slot budget would land in (longer prompts are compacted down
+            # to the budget anyway, and their buckets clamp at max_position)
+            top_b = self._bucket_len(min(int(self.cfg.max_position),
+                                         max(2 * self.budget,
+                                             self.min_bucket)))
+            dense, b = None, max(1, self.min_bucket)
+            while b <= top_b:
+                _, dense = self._prefill(
+                    self.params, tokens=jnp.zeros((1, b), jnp.int32),
+                    n_slots=self.budget,
+                    true_len=jnp.asarray(1, jnp.int32))
+                b *= 2
+            if dense is not None:
+                # page-in executable: cold-prefill admission splices the
+                # dense prefill state into the reserved pool lane
+                sub = self._page_in(sub, dense)
         self._slot_states = self._lane_put(rest, sub, zero)
         # the batched decode step (the hot path)
         _, self._slot_states = self._paged_step(
@@ -1531,6 +1657,12 @@ class Engine:
                         # pos/length clock.
                         toks = jnp.asarray(self._slot_tokens,
                                            jnp.int32)[:, None]
+                        if self._spec is not None:
+                            # stepwise tick with spec on: the persistent
+                            # draft falls one feed behind the live lanes;
+                            # record the feed so the next wave replays it
+                            # instead of re-forking (note_stepwise copies)
+                            self._spec.note_stepwise(self._slot_tokens)
                         logits, self._slot_states = self._paged_step(
                             self.params, state=self._slot_states,
                             tokens=toks)

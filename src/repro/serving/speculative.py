@@ -31,12 +31,17 @@ model but a **compacted copy fork** of the live lane:
    amortizes over many waves. The emitted stream is token-for-token
    identical to non-speculative greedy decode.
 
-The draft is **invalidated** (re-forked on the next wave) whenever the
-live lanes advance or change outside a wave: any fallback to stepwise
-decode (ineligible config, a stochastic request, or an active lane
+The draft is **invalidated** (re-forked on the next wave) whenever a
+lane's tables are rewritten outside a wave — an admission/resume prefill
+into a lane — and when the draft's own slot window fills up. A fallback
+to *stepwise* decode (a stochastic request running, or an active lane
 without ``k + 1`` free slots — the stepwise step then fires compaction
-exactly as non-speculative decode would), any admission/resume prefill
-into a lane, and when the draft's own slot window fills up.
+exactly as non-speculative decode would) does **not** invalidate: the
+draft's validity depends only on the emitted token stream, not the live
+tables, so the decoder records the tokens each fallback tick fed
+(:meth:`SpecDecoder.note_stepwise`) and replays them through the draft at
+the next wave — a few trimmed-width catch-up steps instead of a full
+re-fork + re-compaction every time one sampled request joins the batch.
 """
 from __future__ import annotations
 
@@ -111,6 +116,7 @@ class SpecDecoder:
         self.waves = 0
         self.forks = 0
         self.fallback_steps = 0
+        self.catchup_steps = 0
         self.proposed = 0
         self.accepted = 0
         # published metric handles (no-ops under the engine's default
@@ -131,6 +137,10 @@ class SpecDecoder:
         self._m_accepted = tokens.labels("accepted")
         self._m_fb_stochastic = self._m_fallbacks.labels("stochastic")
         self._m_fb_headroom = self._m_fallbacks.labels("headroom")
+        self._m_catchup = m.counter(
+            "spec_catchup_steps_total",
+            "draft steps replaying stepwise-fallback tokens (fork kept "
+            "alive across a fallback instead of re-forked)")
         self.draft_budget = 0
         self.draft_slots = 0
         self._owned: Optional[Dict[str, np.ndarray]] = None
@@ -140,6 +150,10 @@ class SpecDecoder:
         # host-side upper bound on its occupancy for the capacity gate
         self._draft = None
         self._draft_len_ub = 0
+        # tokens fed by stepwise fallback ticks while a draft was alive:
+        # replayed through the draft at the next wave (catch-up) so the
+        # fork survives fallbacks instead of dying to them
+        self._lag: List[np.ndarray] = []
         if not self.enabled:
             return
         spec = M.ladder_spec(cfg)
@@ -219,13 +233,35 @@ class SpecDecoder:
         self._owned_blocks = total
 
     def invalidate(self) -> None:
-        """Drop the persistent draft view. Called whenever the live lanes
-        advance or change outside a wave — a fallback stepwise decode, an
-        admission/resume prefill into a lane — and on capacity re-forks.
-        The block reservation stays; only the (cheap) metadata dies, and
-        the next wave re-forks."""
+        """Drop the persistent draft view. Called when a lane's tables
+        are rewritten outside a wave — an admission/resume prefill into a
+        lane — and on capacity re-forks. Stepwise fallbacks do NOT call
+        this; they record their fed tokens via :meth:`note_stepwise` and
+        the next wave replays them. The block reservation stays; only the
+        (cheap) metadata dies, and the next wave re-forks."""
         self._draft = None
         self._draft_len_ub = 0
+        self._lag.clear()
+
+    def note_stepwise(self, tokens: np.ndarray) -> None:
+        """Record the tokens a stepwise-fallback tick fed to the live
+        lanes (the engine passes a copy of its pre-step ``_slot_tokens``).
+
+        The draft's validity invariant — it holds the emitted stream
+        minus its last token — depends only on the token stream, never on
+        the live tables (the draft owns its own blocks), so a stepwise
+        tick merely puts the draft one feed behind. Replaying the lagged
+        feeds at the next wave costs one trimmed-width draft step each —
+        far cheaper than the re-fork + re-compaction an invalidate forces.
+        When the lag outgrows the draft window's remaining headroom the
+        draft is dropped (the next wave re-forks, as before)."""
+        if self._draft is None:
+            return
+        if (self._draft_len_ub + len(self._lag) + 1 + self.k + 1
+                > self.draft_slots):
+            self.invalidate()
+            return
+        self._lag.append(np.asarray(tokens, np.int64).copy())
 
     def release(self) -> None:
         """Drop the draft reservation (``Engine.close()``)."""
@@ -250,13 +286,14 @@ class SpecDecoder:
 
         Returns the slots whose requests finished (the caller retires
         them), or ``None`` when this tick must fall back to a normal
-        stepwise decode: the config is ineligible, a running request
-        samples stochastically (acceptance below is greedy), or some
-        active lane lacks ``k + 1`` free slots — in which case the
-        stepwise path lets compaction fire exactly as non-speculative
-        decode would, keeping the streams token-for-token equal. Every
-        fallback invalidates the persistent draft (the live stream
-        advances without it).
+        stepwise decode: the config is ineligible, a stochastically
+        sampling request is actually RUNNING with room to emit
+        (acceptance below is greedy), or some active lane lacks ``k + 1``
+        free slots — in which case the stepwise path lets compaction fire
+        exactly as non-speculative decode would, keeping the streams
+        token-for-token equal. Fallbacks leave the persistent draft alive
+        (the engine reports the stepwise feeds via :meth:`note_stepwise`
+        and the next wave catches the draft up).
         """
         eng = self.engine
         if not self.enabled:
@@ -264,8 +301,8 @@ class SpecDecoder:
         running = eng.scheduler.running
         slots = sorted(running)
         k_chunk = self.k + 1
-        if any(r.sampling.temperature != 0.0 for r in running.values()):
-            self.invalidate()
+        if any(r.sampling.temperature != 0.0 and not r.done
+               for r in running.values()):
             self.fallback_steps += 1
             self._m_fb_stochastic.inc()
             return None
@@ -276,7 +313,6 @@ class SpecDecoder:
         for _, leaf in self._kv_leaves(state):
             ln = np.asarray(leaf.length)[..., slots]
             if ln.size and int(ln.max()) + k_chunk > leaf.n_slots:
-                self.invalidate()
                 self.fallback_steps += 1
                 self._m_fb_headroom.inc()
                 return None
@@ -288,10 +324,27 @@ class SpecDecoder:
 
         # --- fork (or reuse): compacted copy of the live tables -------- #
         if self._draft is not None \
-                and self._draft_len_ub + k_chunk > self.draft_slots:
+                and (self._draft_len_ub + len(self._lag) + k_chunk
+                     > self.draft_slots):
             self.invalidate()                      # window full: re-fork
         planes = state.kv_pool
         live = state._replace(kv_pool=None)
+        if self._draft is not None and self._lag:
+            # catch-up: replay the tokens stepwise-fallback ticks fed to
+            # the live lanes (outputs discarded — only the KV appends
+            # matter) so the surviving fork holds the emitted stream
+            # minus its last token again
+            draft = self._draft._replace(kv_pool=planes)
+            for fed in self._lag:
+                _, draft = eng._paged_step(
+                    eng.params, state=draft,
+                    tokens=jnp.asarray(fed, jnp.int32)[:, None])
+            self.catchup_steps += len(self._lag)
+            self._m_catchup.inc(len(self._lag))
+            self._draft_len_ub += len(self._lag)
+            self._lag.clear()
+            planes = draft.kv_pool
+            self._draft = draft._replace(kv_pool=None)
         if self._draft is None:
             draft = self._fork(live, planes, dict(self._owned))
             self.forks += 1

@@ -1,0 +1,131 @@
+"""Subprocess worker for the sharded differential leg (g).
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be set before
+jax initializes, which a pytest process that already imported jax cannot
+do — so the differential tests (``tests/test_sharded_differential.py``)
+exec this script in a fresh interpreter. It runs BOTH engines of each
+case (single-device paged, then mesh-sharded paged) in the same process,
+asserts token-for-token parity plus free-list conservation, and prints a
+JSON verdict on stdout. Any assertion failure exits non-zero with the
+detail on stderr.
+
+Protocol: ``python tests/sharded_worker.py '<json>'`` where the payload is
+``{"cases": [{"kind", "admission", "compaction"}...], "mesh": [d, m],
+"sanitize": bool, "impl": null | "pallas"}``. When ``sanitize`` is set the
+worker also re-execs semantics-wise: REPRO_SANITIZE must already be in the
+environment at engine construction (the caller sets it), and the zero-leak
+``close()`` audit runs with per-block allocation sites armed.
+"""
+import json
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import LaCacheConfig, ModelConfig  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+
+PAGE_SIZE = 8
+_MODELS = {}
+
+
+def build_model(kind: str, budget: int):
+    """One miniature per family; n_kv_heads=2 so a model-axis extent of 2
+    takes the bitwise-clean kv-head-sharded route (leg (g) asserts exact
+    token parity, which the slot-sharded partial-softmax merge — a
+    different summation order — does not promise)."""
+    key = (kind, budget)
+    if key in _MODELS:
+        return _MODELS[key]
+    base = dict(name=f"t-{kind}", arch_type="dense", n_layers=3, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                head_dim=16, dtype="float32",
+                lacache=LaCacheConfig(budget=budget, n_sink=2, n_recent=4,
+                                      chunk=2))
+    if kind == "ring":
+        base.update(n_layers=2, local_global_pattern=1, sliding_window=6)
+    elif kind == "hybrid":
+        base.update(arch_type="hybrid", attn_every=2, n_layers=4,
+                    local_global_pattern=3, sliding_window=6,
+                    d_state=8, d_conv=3)
+    elif kind != "global":
+        raise ValueError(f"unknown kind {kind!r}")
+    cfg = ModelConfig(**base)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    _MODELS[key] = (cfg, params)
+    return cfg, params
+
+
+def serve(cfg, params, mesh, admission, budget, prompts, max_new):
+    eng = Engine(cfg, params, budget=budget, max_batch=4,
+                 kv_backend="paged", page_size=PAGE_SIZE,
+                 admission=admission, mesh=mesh)
+    for i, p in enumerate(prompts):
+        kw = {"deadline": 100.0 + i} if admission == "deadline" else {}
+        eng.submit(p, max_new, **kw)
+    done = eng.run()
+    toks = {r.request_id: r.tokens.tolist() for r in done}
+    # free-list conservation: every block is either free or referenced
+    # (the refcount array keeps its full size after plane detach — the
+    # planes themselves live in the decode state)
+    pool = eng.kv_store.pool
+    ref = np.asarray(pool.ref)
+    assert int(pool.n_free) + int((ref > 0).sum()) == ref.shape[0], \
+        f"free-list leak: n_free={int(pool.n_free)} " \
+        f"in_use={int((ref > 0).sum())} total={ref.shape[0]}"
+    per_dev = eng.kv_pool_bytes_per_device
+    eng.close()       # zero-leak shutdown audit (loud under sanitizer)
+    return toks, per_dev
+
+
+def run_case(case, mesh_shape):
+    kind = case["kind"]
+    admission = case["admission"]
+    compaction = case["compaction"]
+    # compaction=True: prompt + new tokens overflow the budget so prefill
+    # AND in-decode ladder compaction both fire (with the RoPE slot-delta
+    # fixup) under sharding
+    budget = 24 if compaction else 48
+    plen = 30 if compaction else 16
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 128, (plen - 4 * i,)).astype(np.int64)
+               for i in range(3)]
+    cfg, params = build_model(kind, budget)
+    single, single_bytes = serve(cfg, params, None, admission, budget,
+                                 prompts, 6)
+    mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+    sharded, shard_bytes = serve(cfg, params, mesh, admission, budget,
+                                 prompts, 6)
+    assert sharded == single, \
+        f"token mismatch [{kind}/{admission}/compaction={compaction}]: " \
+        f"{sharded} != {single}"
+    m = mesh_shape[1]
+    assert single_bytes == m * shard_bytes, \
+        f"per-device plane bytes {shard_bytes} != single {single_bytes}/{m}"
+    return {"kind": kind, "admission": admission, "compaction": compaction,
+            "tokens_match": True,
+            "bytes_per_device": {"single": single_bytes,
+                                 "sharded": shard_bytes}}
+
+
+def main():
+    spec = json.loads(sys.argv[1])
+    if spec.get("impl"):
+        os.environ["REPRO_KERNEL_IMPL"] = spec["impl"]
+    assert len(jax.devices()) >= 8, \
+        f"forced host device count did not take: {len(jax.devices())}"
+    results = [run_case(c, spec.get("mesh", [4, 2]))
+               for c in spec["cases"]]
+    print(json.dumps({"ok": True, "cases": results}))
+
+
+if __name__ == "__main__":
+    main()

@@ -58,7 +58,7 @@ from repro.core.cache import MambaState
 from repro.core.policy import policy_names
 from repro.models import layers as L
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, SamplingParams
 from repro.serving.speculative import SpecConfig
 
 # snapshot at collection: the harness must cover every registered policy
@@ -613,6 +613,70 @@ def test_spec_draft_refcount_conservation(small_model):
     assert int((ref > 0).sum()) == lanes
 
 
+def test_spec_stochastic_mix_resumes_waves(small_model):
+    """Satellite: one stochastic request among greedy lanes forces the
+    whole-batch stepwise fallback only while it is actually RUNNING —
+    after it retires, waves resume on the remaining greedy lanes — and
+    every stream (including the sampled one) matches the non-spec engine
+    token-for-token (the verify gate makes waves semantically invisible;
+    the sampled lane always decodes stepwise)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(47)
+    prompts = [rng.integers(0, cfg.vocab_size, (10 + 2 * i,))
+               for i in range(3)]
+
+    def serve(spec):
+        eng = Engine(cfg, params, budget=48, max_batch=4,
+                     kv_backend="paged",
+                     spec_config=SpecConfig(k=3) if spec else None)
+        reqs = [eng.submit(prompts[0], 4,
+                           SamplingParams(temperature=0.9, top_k=16,
+                                          seed=9))]
+        reqs += [eng.submit(p, 14) for p in prompts[1:]]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    _, base_toks = serve(spec=False)
+    eng, spec_toks = serve(spec=True)
+    for b, s in zip(base_toks, spec_toks):
+        np.testing.assert_array_equal(s, b)
+    st = eng.spec_stats
+    # the stochastic lane forced fallbacks AND waves still ran after it
+    # retired — the old whole-batch invalidate permanently taxed this mix
+    assert st["fallback_steps"] > 0
+    assert st["waves"] > 0
+
+
+def test_spec_fallback_keeps_draft_fork_alive(small_model):
+    """Satellite: a stepwise fallback no longer kills the persistent
+    draft. Under compaction pressure the headroom gate flips between
+    waves and stepwise ticks; the draft must survive every flip (exactly
+    one fork for the whole single-request serve) with the lag replayed
+    through catch-up steps — while staying token-for-token with the
+    non-spec engine."""
+    cfg, params = small_model
+    c = with_policy(cfg, "lacache", 24)
+    rng = np.random.default_rng(48)
+    prompt = rng.integers(0, cfg.vocab_size, (30,))
+
+    def serve(spec):
+        eng = Engine(c, params, budget=24, max_batch=1, kv_backend="paged",
+                     spec_config=SpecConfig(k=2) if spec else None)
+        req = eng.submit(prompt, 12)
+        eng.run()
+        return eng, req.tokens
+
+    _, base_toks = serve(spec=False)
+    eng, spec_toks = serve(spec=True)
+    np.testing.assert_array_equal(spec_toks, base_toks)
+    st = eng.spec_stats
+    assert st["waves"] > 0 and st["fallback_steps"] > 0, \
+        "scenario must exercise both wave and fallback ticks"
+    assert st["catchup_steps"] > 0      # the lag replay actually ran
+    assert st["forks"] == 1, \
+        f"draft re-forked {st['forks']}x: a fallback invalidated it"
+
+
 def test_spec_rng_first_token_regression(small_model):
     """Satellite: stochastic ``generate`` must split the PRNG key before
     the FIRST sample — a 1-token run and a longer run agree on token 0
@@ -655,6 +719,39 @@ def test_prewarm_engine_matches_cold(small_model):
         return [r.tokens for r in reqs]
 
     for c, w in zip(serve(False), serve(True)):
+        np.testing.assert_array_equal(w, c)
+
+
+def test_prewarm_prefill_ladder_matches_cold(small_model):
+    """Satellite: with bucketed prefill, ``prewarm=True`` walks the whole
+    prefill bucket ladder (plus the page-in splice) at construction — the
+    former wave-1 compile soft spot — without perturbing tokens, and
+    wave 1 then dispatches only shapes the ladder already compiled."""
+    cfg, params = small_model
+    rng = np.random.default_rng(49)
+    prompts = [rng.integers(0, cfg.vocab_size, (9 + 7 * i,))
+               for i in range(3)]
+
+    def serve(prewarm, prewarm_prefill=True):
+        eng = Engine(cfg, params, budget=48, max_batch=2,
+                     kv_backend="paged", bucket_prefill=True, min_bucket=8,
+                     prewarm=prewarm, prewarm_prefill=prewarm_prefill)
+        reqs = [eng.submit(p, 6) for p in prompts]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    _, cold = serve(False)
+    eng, warm = serve(True)
+    for c, w in zip(cold, warm):
+        np.testing.assert_array_equal(w, c)
+    # every wave-1 prefill dispatch landed in a power-of-two bucket the
+    # ladder covers (>= min_bucket, <= the warmed top)
+    for kind, shape in eng.prefill_shapes:
+        if kind == "prefill":
+            assert shape >= 8 and (shape & (shape - 1)) == 0
+    # prewarm_prefill=False preserves the old decode-only warm scope
+    _, noladder = serve(True, prewarm_prefill=False)
+    for c, w in zip(cold, noladder):
         np.testing.assert_array_equal(w, c)
 
 

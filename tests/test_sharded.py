@@ -1,0 +1,163 @@
+"""In-process unit tests for the sharded-pool plumbing (mesh/shard lane).
+
+The heavy token-parity sweep lives in ``test_sharded_differential.py``
+(it needs the forced 8-way host device count). Everything here runs on
+whatever devices exist: the KV-rule spec selection, the loud
+non-divisible ValueError (satellite: ``_safe``'s silent replication is
+params-only), Engine construction-time validation, the degenerate 1x1
+mesh (sharding machinery engaged, single device — still token-exact),
+and the ``--mesh`` launcher parser.
+"""
+import dataclasses
+import types
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LaCacheConfig, ModelConfig
+from repro.kernels.pool_mesh import (PoolMeshSpec, current_pool_mesh,
+                                     use_pool_mesh)
+from repro.launch import sharding as shardlib
+from repro.launch.mesh import make_serving_mesh
+from repro.models import model as M
+from repro.serving.engine import Engine
+
+
+def _stub_mesh(data=1, model=1):
+    """pool_plane_spec and friends only read ``dict(mesh.shape)``, so a
+    namespace stands in for a jax Mesh without touching device state."""
+    return types.SimpleNamespace(shape={"data": data, "model": model})
+
+
+def _cfg(n_kv_heads=2, budget=48):
+    return ModelConfig(
+        name="t", arch_type="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=n_kv_heads, d_ff=128, vocab_size=128, head_dim=16,
+        dtype="float32",
+        lacache=LaCacheConfig(budget=budget, n_sink=2, n_recent=8, chunk=2))
+
+
+# --------------------------------------------------------------------- #
+# KV rule -> plane spec selection
+# --------------------------------------------------------------------- #
+def test_pool_plane_spec_mesh_kv_rule():
+    cfg = _cfg(n_kv_heads=4)
+    # kv-heads divide the model axis: shard the kv-head axis (bitwise
+    # clean, no collective)
+    assert shardlib.pool_plane_spec(_stub_mesh(model=2), cfg,
+                                    page_size=16) \
+        == P(None, None, "model", None)
+    # kv-heads don't divide but page_size does: shard in-block slots
+    assert shardlib.pool_plane_spec(_stub_mesh(model=8), cfg,
+                                    page_size=16) \
+        == P(None, "model", None, None)
+    # degenerate model axis: replicated planes (single-device routing)
+    assert shardlib.pool_plane_spec(_stub_mesh(model=1), cfg,
+                                    page_size=16) \
+        == P(None, None, None, None)
+
+
+def test_pool_plane_spec_loud_error_names_mesh_axis():
+    """Satellite: non-dividing pool planes must be a loud ValueError that
+    names the axis and suggests a divisible page_size/kv_heads pairing —
+    never the silent replication ``_safe`` applies to params."""
+    cfg = _cfg(n_kv_heads=3)
+    with pytest.raises(ValueError) as ei:
+        shardlib.pool_plane_spec(_stub_mesh(model=4), cfg, page_size=10)
+    msg = str(ei.value)
+    assert "'model'" in msg and "kv_heads=3" in msg and "page_size=10" in msg
+    # the suggested pairings are the nearest divisible round-ups
+    assert "page_size=12" in msg and "kv_heads=4" in msg
+    assert "replication" in msg.lower()
+
+
+def test_paged_pool_mesh_spec_lane_axis_shards_data_mesh():
+    cfg = _cfg(n_kv_heads=4)
+    pm = shardlib.paged_pool_mesh_spec(_stub_mesh(data=4, model=2), cfg,
+                                       page_size=16, max_batch=8)
+    assert pm.kv_axis == "model" and pm.slot_axis is None
+    assert pm.lane_axis == "data" and pm.sharded
+    # max_batch not divisible by data: lanes replicate (small metadata),
+    # planes still shard
+    pm = shardlib.paged_pool_mesh_spec(_stub_mesh(data=3, model=2), cfg,
+                                       page_size=16, max_batch=8)
+    assert pm.lane_axis is None and pm.kv_axis == "model"
+
+
+def test_pool_mesh_registry_is_scoped_shard_dispatch():
+    assert current_pool_mesh() is None
+    spec = PoolMeshSpec(mesh=None, kv_axis="model")
+    with use_pool_mesh(spec):
+        assert current_pool_mesh() is spec
+        inner = PoolMeshSpec(mesh=None, slot_axis="model")
+        with use_pool_mesh(inner):
+            assert current_pool_mesh() is inner
+        assert current_pool_mesh() is spec
+    assert current_pool_mesh() is None
+    assert not PoolMeshSpec(mesh=None).sharded
+
+
+# --------------------------------------------------------------------- #
+# Engine construction-time validation
+# --------------------------------------------------------------------- #
+def test_engine_mesh_requires_paged_backend():
+    cfg = _cfg()
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_backend='paged'"):
+        Engine(cfg, params, budget=48, mesh=_stub_mesh(model=2))
+
+
+def test_engine_mesh_rejects_store_backed_fallback_archs():
+    cfg = _cfg()
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    ineligible = dataclasses.replace(cfg, cross_attention=True)
+    assert not M.paged_decode_eligible(ineligible)
+    with pytest.raises(ValueError, match="in-model paged decode"):
+        Engine(ineligible, params, budget=48, kv_backend="paged",
+               mesh=_stub_mesh(model=2))
+
+
+def test_engine_mesh_nondivisible_raises_at_construction():
+    cfg = _cfg(n_kv_heads=3)
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="divisible"):
+        Engine(cfg, params, budget=48, kv_backend="paged", page_size=10,
+               mesh=_stub_mesh(model=4))
+
+
+def test_engine_degenerate_mesh_single_device_token_exact():
+    """A real 1x1 mesh engages the whole placement path (NamedSharding
+    plane placement, state device_put, jit wrappers) without requiring
+    more than one device; tokens must match the mesh-free engine."""
+    cfg = _cfg()
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(5).integers(0, cfg.vocab_size, (3, 18))
+
+    def serve(mesh):
+        eng = Engine(cfg, params, budget=48, max_batch=4,
+                     kv_backend="paged", page_size=8, mesh=mesh)
+        for p in prompts:
+            eng.submit(p, 6)
+        done = eng.run()
+        toks = [r.tokens.tolist() for r in done]
+        eng.close()
+        return toks
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert serve(mesh) == serve(None)
+
+
+# --------------------------------------------------------------------- #
+# --mesh launcher parsing
+# --------------------------------------------------------------------- #
+def test_make_serving_mesh_validates_spec():
+    for bad in ("4", "4x", "x2", "ax2", "4x2x1", "0x2"):
+        with pytest.raises(ValueError):
+            make_serving_mesh(bad)
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        make_serving_mesh(f"{n + 1}x1")
+    mesh = make_serving_mesh(f"{n}x1")
+    assert dict(mesh.shape) == {"data": n, "model": 1}

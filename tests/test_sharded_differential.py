@@ -1,0 +1,107 @@
+"""Differential leg (g): sharded paged serving == single-device paged.
+
+The forced host device count (``--xla_force_host_platform_device_count=8``)
+must be set before jax initializes its backends, so these tests exec
+``tests/sharded_worker.py`` in a fresh interpreter — EXCEPT when the
+current process already sees >= 8 devices (the CI mesh lane exports the
+flag), in which case the worker module runs in-process and the sweep
+shares this process's jit caches.
+
+The worker runs both engines of every case in one process and asserts:
+
+* token-for-token parity (kv-head-sharded planes are bitwise clean — each
+  shard computes its own query-head group end to end),
+* free-list conservation mid-serve (every block free or referenced),
+* a zero-leak ``close()`` (the shutdown audit runs in every case; the
+  dedicated sanitizer case re-runs one config with ``REPRO_SANITIZE=1``
+  so a violation reports per-block allocation sites),
+* per-device plane bytes exactly 1/model-axis of the single-device pool.
+
+Fast lane: one config each for the XLA and Pallas (shard_map) kernel
+routes. The slow leg sweeps the full {fifo,deadline} x
+{global,ring,hybrid} x {compaction on,off} matrix.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER = os.path.join(REPO, "tests", "sharded_worker.py")
+MESH = [4, 2]
+
+
+def _run_worker(cases, *, impl=None, env_extra=None, timeout=1200):
+    """Run the leg-(g) worker over ``cases``; in-process when this
+    process already has the forced device count (CI mesh lane)."""
+    spec = {"cases": cases, "mesh": MESH, "impl": impl}
+    if (env_extra is None and impl is None
+            and len(jax.devices()) >= MESH[0] * MESH[1]):
+        sys.path.insert(0, os.path.dirname(WORKER))
+        try:
+            import sharded_worker
+            return {"ok": True,
+                    "cases": [sharded_worker.run_case(c, MESH)
+                              for c in cases]}
+        finally:
+            sys.path.pop(0)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)      # the worker sets the device count
+    env.update(env_extra or {})
+    out = subprocess.run(
+        [sys.executable, WORKER, json.dumps(spec)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    assert out.returncode == 0, \
+        f"worker failed:\nstdout: {out.stdout}\nstderr: {out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_differential_fast_mesh_leg():
+    """(g) fast: one representative config through the XLA route, plus
+    free-list conservation and the 1/model per-device plane footprint
+    (asserted inside the worker)."""
+    res = _run_worker([{"kind": "global", "admission": "fifo",
+                        "compaction": True}])
+    assert res["ok"] and res["cases"][0]["tokens_match"]
+    b = res["cases"][0]["bytes_per_device"]
+    assert b["sharded"] * MESH[1] == b["single"]
+
+
+def test_sharded_pallas_shard_map_mesh_smoke():
+    """(g) the Pallas kernel route: shard_map carries the scalar-prefetch
+    paged kernel per shard; still token-for-token vs single-device."""
+    res = _run_worker([{"kind": "global", "admission": "fifo",
+                        "compaction": True}], impl="pallas")
+    assert res["ok"] and res["cases"][0]["tokens_match"]
+
+
+def test_sharded_sanitizer_zero_leak_close_mesh():
+    """(g) REPRO_SANITIZE=1 on a mesh engine: lane lifecycle checks every
+    tick plus the shutdown audit with per-block allocation sites — close()
+    must drain the pool to exactly the lane-owned reserve."""
+    res = _run_worker([{"kind": "hybrid", "admission": "fifo",
+                        "compaction": True}],
+                      env_extra={"REPRO_SANITIZE": "1"})
+    assert res["ok"] and res["cases"][0]["tokens_match"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("compaction", [False, True],
+                         ids=["no-compaction", "compaction"])
+@pytest.mark.parametrize("admission", ["fifo", "deadline"])
+def test_sharded_differential_full_mesh_matrix(admission, compaction):
+    """(g) full: {fifo,deadline} x {global,ring,hybrid} x compaction
+    on/off — sharded == single-device token-for-token everywhere. One
+    worker invocation per (admission, compaction) cell batches the three
+    architectures to amortize interpreter + compile startup."""
+    cases = [{"kind": kind, "admission": admission, "compaction": compaction}
+             for kind in ("global", "ring", "hybrid")]
+    res = _run_worker(cases)
+    assert res["ok"]
+    assert all(c["tokens_match"] for c in res["cases"])
