@@ -69,7 +69,7 @@ def prefix_reuse(cfg, params, budget=96, n_requests=6, prefix_len=192,
 
 
 def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
-                   tail_len=16, max_new=8):
+                   tail_len=13, max_new=8):
     """Shared-prefix traffic served by the dense vs the paged KV backend.
 
     Same requests, same prompt cache semantics; the paged backend decodes
@@ -95,8 +95,13 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
     single prefill compile while the ladder warms every bucket up front —
     the delta prices that insurance (it can go negative here; the ladder
     pays off on mixed-length traffic, where each distinct bucket would
-    otherwise spike a later request's TTFT). Machine-readable trajectory
-    in ``results/BENCH_paged.json``.
+    otherwise spike a later request's TTFT). The default ``tail_len`` is
+    deliberately ragged (192 + 13 = 205 = 6*32 + 13): the greedy chunk
+    splitter then emits 8/4/1-wide tail dispatches inside wave 1, the
+    widths the prewarm chunk ladder used to skip — so the first-wave and
+    compile-inclusive numbers now exercise the full warmed ladder
+    (``prewarmed_chunk_widths`` in the bench artifact records it).
+    Machine-readable trajectory in ``results/BENCH_paged.json``.
     """
     c = common.with_policy(cfg, "lacache", budget)
     co = common.corpus()
@@ -166,6 +171,8 @@ def paged_vs_dense(cfg, params, budget=96, n_requests=6, prefix_len=192,
         "tok_per_s_paged_first_wave_noprefill": nopre_first,
         "tok_per_s_paged_incl_compile_noprefill": nopre_cold,
         "prefill_prewarm_delta_tok_per_s": paged_cold - nopre_cold,
+        "prewarmed_chunk_widths": paged_eng.prewarmed_chunk_widths,
+        "prewarmed_prefill_buckets": paged_eng.prewarmed_prefill_buckets,
         "peak_kv_bytes_dense": dense_eng.prefix_cache.peak_bytes,
         "peak_kv_bytes_paged": paged_eng.prefix_cache.peak_bytes,
         "bytes_shared": paged_eng.bytes_shared,
@@ -378,7 +385,8 @@ def main(quick: bool = False):
           f"prefill ladder cold: "
           f"{pd['tok_per_s_paged_incl_compile_noprefill']:.1f} incl. "
           f"compile, delta "
-          f"{pd['prefill_prewarm_delta_tok_per_s']:+.1f})")
+          f"{pd['prefill_prewarm_delta_tok_per_s']:+.1f}; "
+          f"warmed chunk widths {pd['prewarmed_chunk_widths']})")
     # machine-readable perf trajectory: tok/s + peak KV bytes per backend,
     # so paged regressions are tracked across PRs instead of rediscovered
     common.write_bench("paged", {
@@ -398,6 +406,8 @@ def main(quick: bool = False):
                 pd["tok_per_s_paged_incl_compile_noprefill"]},
         "prefill_prewarm_delta_tok_per_s":
             pd["prefill_prewarm_delta_tok_per_s"],
+        "prewarmed_chunk_widths": pd["prewarmed_chunk_widths"],
+        "prewarmed_prefill_buckets": pd["prewarmed_prefill_buckets"],
         "peak_kv_bytes": {"dense": pd["peak_kv_bytes_dense"],
                           "paged": pd["peak_kv_bytes_paged"]},
         "paged_over_dense_tok_per_s":

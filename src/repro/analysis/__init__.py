@@ -1,7 +1,10 @@
 """repro.analysis: invariant lints + runtime sanitizer for the serving stack.
 
-Three AST/call-graph passes enforce contracts the paged serving stack
-(PRs 3-5) relies on but no generic tool checks:
+Six passes run as visitors over one shared analysis IR
+(:mod:`repro.analysis.ir` — a single parse, symbol tables, the
+jit/shard_map call graph with traced regions, per-function linear
+dataflow facts) and enforce contracts the paged serving stack (PRs 3-8)
+relies on but no generic tool checks:
 
 * trace-purity (TRC001/TRC002/TRC003): no eager pool operations, host
   ``np.*`` compute, environment reads, or host-state mutation reachable
@@ -14,13 +17,30 @@ Three AST/call-graph passes enforce contracts the paged serving stack
 * pytree-registration (PYT001/PYT002): dataclasses constructed under
   trace must be registered pytrees, and registered aux/meta data must be
   hashable static metadata, never arrays.
+* sharding-discipline (SHD001/SHD002/SHD003): collectives only fire
+  inside a ``shard_map``/``pmap`` whose mesh declares the named axis;
+  thread-local mesh registries publish only with a guaranteed scoped
+  reset; ``NamedSharding`` / ``pool_plane_spec`` axis names must exist
+  on the mesh in scope.
+* recompile-churn (CMP001/CMP002/CMP003): jit dispatches fed
+  loop-varying shapes/static values (one executable per distinct
+  value), dynamically built ``**kwargs`` reaching traced signatures,
+  and data-dependent concretization (``.item()`` / ``int(computed)``)
+  under trace.
+* observability-purity (OBS001/OBS002): MetricsRegistry/Tracer calls
+  must stay outside traced regions, and keyed tracer ``begin`` spans
+  must pair with an ``end``/``discard`` somewhere on the analyzed
+  engine paths.
 
 Run ``python -m repro.analysis [--fail-on-warn] PATH...`` or call
-:func:`run_paths` directly. Intentional eager/trace boundaries are
-annotated in source with ``# analysis: allow(RULE)`` on the flagged line
-or the line above.
+:func:`run_paths` directly. ``--format json|sarif`` emits machine
+output (SARIF 2.1.0 for CI annotation upload); ``--baseline FILE``
+subtracts a reviewed baseline of line-hash fingerprints, letting the
+gate extend over ``tests/`` and ``benchmarks/`` without freezing their
+churn. Intentional boundaries are annotated in source with
+``# analysis: allow(RULE)`` on the flagged line or the line above.
 
-The fourth component, :mod:`repro.analysis.sanitizer`, is a *runtime*
+The runtime component, :mod:`repro.analysis.sanitizer`, is a *runtime*
 shadow allocator enabled by ``REPRO_SANITIZE=1`` (see its docstring); it
 is imported lazily by ``repro.core.paged`` and never by the lint CLI.
 """

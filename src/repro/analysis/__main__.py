@@ -1,15 +1,94 @@
 """CLI: ``python -m repro.analysis [--fail-on-warn] PATH...``.
 
-Prints one ``path:line: RULE: message`` per finding (stable order), a
-summary line, and exits 1 under ``--fail-on-warn`` when anything fired.
-``--rules TRC`` restricts to rule-ID prefixes (comma separated).
+Text mode prints one ``path:line: RULE: message`` per finding (stable
+order) and a summary line with a per-family breakdown; exits 1 under
+``--fail-on-warn`` when anything fired. ``--rules TRC`` restricts to
+rule-ID prefixes (comma separated) — the filter applies to findings,
+``--list-rules``, and the summary alike.
+
+``--format json|sarif`` emits machine-readable output on stdout (the
+summary moves to stderr so the document stays parseable); SARIF is
+2.1.0, one run, with the (filtered) rule catalogue in
+``tool.driver.rules`` — feed it to CI code-scanning upload.
+
+``--baseline FILE`` drops findings whose fingerprint a reviewed
+baseline covers (rule + path relative to the baseline file + hash of
+the flagged line's text, so unrelated line drift doesn't invalidate
+it); ``--write-baseline`` refreshes the file from the current finding
+set instead of reporting.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from pathlib import Path
 
-from repro.analysis.common import RULES, run_paths
+from repro.analysis.common import (RULES, apply_baseline, family_counts,
+                                   load_baseline, rel_path, run_paths,
+                                   write_baseline)
+
+#: SARIF 2.1.0 document header
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/"
+                "sarif-spec/master/Schemata/sarif-schema-2.1.0.json")
+
+
+def _summary(findings) -> str:
+    n = len(findings)
+    line = f"repro.analysis: {n} finding{'s' if n != 1 else ''}"
+    fams = family_counts(findings)
+    if fams:
+        line += " (" + ", ".join(f"{fam} {c}" for fam, c in fams.items()) \
+                + ")"
+    return line
+
+
+def to_sarif(findings, rule_ids, root=None) -> dict:
+    """SARIF 2.1.0 document: one run, the rule catalogue restricted to
+    ``rule_ids``, one result per finding with a file/line location."""
+    return {
+        "version": SARIF_VERSION,
+        "$schema": SARIF_SCHEMA,
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri":
+                    "https://example.invalid/repro/docs/API.md",
+                "rules": [{
+                    "id": rid,
+                    "shortDescription": {"text": RULES[rid]},
+                    "defaultConfiguration": {"level": "warning"},
+                } for rid in sorted(rule_ids)],
+            }},
+            "results": [{
+                "ruleId": f.rule,
+                "level": "warning",
+                "message": {"text": f.message},
+                "locations": [{
+                    "physicalLocation": {
+                        "artifactLocation": {
+                            "uri": rel_path(f.path, root)},
+                        "region": {"startLine": f.line},
+                    },
+                }],
+            } for f in findings],
+        }],
+    }
+
+
+def to_json(findings, root=None) -> dict:
+    return {
+        "tool": "repro.analysis",
+        "schema_version": 1,
+        "findings": [{
+            "path": rel_path(f.path, root),
+            "line": f.line,
+            "rule": f.rule,
+            "message": f.message,
+        } for f in findings],
+        "counts": family_counts(findings),
+    }
 
 
 def main(argv=None) -> int:
@@ -17,8 +96,9 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="Invariant lints for the repro serving stack "
                     "(trace purity, donation discipline, pytree "
-                    "registration).")
-    ap.add_argument("paths", nargs="+",
+                    "registration, sharding discipline, recompile "
+                    "churn, observability purity).")
+    ap.add_argument("paths", nargs="*",
                     help="files or directories to analyze")
     ap.add_argument("--fail-on-warn", action="store_true",
                     help="exit 1 if any finding is reported")
@@ -26,21 +106,71 @@ def main(argv=None) -> int:
                     help="comma-separated rule-ID prefixes to keep "
                          "(e.g. 'TRC001,DON')")
     ap.add_argument("--list-rules", action="store_true",
-                    help="print the rule catalogue and exit")
+                    help="print the rule catalogue (honors --rules) "
+                         "and exit")
+    ap.add_argument("--format", default="text",
+                    choices=("text", "json", "sarif"),
+                    help="output format (json/sarif print the document "
+                         "on stdout, the summary on stderr)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="reviewed-baseline file: findings it "
+                         "fingerprints are not reported")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline from the current findings "
+                         "instead of reporting them")
     args = ap.parse_args(argv)
-
-    if args.list_rules:
-        for rule, desc in sorted(RULES.items()):
-            print(f"{rule}: {desc}")
-        return 0
 
     rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
              if args.rules else None)
+
+    if args.list_rules:
+        keep = tuple(rules) if rules else None
+        listed = {rid: desc for rid, desc in sorted(RULES.items())
+                  if keep is None or rid.startswith(keep)}
+        for rid, desc in listed.items():
+            print(f"{rid}: {desc}")
+        fams: dict = {}
+        for rid in listed:
+            fams[rid[:3]] = fams.get(rid[:3], 0) + 1
+        print(f"{len(listed)} rule{'s' if len(listed) != 1 else ''}"
+              + (" (" + ", ".join(f"{fam} {c}"
+                                  for fam, c in sorted(fams.items()))
+                 + ")" if fams else ""))
+        return 0
+
+    if not args.paths:
+        ap.error("at least one PATH is required (or --list-rules)")
+    if args.write_baseline and not args.baseline:
+        ap.error("--write-baseline requires --baseline FILE")
+
     findings = run_paths(args.paths, rules=rules)
-    for f in findings:
-        print(f.render())
-    n = len(findings)
-    print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}")
+
+    baseline_path = Path(args.baseline) if args.baseline else None
+    baseline_root = (baseline_path.resolve().parent
+                     if baseline_path else None)
+    if baseline_path and args.write_baseline:
+        write_baseline(baseline_path, findings, root=baseline_root)
+        print(f"repro.analysis: baseline written to {baseline_path} "
+              f"({len(findings)} fingerprint"
+              f"{'s' if len(findings) != 1 else ''})")
+        return 0
+    if baseline_path and baseline_path.exists():
+        findings = apply_baseline(findings, load_baseline(baseline_path),
+                                  root=baseline_root)
+
+    keep = tuple(rules) if rules else None
+    rule_ids = [rid for rid in RULES
+                if keep is None or rid.startswith(keep)]
+    if args.format == "sarif":
+        print(json.dumps(to_sarif(findings, rule_ids), indent=1))
+        print(_summary(findings), file=sys.stderr)
+    elif args.format == "json":
+        print(json.dumps(to_json(findings), indent=1))
+        print(_summary(findings), file=sys.stderr)
+    else:
+        for f in findings:
+            print(f.render())
+        print(_summary(findings))
     return 1 if (findings and args.fail_on_warn) else 0
 
 

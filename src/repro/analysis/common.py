@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import hashlib
+import json
 import re
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set
@@ -22,6 +24,21 @@ RULES = {
     "DON002": "donation of a value held elsewhere by reference",
     "PYT001": "unregistered dataclass constructed under trace",
     "PYT002": "pytree aux/meta data contains array fields",
+    "SHD001": "collective outside shard_map scope or on an undeclared "
+              "mesh axis",
+    "SHD002": "thread-local registry published without a guaranteed "
+              "scoped reset",
+    "SHD003": "NamedSharding/pool_plane_spec axis name absent from the "
+              "mesh",
+    "CMP001": "jit dispatch fed a per-call-varying Python scalar/shape "
+              "without static_argnums",
+    "CMP002": "unstable dict/kwarg expansion reaching a traced "
+              "signature",
+    "CMP003": "data-dependent shape construction / concretization under "
+              "trace",
+    "OBS001": "MetricsRegistry/Tracer call reachable from a traced "
+              "region",
+    "OBS002": "unbalanced keyed tracer begin/end span pair",
 }
 
 
@@ -111,30 +128,106 @@ def run_paths(paths: Sequence[str],
               rules: Optional[Sequence[str]] = None) -> List[Finding]:
     """Run every lint pass over ``paths`` (files or directories).
 
-    Returns findings sorted by (path, line, rule), with ``# analysis:
-    allow(...)`` suppressions already applied. ``rules`` optionally
-    restricts to a subset of rule IDs (prefix match, so ``["TRC"]`` means
-    all trace-purity rules).
+    Builds the shared analysis IR (:mod:`repro.analysis.ir`) once —
+    parse, symbol tables, call graph, traced regions, dataflow facts —
+    and runs each pass as a visitor over it. Returns findings sorted by
+    (path, line, rule), with ``# analysis: allow(...)`` suppressions
+    already applied. ``rules`` optionally restricts to a subset of rule
+    IDs (prefix match, so ``["TRC"]`` means all trace-purity rules).
     """
-    from repro.analysis import donation, pytree, trace_purity
-    from repro.analysis.callgraph import Index
+    from repro.analysis import (donation, obs_purity, pytree, recompile,
+                                sharding_discipline, trace_purity)
+    from repro.analysis.ir import IR
 
     files = discover_files(paths)
-    index = Index.build(files)
+    an_ir = IR.build(files)
     findings: List[Finding] = []
-    findings += trace_purity.run(index)
-    findings += donation.run(index)
-    findings += pytree.run(index)
+    findings += trace_purity.run(an_ir)
+    findings += donation.run(an_ir)
+    findings += pytree.run(an_ir)
+    findings += sharding_discipline.run(an_ir)
+    findings += recompile.run(an_ir)
+    findings += obs_purity.run(an_ir)
     if rules is not None:
         keep = tuple(rules)
         findings = [f for f in findings if f.rule.startswith(keep)]
     out = []
     for f in findings:
-        mi = index.by_path.get(f.path)
+        mi = an_ir.index.by_path.get(f.path)
         if mi is not None and is_allowed(mi.allows, f.rule, f.line):
             continue
         out.append(f)
     return sorted(set(out))
+
+
+def family_counts(findings: Sequence[Finding]) -> Dict[str, int]:
+    """Findings per rule family (``{"TRC": 3, "CMP": 1}``), sorted by
+    family name — the summary-line / ``--list-rules`` breakdown."""
+    out: Dict[str, int] = {}
+    for f in findings:
+        fam = f.rule[:3]
+        out[fam] = out.get(fam, 0) + 1
+    return dict(sorted(out.items()))
+
+
+# --------------------------------------------------------------------------- #
+# baseline file: reviewed pre-existing findings the gate tolerates
+# --------------------------------------------------------------------------- #
+def finding_fingerprint(f: Finding, root: Optional[Path] = None) -> str:
+    """Stable fingerprint for baselining: rule + repo-relative path +
+    hash of the *stripped source line text*, so reflowing unrelated code
+    (line drift) does not invalidate the baseline while editing the
+    flagged line itself does."""
+    try:
+        text = Path(f.path).read_text().splitlines()[f.line - 1].strip()
+    except (OSError, IndexError):
+        text = ""
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return f"{f.rule}:{rel_path(f.path, root)}:{digest}"
+
+
+def rel_path(path: str, root: Optional[Path] = None) -> str:
+    """Path relative to ``root`` (default cwd) with ``/`` separators, or
+    the absolute path when outside the root."""
+    p = Path(path)
+    base = root if root is not None else Path.cwd()
+    try:
+        return p.resolve().relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def load_baseline(path: Path) -> Set[str]:
+    """Fingerprint set from a baseline file written by
+    :func:`write_baseline`."""
+    data = json.loads(path.read_text())
+    return set(data.get("fingerprints", []))
+
+
+def write_baseline(path: Path, findings: Sequence[Finding],
+                   root: Optional[Path] = None) -> None:
+    """Persist the current finding set as the reviewed baseline. Each
+    entry keeps a human-readable ``note`` beside the fingerprint so the
+    file reviews like a findings list, but only ``fingerprints`` is
+    load-bearing."""
+    root = root if root is not None else path.resolve().parent
+    entries = sorted(
+        {finding_fingerprint(f, root): f"{rel_path(f.path, root)}:"
+                                       f"{f.line}: {f.rule}"
+         for f in findings}.items())
+    path.write_text(json.dumps({
+        "schema_version": 1,
+        "tool": "repro.analysis",
+        "fingerprints": [fp for fp, _ in entries],
+        "notes": {fp: note for fp, note in entries},
+    }, indent=1) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding], fingerprints: Set[str],
+                   root: Optional[Path] = None) -> List[Finding]:
+    """Drop findings whose fingerprint the reviewed baseline covers."""
+    return [f for f in findings
+            if finding_fingerprint(f, root) not in fingerprints]
 
 
 def parse_file(path: Path) -> Optional[ast.Module]:

@@ -17,18 +17,21 @@ DON002
     caveat) and ``kv_store.get(...)`` gathers that a snapshot still
     references. Donating one corrupts every other holder.
 
-The pass is intra-procedural: donation sites are jit dispatches bound to
-``self._name`` / module globals / ``@partial(jax.jit, ...)`` defs, plus
-local aliases of those (including conditional aliases — an alias donates
-if *any* branch donates).
+The pass is intra-procedural and runs over the shared analysis IR:
+dispatch handles come from :meth:`repro.analysis.ir.IR.handles` (which
+collects every jit binding — ``self._name`` attrs, module globals,
+``@partial(jax.jit, ...)`` defs — with their donate/static declarations),
+ordered loads/stores from :meth:`repro.analysis.ir.IR.facts`. Local
+aliases of handles resolve too, including conditional aliases — an alias
+donates if *any* branch donates.
 """
 from __future__ import annotations
 
 import ast
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.analysis import callgraph as cg
+from repro.analysis import ir
 from repro.analysis.common import Finding
 
 #: attribute tails whose call results are held by reference elsewhere and
@@ -41,143 +44,6 @@ _NO_DONATE_SOURCES: Tuple[Tuple[str, str], ...] = (
 Path = Tuple[str, ...]
 
 
-@dataclasses.dataclass
-class DonSpec:
-    """What one donating jit donates."""
-
-    argnums: Set[int] = dataclasses.field(default_factory=set)
-    argnames: Set[str] = dataclasses.field(default_factory=set)
-    #: positional parameter names of the wrapped callable (partial-bound
-    #: keywords removed), for positional matching of donate_argnames
-    params: Optional[List[str]] = None
-    site_line: int = 0
-
-    def merged(self, other: "DonSpec") -> "DonSpec":
-        return DonSpec(self.argnums | other.argnums,
-                       self.argnames | other.argnames,
-                       self.params or other.params, self.site_line)
-
-
-def _literal_ints(node: ast.AST) -> Set[int]:
-    if isinstance(node, ast.Constant) and isinstance(node.value, int):
-        return {node.value}
-    if isinstance(node, (ast.Tuple, ast.List)):
-        return {e.value for e in node.elts
-                if isinstance(e, ast.Constant)
-                and isinstance(e.value, int)}
-    return set()
-
-
-def _literal_strs(node: ast.AST) -> Set[str]:
-    if isinstance(node, ast.Constant) and isinstance(node.value, str):
-        return {node.value}
-    if isinstance(node, (ast.Tuple, ast.List)):
-        return {e.value for e in node.elts
-                if isinstance(e, ast.Constant)
-                and isinstance(e.value, str)}
-    return set()
-
-
-def _jit_donation(index: cg.Index, mi: cg.ModuleInfo,
-                  cls: Optional[str], call: ast.Call) -> Optional[DonSpec]:
-    """DonSpec if ``call`` is ``jax.jit(..., donate_*)``, else None."""
-    hit = index.jax_wrapper(mi, call)
-    if hit is None or hit[0] != "jit":
-        return None
-    spec = DonSpec(site_line=call.lineno)
-    for kw in call.keywords:
-        if kw.arg == "donate_argnums":
-            spec.argnums |= _literal_ints(kw.value)
-        elif kw.arg == "donate_argnames":
-            spec.argnames |= _literal_strs(kw.value)
-    if not spec.argnums and not spec.argnames:
-        return None
-    spec.params = _wrapped_params(index, mi, cls, call.args[0]) \
-        if call.args else None
-    return spec
-
-
-def _wrapped_params(index: cg.Index, mi: cg.ModuleInfo,
-                    cls: Optional[str],
-                    expr: ast.AST) -> Optional[List[str]]:
-    """Positional parameter names of the jitted callable, unwrapping
-    ``functools.partial`` keyword bindings."""
-    bound_kw: Set[str] = set()
-    while isinstance(expr, ast.Call) \
-            and cg.terminal_name(expr.func) == "partial" and expr.args:
-        bound_kw |= {kw.arg for kw in expr.keywords if kw.arg}
-        expr = expr.args[0]
-    fi = index.resolve_ref(mi, cls, expr)
-    if fi is None or not isinstance(fi.node, cg.FunctionNode):
-        return None
-    args = fi.node.args
-    names = [a.arg for a in args.posonlyargs + args.args]
-    if fi.cls is not None and names and names[0] == "self":
-        names = names[1:]
-    return [n for n in names if n not in bound_kw]
-
-
-def _collect_donors(index: cg.Index, mi: cg.ModuleInfo):
-    """Find donating dispatch handles in a module.
-
-    Returns ``(attr_donors, name_donors, func_donors)``:
-    ``{(class, attr): spec}`` for ``self._x = jax.jit(...)``,
-    ``{name: spec}`` for module-level ``x = jax.jit(...)``,
-    ``{qualname: spec}`` for ``@partial(jax.jit, donate_*)`` defs.
-    """
-    attr_donors: Dict[Tuple[str, str], DonSpec] = {}
-    name_donors: Dict[str, DonSpec] = {}
-    func_donors: Dict[str, DonSpec] = {}
-    for fi in mi.functions.values():
-        if not isinstance(fi.node, cg.FunctionNode):
-            continue
-        for dec in fi.node.decorator_list:
-            if isinstance(dec, ast.Call) \
-                    and cg.terminal_name(dec.func) == "partial" \
-                    and dec.args:
-                inner = ast.Call(func=dec.args[0], args=[],
-                                 keywords=dec.keywords)
-                inner.lineno = dec.lineno
-                spec = _jit_donation(index, mi, fi.cls, inner)
-                if spec is not None:
-                    spec.params = _wrapped_params(
-                        index, mi, fi.cls,
-                        ast.Name(id=fi.name, ctx=ast.Load()))
-                    args = fi.node.args
-                    names = [a.arg for a in args.posonlyargs + args.args]
-                    if fi.cls is not None and names \
-                            and names[0] == "self":
-                        names = names[1:]
-                    bound = {kw.arg for kw in dec.keywords if kw.arg
-                             and not kw.arg.startswith("donate")
-                             and not kw.arg.startswith("static")}
-                    spec.params = [n for n in names if n not in bound]
-                    func_donors[fi.qualname] = spec
-        for stmt in ast.walk(fi.node):
-            if not isinstance(stmt, ast.Assign) \
-                    or not isinstance(stmt.value, ast.Call):
-                continue
-            spec = _jit_donation(index, mi, fi.cls, stmt.value)
-            if spec is None:
-                continue
-            for t in stmt.targets:
-                chain = cg.attr_chain(t)
-                if chain and chain[0] == "self" and len(chain) == 2 \
-                        and fi.cls is not None:
-                    attr_donors[(fi.cls, chain[1])] = spec
-                elif chain and len(chain) == 1:
-                    name_donors[chain[0]] = spec
-    for stmt in mi.tree.body:
-        if isinstance(stmt, ast.Assign) \
-                and isinstance(stmt.value, ast.Call):
-            spec = _jit_donation(index, mi, None, stmt.value)
-            if spec is not None:
-                for t in stmt.targets:
-                    if isinstance(t, ast.Name):
-                        name_donors[t.id] = spec
-    return attr_donors, name_donors, func_donors
-
-
 def _expr_path(node: ast.AST) -> Optional[Path]:
     chain = cg.attr_chain(node)
     return tuple(chain) if chain else None
@@ -187,105 +53,33 @@ def _extends(used: Path, donated: Path) -> bool:
     return used[:len(donated)] == donated
 
 
-class _FnScan(ast.NodeVisitor):
-    """Ordered loads/stores of name/attribute paths in one function."""
-
-    def __init__(self):
-        self.loads: List[Tuple[int, int, Path]] = []
-        self.stores: List[Tuple[int, int, Path]] = []
-
-    def visit_Name(self, node: ast.Name):
-        self._record(node)
-
-    def visit_Attribute(self, node: ast.Attribute):
-        p = _expr_path(node)
-        if p is None:
-            self.generic_visit(node)
-            return
-        self._record(node, p)
-
-    def _record(self, node, path: Optional[Path] = None):
-        path = path or (node.id,)
-        entry = (node.lineno, node.col_offset, path)
-        if isinstance(node.ctx, ast.Store):
-            self.stores.append(entry)
-        else:
-            self.loads.append(entry)
-
-
-def run(index: cg.Index) -> List[Finding]:
+def run(an_ir: "ir.IR") -> List[Finding]:
     findings: List[Finding] = []
-    for mi in index.modules.values():
-        attr_donors, name_donors, func_donors = _collect_donors(index, mi)
-        if not (attr_donors or name_donors or func_donors):
+    for mi in an_ir.modules.values():
+        table = an_ir.handles(mi)
+        if not any(s.donates for s in [*table.attr.values(),
+                                       *table.name.values(),
+                                       *table.func.values()]):
             continue
         for fi in mi.functions.values():
             if isinstance(fi.node, cg.FunctionNode):
-                findings += _check_function(mi, fi, attr_donors,
-                                            name_donors, func_donors)
+                findings += _check_function(an_ir, mi, fi, table)
     return findings
 
 
-def _donating_spec(mi: cg.ModuleInfo, fi: cg.FuncInfo, func: ast.AST,
-                   attr_donors, name_donors, func_donors,
-                   local_aliases: Dict[str, DonSpec]) -> Optional[DonSpec]:
-    chain = cg.attr_chain(func)
-    if chain is None:
-        return None
-    if len(chain) == 2 and chain[0] == "self" and fi.cls is not None:
-        return attr_donors.get((fi.cls, chain[1]))
-    if len(chain) == 1:
-        name = chain[0]
-        if name in local_aliases:
-            return local_aliases[name]
-        if name in name_donors:
-            return name_donors[name]
-        if name in func_donors:
-            return func_donors[name]
-    return None
-
-
-def _alias_spec(expr: ast.AST, fi: cg.FuncInfo, attr_donors, name_donors,
-                func_donors,
-                local_aliases: Dict[str, DonSpec]) -> Optional[DonSpec]:
-    """Spec for a local alias assignment: any referenced donating handle
-    taints the alias (conditional expressions donate if either branch
-    does)."""
-    spec: Optional[DonSpec] = None
-    for node in ast.walk(expr):
-        if isinstance(node, ast.Call):
-            # a *call result* is a fresh value, not a dispatch handle
-            return None
-        cand = None
-        chain = cg.attr_chain(node)
-        if chain is None:
-            continue
-        if len(chain) == 2 and chain[0] == "self" and fi.cls is not None:
-            cand = attr_donors.get((fi.cls, chain[1]))
-        elif len(chain) == 1:
-            cand = (local_aliases.get(chain[0])
-                    or name_donors.get(chain[0])
-                    or func_donors.get(chain[0]))
-        if cand is not None:
-            spec = cand if spec is None else spec.merged(cand)
-    return spec
-
-
-def _check_function(mi: cg.ModuleInfo, fi: cg.FuncInfo, attr_donors,
-                    name_donors, func_donors) -> List[Finding]:
+def _check_function(an_ir: "ir.IR", mi: cg.ModuleInfo, fi: cg.FuncInfo,
+                    table: "ir.HandleTable") -> List[Finding]:
     findings: List[Finding] = []
-    scan = _FnScan()
-    scan.visit(fi.node)
-    loads = sorted(scan.loads)
-    stores = sorted(scan.stores)
+    facts = an_ir.facts(fi)
+    loads = facts.loads
+    stores = facts.stores
 
-    # local aliases of donating handles + tainted (no-donate) locals
-    local_aliases: Dict[str, DonSpec] = {}
+    # local aliases of dispatch handles + tainted (no-donate) locals
+    local_aliases: Dict[str, "ir.JitSpec"] = {}
     tainted: Dict[str, int] = {}        # name -> taint line
-    statements = [n for n in ast.walk(fi.node)
-                  if isinstance(n, (ast.Assign, ast.AnnAssign))]
-    statements.sort(key=lambda n: (n.lineno, n.col_offset))
-    for stmt in statements:
+    for stmt in facts.assignments:
+        if isinstance(stmt, ast.AugAssign):
+            continue
         targets = stmt.targets if isinstance(stmt, ast.Assign) \
             else ([stmt.target] if stmt.value is not None else [])
         value = stmt.value
@@ -299,8 +93,7 @@ def _check_function(mi: cg.ModuleInfo, fi: cg.FuncInfo, attr_donors,
                     names.append(el.id)
         if not names:
             continue
-        spec = _alias_spec(value, fi, attr_donors, name_donors,
-                           func_donors, local_aliases)
+        spec = table.alias_spec(value, fi, local_aliases)
         for n in names:
             if spec is not None:
                 local_aliases[n] = spec
@@ -314,12 +107,9 @@ def _check_function(mi: cg.ModuleInfo, fi: cg.FuncInfo, attr_donors,
                 tainted.pop(n, None)
 
     # donation call sites
-    for call in ast.walk(fi.node):
-        if not isinstance(call, ast.Call):
-            continue
-        spec = _donating_spec(mi, fi, call.func, attr_donors, name_donors,
-                              func_donors, local_aliases)
-        if spec is None:
+    for call in facts.calls:
+        spec = table.resolve(fi, call.func, local_aliases)
+        if spec is None or not spec.donates:
             continue
         donated = _donated_paths(call, spec)
         for path, arg_node in donated:
@@ -361,22 +151,22 @@ def _is_no_donate_source(value: ast.AST) -> bool:
 
 
 def _donated_paths(call: ast.Call,
-                   spec: DonSpec) -> List[Tuple[Path, ast.AST]]:
+                   spec: "ir.JitSpec") -> List[Tuple[Path, ast.AST]]:
     out: List[Tuple[Path, ast.AST]] = []
-    for i in spec.argnums:
+    for i in spec.donate_argnums:
         if i < len(call.args):
             p = _expr_path(call.args[i])
             if p is not None:
                 out.append((p, call.args[i]))
-    if spec.argnames:
+    if spec.donate_argnames:
         for kw in call.keywords:
-            if kw.arg in spec.argnames:
+            if kw.arg in spec.donate_argnames:
                 p = _expr_path(kw.value)
                 if p is not None:
                     out.append((p, kw.value))
         if spec.params:
             for pos, pname in enumerate(spec.params):
-                if pname in spec.argnames and pos < len(call.args):
+                if pname in spec.donate_argnames and pos < len(call.args):
                     p = _expr_path(call.args[pos])
                     if p is not None:
                         out.append((p, call.args[pos]))

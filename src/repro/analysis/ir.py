@@ -1,0 +1,450 @@
+"""Shared analysis IR: one parse, one symbol table, one call graph, one
+set of dataflow facts — every lint pass is a visitor over this.
+
+Before this module each pass re-derived what it needed from the raw
+:class:`~repro.analysis.callgraph.Index` (trace-purity and pytree each
+recomputed the traced regions; donation kept a private jit-handle
+collector and load/store scanner). The IR computes each product once per
+``run_paths`` invocation and hands passes read-only views:
+
+* :attr:`IR.regions` — every traced region (cached
+  :func:`callgraph.traced_regions` result), plus the derived
+  :attr:`IR.member_regions` (function -> regions containing it) and
+  :attr:`IR.shard_members` (functions inside a ``shard_map``-rooted
+  region — the set the sharding pass treats as collective-legal);
+* :meth:`IR.facts` — per-function linear dataflow facts
+  (:class:`FunctionFacts`): ordered name/attribute loads and stores,
+  ordered assignments, call sites, nested local defs, and the
+  loop-varying name set the recompile pass keys on;
+* :meth:`IR.handles` — every jit *dispatch handle* in a module
+  (``self._step = jax.jit(...)``, module-level ``step = jax.jit(...)``,
+  ``@jax.jit``/``@partial(jax.jit, ...)`` defs) as a :class:`JitSpec`
+  carrying donate **and** static argument declarations — the donation
+  pass filters for donating handles, the recompile pass uses them all.
+
+Everything here stays pure stdlib ``ast`` — the CLI must keep running
+before jax is importable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import callgraph as cg
+
+NamePath = Tuple[str, ...]
+
+
+# --------------------------------------------------------------------------- #
+# jit dispatch handles
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class JitSpec:
+    """One ``jax.jit(...)`` dispatch handle: what it donates, what it
+    declared static, the wrapped callable's positional params, and a
+    human-readable display name for diagnostics."""
+
+    site_line: int = 0
+    donate_argnums: Set[int] = dataclasses.field(default_factory=set)
+    donate_argnames: Set[str] = dataclasses.field(default_factory=set)
+    static_argnums: Set[int] = dataclasses.field(default_factory=set)
+    static_argnames: Set[str] = dataclasses.field(default_factory=set)
+    #: positional parameter names of the wrapped callable (partial-bound
+    #: keywords removed), for positional matching of *_argnames
+    params: Optional[List[str]] = None
+    display: str = "jit"
+
+    @property
+    def donates(self) -> bool:
+        return bool(self.donate_argnums or self.donate_argnames)
+
+    def merged(self, other: "JitSpec") -> "JitSpec":
+        return JitSpec(self.site_line,
+                       self.donate_argnums | other.donate_argnums,
+                       self.donate_argnames | other.donate_argnames,
+                       self.static_argnums | other.static_argnums,
+                       self.static_argnames | other.static_argnames,
+                       self.params or other.params,
+                       self.display)
+
+
+@dataclasses.dataclass
+class HandleTable:
+    """All jit dispatch handles of one module, by binding kind."""
+
+    #: ``self._x = jax.jit(...)`` -> {(class, attr): spec}
+    attr: Dict[Tuple[str, str], JitSpec] = dataclasses.field(
+        default_factory=dict)
+    #: module-level / function-local ``x = jax.jit(...)`` -> {name: spec}
+    name: Dict[str, JitSpec] = dataclasses.field(default_factory=dict)
+    #: ``@jax.jit`` / ``@partial(jax.jit, ...)`` defs -> {qualname: spec}
+    func: Dict[str, JitSpec] = dataclasses.field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return bool(self.attr or self.name or self.func)
+
+    def resolve(self, fi: cg.FuncInfo, func_expr: ast.AST,
+                local_aliases: Optional[Dict[str, JitSpec]] = None
+                ) -> Optional[JitSpec]:
+        """Spec for a dispatch call's callee expression, through local
+        aliases (``chunk_fn = self._paged_chunk``)."""
+        chain = cg.attr_chain(func_expr)
+        if chain is None:
+            return None
+        if len(chain) == 2 and chain[0] == "self" and fi.cls is not None:
+            return self.attr.get((fi.cls, chain[1]))
+        if len(chain) == 1:
+            name = chain[0]
+            if local_aliases and name in local_aliases:
+                return local_aliases[name]
+            return self.name.get(name) or self.func.get(name)
+        return None
+
+    def alias_spec(self, expr: ast.AST, fi: cg.FuncInfo,
+                   local_aliases: Dict[str, JitSpec]) -> Optional[JitSpec]:
+        """Spec a local alias assignment carries: any referenced handle
+        taints the alias (conditional expressions dispatch through either
+        branch, so the specs merge)."""
+        spec: Optional[JitSpec] = None
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                # a *call result* is a fresh value, not a dispatch handle
+                return None
+            chain = cg.attr_chain(node)
+            if chain is None:
+                continue
+            cand = None
+            if len(chain) == 2 and chain[0] == "self" \
+                    and fi.cls is not None:
+                cand = self.attr.get((fi.cls, chain[1]))
+            elif len(chain) == 1:
+                cand = (local_aliases.get(chain[0])
+                        or self.name.get(chain[0])
+                        or self.func.get(chain[0]))
+            if cand is not None:
+                spec = cand if spec is None else spec.merged(cand)
+        return spec
+
+
+def _literal_ints(node: ast.AST) -> Set[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)}
+    return set()
+
+
+def _literal_strs(node: ast.AST) -> Set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def _jit_spec(index: cg.Index, mi: cg.ModuleInfo, cls: Optional[str],
+              call: ast.Call) -> Optional[JitSpec]:
+    """JitSpec if ``call`` is ``jax.jit(...)``, else None."""
+    hit = index.jax_wrapper(mi, call)
+    if hit is None or hit[0] != "jit":
+        return None
+    spec = JitSpec(site_line=call.lineno)
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            spec.donate_argnums |= _literal_ints(kw.value)
+        elif kw.arg == "donate_argnames":
+            spec.donate_argnames |= _literal_strs(kw.value)
+        elif kw.arg == "static_argnums":
+            spec.static_argnums |= _literal_ints(kw.value)
+        elif kw.arg == "static_argnames":
+            spec.static_argnames |= _literal_strs(kw.value)
+    spec.params = _wrapped_params(index, mi, cls, call.args[0]) \
+        if call.args else None
+    return spec
+
+
+def _wrapped_params(index: cg.Index, mi: cg.ModuleInfo,
+                    cls: Optional[str],
+                    expr: ast.AST) -> Optional[List[str]]:
+    """Positional parameter names of the jitted callable, unwrapping
+    ``functools.partial`` keyword bindings."""
+    bound_kw: Set[str] = set()
+    while isinstance(expr, ast.Call) \
+            and cg.terminal_name(expr.func) == "partial" and expr.args:
+        bound_kw |= {kw.arg for kw in expr.keywords if kw.arg}
+        expr = expr.args[0]
+    fi = index.resolve_ref(mi, cls, expr)
+    if fi is None or not isinstance(fi.node, cg.FunctionNode):
+        return None
+    args = fi.node.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if fi.cls is not None and names and names[0] == "self":
+        names = names[1:]
+    return [n for n in names if n not in bound_kw]
+
+
+def _unwrap_jit_call(index: cg.Index, mi: cg.ModuleInfo,
+                     call: ast.Call) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` call inside ``call`` — itself, or one wrapped
+    by a dispatcher (``self._mesh_dispatch(jax.jit(...))``): the binding
+    still names a dispatch handle with the inner jit's declarations."""
+    hit = index.jax_wrapper(mi, call)
+    if hit is not None and hit[0] == "jit":
+        return call
+    for a in call.args:
+        if isinstance(a, ast.Call):
+            inner = _unwrap_jit_call(index, mi, a)
+            if inner is not None:
+                return inner
+    return None
+
+
+def _collect_handles(index: cg.Index, mi: cg.ModuleInfo) -> HandleTable:
+    table = HandleTable()
+    for fi in mi.functions.values():
+        if not isinstance(fi.node, cg.FunctionNode):
+            continue
+        for dec in fi.node.decorator_list:
+            spec = None
+            if isinstance(dec, ast.Call) \
+                    and cg.terminal_name(dec.func) == "partial" \
+                    and dec.args:
+                inner = ast.Call(func=dec.args[0], args=[],
+                                 keywords=dec.keywords)
+                inner.lineno = dec.lineno
+                spec = _jit_spec(index, mi, fi.cls, inner)
+                if spec is not None:
+                    args = fi.node.args
+                    names = [a.arg for a in args.posonlyargs + args.args]
+                    if fi.cls is not None and names \
+                            and names[0] == "self":
+                        names = names[1:]
+                    bound = {kw.arg for kw in dec.keywords if kw.arg
+                             and not kw.arg.startswith("donate")
+                             and not kw.arg.startswith("static")}
+                    spec.params = [n for n in names if n not in bound]
+            elif index._decorator_wrapper(mi, dec) == "jit":
+                # bare ``@jax.jit`` / ``@jit`` (no donate/static kwargs)
+                spec = JitSpec(site_line=fi.node.lineno)
+                args = fi.node.args
+                names = [a.arg for a in args.posonlyargs + args.args]
+                if fi.cls is not None and names and names[0] == "self":
+                    names = names[1:]
+                spec.params = names
+            if spec is not None:
+                spec.display = fi.qualname
+                table.func[fi.qualname] = spec
+                if fi.cls is None:
+                    table.func.setdefault(fi.name, spec)
+        for stmt in ast.walk(fi.node):
+            if not isinstance(stmt, ast.Assign) \
+                    or not isinstance(stmt.value, ast.Call):
+                continue
+            jc = _unwrap_jit_call(index, mi, stmt.value)
+            spec = _jit_spec(index, mi, fi.cls, jc) \
+                if jc is not None else None
+            if spec is None:
+                continue
+            for t in stmt.targets:
+                chain = cg.attr_chain(t)
+                if chain and chain[0] == "self" and len(chain) == 2 \
+                        and fi.cls is not None:
+                    s = dataclasses.replace(
+                        spec, display=f"self.{chain[1]}",
+                        donate_argnums=set(spec.donate_argnums),
+                        donate_argnames=set(spec.donate_argnames),
+                        static_argnums=set(spec.static_argnums),
+                        static_argnames=set(spec.static_argnames))
+                    table.attr[(fi.cls, chain[1])] = s
+                elif chain and len(chain) == 1:
+                    s = dataclasses.replace(
+                        spec, display=chain[0],
+                        donate_argnums=set(spec.donate_argnums),
+                        donate_argnames=set(spec.donate_argnames),
+                        static_argnums=set(spec.static_argnums),
+                        static_argnames=set(spec.static_argnames))
+                    table.name[chain[0]] = s
+    for stmt in mi.tree.body:
+        if isinstance(stmt, ast.Assign) \
+                and isinstance(stmt.value, ast.Call):
+            spec = _jit_spec(index, mi, None, stmt.value)
+            if spec is not None:
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        spec.display = t.id
+                        table.name[t.id] = spec
+    return table
+
+
+# --------------------------------------------------------------------------- #
+# per-function linear dataflow facts
+# --------------------------------------------------------------------------- #
+class _FnScan(ast.NodeVisitor):
+    """Ordered loads/stores of name/attribute paths in one function."""
+
+    def __init__(self):
+        self.loads: List[Tuple[int, int, NamePath]] = []
+        self.stores: List[Tuple[int, int, NamePath]] = []
+
+    def visit_Name(self, node: ast.Name):
+        self._record(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        chain = cg.attr_chain(node)
+        if chain is None:
+            self.generic_visit(node)
+            return
+        self._record(node, tuple(chain))
+
+    def _record(self, node, path: Optional[NamePath] = None):
+        path = path or (node.id,)
+        entry = (node.lineno, node.col_offset, path)
+        if isinstance(node.ctx, ast.Store):
+            self.stores.append(entry)
+        else:
+            self.loads.append(entry)
+
+
+@dataclasses.dataclass
+class FunctionFacts:
+    """Linear dataflow facts for one analyzed function."""
+
+    fi: cg.FuncInfo
+    #: ordered (line, col, dotted path) name/attribute reads
+    loads: List[Tuple[int, int, NamePath]]
+    #: ordered (line, col, dotted path) name/attribute writes
+    stores: List[Tuple[int, int, NamePath]]
+    #: every Assign/AnnAssign/AugAssign in source order
+    assignments: List[ast.stmt]
+    #: every Call node in the body (nested defs included)
+    calls: List[ast.Call]
+    #: nested local defs, name -> synthetic FuncInfo
+    local_defs: Dict[str, cg.FuncInfo]
+    #: (lineno, end_lineno) spans of every For/While in the body
+    loop_spans: List[Tuple[int, int]]
+    #: names whose value varies across loop iterations: ``for`` targets
+    #: plus names stored inside a loop body
+    loop_vars: Set[str]
+    #: (lineno, end_lineno) spans of nested defs — code there belongs to
+    #: the nested scope (which gets its own synthetic FuncInfo when it is
+    #: a traced-region member), not to this function's linear flow
+    nested_spans: List[Tuple[int, int]]
+
+    def in_loop(self, lineno: int) -> bool:
+        return any(a <= lineno <= b for a, b in self.loop_spans)
+
+    def in_nested(self, lineno: int) -> bool:
+        return any(a <= lineno <= b for a, b in self.nested_spans)
+
+
+def _target_names(t: ast.AST) -> List[str]:
+    out = []
+    for el in (t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]):
+        if isinstance(el, ast.Name):
+            out.append(el.id)
+        elif isinstance(el, ast.Starred) \
+                and isinstance(el.value, ast.Name):
+            out.append(el.value.id)
+    return out
+
+
+def compute_facts(fi: cg.FuncInfo) -> FunctionFacts:
+    node = fi.node
+    scan = _FnScan()
+    scan.visit(node)
+    assignments = [n for n in ast.walk(node)
+                   if isinstance(n, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign))]
+    assignments.sort(key=lambda n: (n.lineno, n.col_offset))
+    calls = [n for n in ast.walk(node) if isinstance(n, ast.Call)]
+    local_defs: Dict[str, cg.FuncInfo] = {}
+    if isinstance(node, cg.FunctionNode):
+        local_defs = {
+            n.name: cg.FuncInfo(fi.module,
+                                f"{fi.qualname}.<locals>.{n.name}",
+                                n, cls=fi.cls)
+            for n in ast.walk(node)
+            if isinstance(n, cg.FunctionNode) and n is not node}
+    loop_spans = [(n.lineno, n.end_lineno or n.lineno)
+                  for n in ast.walk(node)
+                  if isinstance(n, (ast.For, ast.While))]
+    nested_spans = [(n.lineno, n.end_lineno or n.lineno)
+                    for n in ast.walk(node)
+                    if isinstance(n, cg.FunctionNode) and n is not node]
+    loop_vars: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.For):
+            loop_vars.update(_target_names(n.target))
+        elif isinstance(n, ast.comprehension):
+            loop_vars.update(_target_names(n.target))
+    for stmt in assignments:
+        in_loop = any(a <= stmt.lineno <= b for a, b in loop_spans)
+        if not in_loop:
+            continue
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for t in targets:
+            loop_vars.update(_target_names(t))
+    return FunctionFacts(fi, sorted(scan.loads), sorted(scan.stores),
+                         assignments, calls, local_defs, loop_spans,
+                         loop_vars, nested_spans)
+
+
+# --------------------------------------------------------------------------- #
+# the IR proper
+# --------------------------------------------------------------------------- #
+class IR:
+    """One parse + symbol table + call graph + dataflow facts, shared by
+    every pass of a single analysis run."""
+
+    def __init__(self, index: cg.Index):
+        self.index = index
+        #: every traced region, computed once (previously each pass paid
+        #: its own traced_regions() walk)
+        self.regions: List[cg.Region] = cg.traced_regions(index)
+        #: function -> regions containing it
+        self.member_regions: Dict[cg.FuncInfo, List[cg.Region]] = {}
+        for region in self.regions:
+            for fi in region.members:
+                self.member_regions.setdefault(fi, []).append(region)
+        #: functions inside some shard_map-rooted region — where
+        #: collectives are legal
+        self.shard_members: Set[cg.FuncInfo] = set()
+        self.shard_regions: List[cg.Region] = []
+        for region in self.regions:
+            if region.root.wrapper == "shard_map":
+                self.shard_regions.append(region)
+                self.shard_members.update(region.members)
+        self._facts: Dict[cg.FuncInfo, FunctionFacts] = {}
+        self._handles: Dict[str, HandleTable] = {}
+
+    @classmethod
+    def build(cls, files: Sequence[Path]) -> "IR":
+        return cls(cg.Index.build(files))
+
+    # convenience views ---------------------------------------------------
+    @property
+    def modules(self) -> Dict[str, cg.ModuleInfo]:
+        return self.index.modules
+
+    def facts(self, fi: cg.FuncInfo) -> FunctionFacts:
+        f = self._facts.get(fi)
+        if f is None:
+            f = self._facts[fi] = compute_facts(fi)
+        return f
+
+    def handles(self, mi: cg.ModuleInfo) -> HandleTable:
+        t = self._handles.get(mi.path)
+        if t is None:
+            t = self._handles[mi.path] = _collect_handles(self.index, mi)
+        return t
+
+    def region_of(self, fi: cg.FuncInfo) -> Optional[cg.Region]:
+        """One representative traced region containing ``fi`` (for
+        diagnostics), or None when the function is never traced."""
+        regions = self.member_regions.get(fi)
+        return regions[0] if regions else None

@@ -1,0 +1,175 @@
+"""Observability-purity pass: metrics/tracing stay on the host side.
+
+Rules
+-----
+OBS001
+    A MetricsRegistry / Tracer method call is reachable from a traced
+    region. Instruments are host objects mutating Python floats and
+    event buffers: under trace the call runs once at trace time and
+    never again on cached executions — counters silently freeze, spans
+    never close. The detector keys on the receiver path (a segment named
+    ``metrics`` / ``tracer`` / ``_inst`` / ``_metrics`` / ``_tracer`` /
+    ``tr``) plus an instrument-method terminal, so aliasing through
+    ``self._inst.tokens.inc()`` or ``registry.counter("x").inc()`` still
+    matches.
+OBS002
+    Unbalanced keyed span pair: a ``tracer.begin(key, ...)`` whose key
+    fingerprint has no matching ``end``/``discard`` anywhere in the
+    analyzed module set (or an ``end`` with no ``begin``). Keyed spans
+    are cross-tick by design — begin at submit, end at retirement — so
+    the pairing is checked globally, by the key's literal head (e.g.
+    ``("running", req.request_id)`` pairs on ``"running"``), falling
+    back to the normalized key expression when no literal is present.
+
+Both checks run over the shared IR; the begin/end table is assembled in
+one walk per module set.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph as cg
+from repro.analysis import ir
+from repro.analysis.common import Finding
+
+#: receiver-path segments that mark an observability sink
+_OBS_RECEIVERS = {"metrics", "tracer", "_metrics", "_tracer", "_inst",
+                  "tr"}
+
+#: instrument/tracer method terminals (MetricsRegistry + Tracer API)
+_OBS_METHODS = {
+    "inc", "dec", "observe", "set", "labels", "counter", "gauge",
+    "histogram", "gauge_fn", "begin", "end", "discard", "span",
+    "instant", "thread_name",
+}
+
+#: tracer span verbs for the OBS002 pairing table
+_SPAN_VERBS = {"begin", "end", "discard"}
+
+
+def _obs_call(call: ast.Call) -> Optional[Tuple[str, List[str]]]:
+    """(method terminal, receiver chain) when ``call`` targets an
+    observability sink."""
+    chain = cg.attr_chain(call.func)
+    if chain is None:
+        # registry.counter("x").inc(): the receiver is a Call — match on
+        # the inner call instead (walk finds it separately), but still
+        # catch ``<obs call>.inc()`` one level deep
+        if isinstance(call.func, ast.Attribute) \
+                and isinstance(call.func.value, ast.Call):
+            inner = _obs_call(call.func.value)
+            if inner is not None and call.func.attr in _OBS_METHODS:
+                return call.func.attr, inner[1]
+        return None
+    if chain[-1] not in _OBS_METHODS:
+        return None
+    if not any(seg in _OBS_RECEIVERS for seg in chain[:-1]):
+        return None
+    return chain[-1], chain[:-1]
+
+
+def run(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    findings += _check_traced_obs(an_ir)
+    findings += _check_span_balance(an_ir)
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# OBS001
+# --------------------------------------------------------------------------- #
+def _check_traced_obs(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for fi, regions in an_ir.member_regions.items():
+        mi = fi.module
+        region = regions[0]
+        root = region.root
+        facts = an_ir.facts(fi)
+        for call in facts.calls:
+            hit = _obs_call(call)
+            if hit is None or facts.in_nested(call.lineno):
+                continue
+            key = (mi.path, call.lineno)
+            if key in seen:
+                continue
+            seen.add(key)
+            method, recv = hit
+            chain = " -> ".join(region.members[fi])
+            findings.append(Finding(
+                mi.path, call.lineno, "OBS001",
+                f"observability call '{'.'.join(recv)}.{method}()' "
+                f"reachable from a traced region [traced via "
+                f"{root.wrapper} at {root.func.module.name}:"
+                f"{root.site_line}, call chain {chain}]: instruments "
+                "mutate host state — under trace this records once at "
+                "trace time and never again; hoist it to the eager "
+                "dispatch site"))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# OBS002
+# --------------------------------------------------------------------------- #
+def _span_fingerprint(call: ast.Call) -> Optional[str]:
+    """Stable fingerprint of a keyed span: the key's literal string head
+    when present (``("running", rid)`` -> ``running``), else the
+    normalized key expression."""
+    if not call.args:
+        return None
+    key = call.args[0]
+    if isinstance(key, ast.Constant) and isinstance(key.value, str):
+        return key.value
+    if isinstance(key, (ast.Tuple, ast.List)) and key.elts:
+        head = key.elts[0]
+        if isinstance(head, ast.Constant) and isinstance(head.value, str):
+            return head.value
+    try:
+        return ast.unparse(key)
+    except Exception:                       # pragma: no cover - defensive
+        return None
+
+
+def _check_span_balance(an_ir: "ir.IR") -> List[Finding]:
+    begins: Dict[str, List[Tuple[str, int]]] = {}
+    closes: Set[str] = set()
+    ends: Dict[str, List[Tuple[str, int]]] = {}
+    opens: Set[str] = set()
+    for mi in an_ir.modules.values():
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            hit = _obs_call(node)
+            if hit is None or hit[0] not in _SPAN_VERBS:
+                continue
+            fp = _span_fingerprint(node)
+            if fp is None:
+                continue
+            if hit[0] == "begin":
+                begins.setdefault(fp, []).append((mi.path, node.lineno))
+                opens.add(fp)
+            else:
+                ends.setdefault(fp, []).append((mi.path, node.lineno))
+                closes.add(fp)
+    findings: List[Finding] = []
+    for fp, sites in begins.items():
+        if fp in closes:
+            continue
+        for path, line in sites:
+            findings.append(Finding(
+                path, line, "OBS002",
+                f"keyed span '{fp}' is begun here but no matching "
+                "end()/discard() exists on any analyzed engine code "
+                "path: the span leaks and exports as unfinished; pair "
+                "it (end at retirement, discard on abort)"))
+    for fp, sites in ends.items():
+        if fp in opens:
+            continue
+        for path, line in sites:
+            findings.append(Finding(
+                path, line, "OBS002",
+                f"keyed span '{fp}' is ended/discarded here but never "
+                "begun on any analyzed engine code path: the call is "
+                "dead (or the begin was dropped in a refactor)"))
+    return findings

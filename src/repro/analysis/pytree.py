@@ -23,6 +23,7 @@ import ast
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.analysis import callgraph as cg
+from repro.analysis import ir
 from repro.analysis.common import Finding
 
 _REGISTER_FNS = {"register_dataclass", "register_pytree_node",
@@ -86,11 +87,12 @@ def _resolve_class(index: cg.Index, mi: cg.ModuleInfo,
     return None
 
 
-def run(index: cg.Index) -> List[Finding]:
+def run(an_ir: "ir.IR") -> List[Finding]:
+    index = an_ir.index
     findings: List[Finding] = []
     dcs = _dataclass_index(index)
     seen: Set[Tuple[str, int]] = set()
-    for region in cg.traced_regions(index):
+    for region in an_ir.regions:
         for fi, chain in region.members.items():
             for call in ast.walk(fi.node):
                 if not isinstance(call, ast.Call):

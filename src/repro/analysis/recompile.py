@@ -1,0 +1,346 @@
+"""Recompile-churn pass: per-call-varying host values reaching jit.
+
+Rules
+-----
+CMP001
+    A jit dispatch handle is fed a Python scalar / shape that varies per
+    call without a deliberate ``static_argnums`` story: a shape
+    constructor (``jnp.zeros((1, w), ...)``) or a non-constant-width
+    slice (``x[off:off + size]``) parameterized by a *loop-varying* name
+    reaching a dispatch argument (directly or through a local
+    assignment), or a declared-static argument fed a loop-varying value.
+    Every distinct value traces a separate executable — the
+    compile-inclusive cold-start soft spot. The message names the jit
+    root and the churning argument; intentional warm ladders annotate
+    with ``# analysis: allow(CMP001)``.
+CMP002
+    Dict/kwarg ordering instability reaching a traced signature:
+    ``handle(**opts)`` where ``opts`` is not a dict display with literal
+    keys. The traced signature (and therefore the executable cache key)
+    then depends on a dynamically assembled key set — two call sites
+    passing the "same" arguments through differently-built dicts compile
+    twice, and a conditionally added key churns silently.
+CMP003
+    Data-dependent shape construction / concretization under trace:
+    ``.item()`` / ``.tolist()``, or ``int(...)`` / ``float(...)`` over
+    computed (non-shape) values inside a traced region. Under trace
+    these either raise (``TracerError``) or bake a host value into the
+    executable; when the value flows into a shape, every distinct value
+    is a fresh compile. Shape-metadata reads (``jnp.shape`` / ``.shape``
+    / ``np.prod``) are static at trace time and exempt.
+
+All checks run over the shared IR: dispatch handles and their
+static/donate declarations from :meth:`repro.analysis.ir.IR.handles`,
+loop-varying names and assignment order from
+:meth:`repro.analysis.ir.IR.facts`, traced membership from
+:attr:`repro.analysis.ir.IR.member_regions`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph as cg
+from repro.analysis import ir
+from repro.analysis.common import Finding
+from repro.analysis.trace_purity import NP_TRACE_SAFE
+
+#: constructors whose arguments are *shapes* — a varying scalar inside
+#: means one executable per distinct value
+SHAPE_CTORS = {"zeros", "ones", "full", "empty", "arange"}
+
+#: call terminals that read static trace-time metadata (never churn)
+_SHAPE_SAFE_CALLS = {"len", "shape", "ndim", "size"} | NP_TRACE_SAFE
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:                       # pragma: no cover - defensive
+        return "<expr>"
+
+
+def _loop_names_in(node: ast.AST, loop_vars: Set[str]) -> Set[str]:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            and n.id in loop_vars}
+
+
+def _bound_parts(node: Optional[ast.AST]) -> Tuple[str, int]:
+    """Decompose a slice bound into (base expression, constant offset):
+    ``i + 2`` -> ("i", 2), ``7`` -> ("", 7), anything else -> (text, 0).
+    Two bounds with the same base have a constant width."""
+    if node is None or (isinstance(node, ast.Constant)
+                        and isinstance(node.value, int)):
+        return "", getattr(node, "value", 0) if node is not None else 0
+    if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                  (ast.Add, ast.Sub)) \
+            and isinstance(node.right, ast.Constant) \
+            and isinstance(node.right.value, int):
+        off = node.right.value
+        return _unparse(node.left), (off if isinstance(node.op, ast.Add)
+                                     else -off)
+    return _unparse(node), 0
+
+
+def _slice_width_churn(sub: ast.Subscript,
+                       loop_vars: Set[str]) -> Set[str]:
+    """Loop-varying names the *width* of a slice depends on (constant
+    widths like ``x[i:i + 1]`` / ``x[i + 1:i + 2]`` are churn-free even
+    with varying ``i``)."""
+    out: Set[str] = set()
+    for sl in ast.walk(sub.slice):
+        if not isinstance(sl, ast.Slice):
+            continue
+        lo, hi = sl.lower, sl.upper
+        if hi is None:
+            continue                        # open-ended: shape from base
+        if _bound_parts(lo)[0] == _bound_parts(hi)[0]:
+            continue                        # same base: constant width
+        if lo is not None and isinstance(hi, ast.BinOp) \
+                and isinstance(hi.op, ast.Add) \
+                and _unparse(hi.left) == _unparse(lo):
+            out |= _loop_names_in(hi.right, loop_vars)
+            continue
+        out |= _loop_names_in(lo, loop_vars) if lo is not None else set()
+        out |= _loop_names_in(hi, loop_vars)
+    return out
+    # walking sub.slice (not sub) keeps base-expression names out
+
+
+def _expr_churn(expr: ast.AST, loop_vars: Set[str],
+                tainted: Dict[str, Set[str]]) -> Set[str]:
+    """Loop-varying names whose value parameterizes a dispatch *shape*
+    inside ``expr``: shape-constructor arguments, non-constant slice
+    widths, and reads of locals already tainted by either."""
+    out: Set[str] = set()
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call) \
+                and cg.terminal_name(n.func) in SHAPE_CTORS:
+            for a in list(n.args) + [kw.value for kw in n.keywords]:
+                out |= _loop_names_in(a, loop_vars)
+        elif isinstance(n, ast.Subscript):
+            out |= _slice_width_churn(n, loop_vars)
+        elif isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id in tainted:
+            out |= tainted[n.id]
+    return out
+
+
+def run(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    findings += _check_dispatch_churn(an_ir)
+    findings += _check_trace_concretization(an_ir)
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# CMP001 + CMP002: per-handle call-site checks
+# --------------------------------------------------------------------------- #
+def _static_positions(spec: "ir.JitSpec") -> Tuple[Set[int], Set[str]]:
+    nums = set(spec.static_argnums)
+    names = set(spec.static_argnames)
+    if spec.params:
+        for pos, pname in enumerate(spec.params):
+            if pname in names:
+                nums.add(pos)
+            if pos in spec.static_argnums:
+                names.add(pname)
+    return nums, names
+
+
+def _check_dispatch_churn(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    for mi in an_ir.modules.values():
+        table = an_ir.handles(mi)
+        if not table:
+            continue
+        for fi in mi.functions.values():
+            if not isinstance(fi.node, cg.FunctionNode):
+                continue
+            findings += _check_function(an_ir, mi, fi, table)
+    return findings
+
+
+def _check_function(an_ir: "ir.IR", mi: cg.ModuleInfo, fi: cg.FuncInfo,
+                    table: "ir.HandleTable") -> List[Finding]:
+    """Single ordered walk: taint state (locals carrying loop-varying
+    shapes) evolves assignment by assignment, and each dispatch call is
+    checked against the state *at its source position* — a taint acquired
+    at line 40 never retro-flags a call on line 20."""
+    facts = an_ir.facts(fi)
+    loop_vars = facts.loop_vars
+    local_aliases: Dict[str, "ir.JitSpec"] = {}
+    tainted: Dict[str, Set[str]] = {}
+    findings: List[Finding] = []
+    checked: Set[int] = set()
+
+    def check(call: ast.Call) -> None:
+        if id(call) in checked or facts.in_nested(call.lineno):
+            return
+        checked.add(id(call))
+        spec = table.resolve(fi, call.func, local_aliases)
+        if spec is None:
+            return
+        static_nums, static_names = _static_positions(spec)
+        root = (f"jit root '{spec.display}' "
+                f"({mi.name}:{spec.site_line})")
+        for pos, arg in enumerate(call.args):
+            findings.extend(_check_arg(
+                mi, call, arg, root, pos in static_nums,
+                spec.params[pos] if spec.params
+                and pos < len(spec.params) else f"arg {pos}",
+                loop_vars, tainted))
+        for kw in call.keywords:
+            if kw.arg is None:
+                findings.extend(_check_double_star(mi, call, kw.value,
+                                                   root))
+                continue
+            findings.extend(_check_arg(mi, call, kw.value, root,
+                                       kw.arg in static_names, kw.arg,
+                                       loop_vars, tainted))
+
+    spans = [(s.lineno, s.end_lineno or s.lineno)
+             for s in facts.assignments]
+    items: List[Tuple[int, int, str, ast.AST]] = [
+        (s.lineno, s.col_offset, "assign", s) for s in facts.assignments]
+    items += [(c.lineno, c.col_offset, "call", c) for c in facts.calls
+              if not any(a <= c.lineno <= b for a, b in spans)]
+    for _, _, kind, node in sorted(items, key=lambda it: it[:2]):
+        if kind == "call":
+            check(node)
+            continue
+        stmt = node
+        # calls embedded in the assignment read the *pre*-store state
+        for call in ast.walk(stmt):
+            if isinstance(call, ast.Call):
+                check(call)
+        if isinstance(stmt, ast.AugAssign):
+            continue
+        value = stmt.value
+        if value is None:
+            continue
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        names = []
+        for t in targets:
+            for el in (t.elts if isinstance(t, (ast.Tuple, ast.List))
+                       else [t]):
+                if isinstance(el, ast.Name):
+                    names.append(el.id)
+        if not names:
+            continue
+        spec = table.alias_spec(value, fi, local_aliases)
+        for n in names:
+            if spec is not None:
+                local_aliases[n] = spec
+            else:
+                local_aliases.pop(n, None)
+        # a jit dispatch *result* has the executable's output shape — the
+        # churning input is flagged at the call site itself, so the
+        # result does not carry the taint forward
+        if isinstance(value, ast.Call) \
+                and table.resolve(fi, value.func, local_aliases) \
+                is not None:
+            churn: Set[str] = set()
+        else:
+            churn = _expr_churn(value, loop_vars, tainted)
+        for n in names:
+            if churn:
+                tainted[n] = churn
+            else:
+                tainted.pop(n, None)
+    return findings
+
+
+def _check_arg(mi: cg.ModuleInfo, call: ast.Call, arg: ast.AST,
+               root: str, is_static: bool, pname: str,
+               loop_vars: Set[str],
+               tainted: Dict[str, Set[str]]) -> List[Finding]:
+    if is_static:
+        churn = _loop_names_in(arg, loop_vars)
+        if churn:
+            return [Finding(
+                mi.path, call.lineno, "CMP001",
+                f"{root}: static argument '{pname}' is fed "
+                f"loop-varying {sorted(churn)} — every distinct value "
+                "recompiles; hoist the value or drop it from "
+                "static_argnums")]
+        return []
+    churn = _expr_churn(arg, loop_vars, tainted)
+    if churn:
+        return [Finding(
+            mi.path, call.lineno, "CMP001",
+            f"{root}: argument '{pname}' carries a dispatch shape "
+            f"built from loop-varying {sorted(churn)} — one executable "
+            "per distinct extent; bucket the size, hoist it, or warm "
+            "the ladder deliberately")]
+    return []
+
+
+def _check_double_star(mi: cg.ModuleInfo, call: ast.Call,
+                       value: ast.AST, root: str) -> List[Finding]:
+    if isinstance(value, ast.Dict) \
+            and all(isinstance(k, ast.Constant)
+                    and isinstance(k.value, str) for k in value.keys):
+        return []                           # literal keys: stable order
+    return [Finding(
+        mi.path, call.lineno, "CMP002",
+        f"{root}: '**{_unparse(value)}' expands a dynamically built "
+        "dict into the traced signature — the executable cache keys on "
+        "the keyword set, so a conditionally added or reordered key "
+        "recompiles silently; pass explicit keywords or a dict display "
+        "with literal keys")]
+
+
+# --------------------------------------------------------------------------- #
+# CMP003: concretization under trace
+# --------------------------------------------------------------------------- #
+def _has_unsafe_call(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            tname = cg.terminal_name(n.func)
+            if tname not in _SHAPE_SAFE_CALLS:
+                return True
+    return False
+
+
+def _check_trace_concretization(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for fi, regions in an_ir.member_regions.items():
+        mi = fi.module
+        region = regions[0]
+        root = region.root
+        where = (f"[traced via {root.wrapper} at "
+                 f"{root.func.module.name}:{root.site_line}]")
+        facts = an_ir.facts(fi)
+        for call in facts.calls:
+            key = (mi.path, call.lineno)
+            if key in seen or facts.in_nested(call.lineno):
+                continue
+            tname = cg.terminal_name(call.func)
+            if tname in ("item", "tolist") \
+                    and isinstance(call.func, ast.Attribute):
+                seen.add(key)
+                findings.append(Finding(
+                    mi.path, call.lineno, "CMP003",
+                    f"'.{tname}()' concretizes "
+                    f"'{_unparse(call.func.value)}' under trace "
+                    f"{where}: it raises on tracers, and a host value "
+                    "flowing into a shape recompiles per distinct "
+                    "value; keep the value on-device or hoist the "
+                    "read to the eager caller"))
+            elif tname in ("int", "float") \
+                    and isinstance(call.func, ast.Name) and call.args \
+                    and _has_unsafe_call(call.args[0]):
+                seen.add(key)
+                findings.append(Finding(
+                    mi.path, call.lineno, "CMP003",
+                    f"'{tname}({_unparse(call.args[0])})' concretizes "
+                    f"computed data under trace {where}: shape "
+                    "construction from it is data-dependent — one "
+                    "executable per value (or a TracerError); only "
+                    "static metadata (jnp.shape / .shape / np.prod) "
+                    "may be coerced at trace time"))
+    return findings

@@ -1,0 +1,420 @@
+"""Sharding-discipline pass: collectives, mesh registries, axis names.
+
+Rules
+-----
+SHD001
+    A collective (``lax.psum`` / ``pmax`` / ``axis_index`` / ...) is
+    reachable from a traced region but from no ``shard_map``-rooted one:
+    outside ``shard_map`` (or ``pmap``) there is no named axis to reduce
+    over, so the dispatch fails at trace time — or silently reduces over
+    the wrong axis if an outer transform happens to bind the name. Also
+    fires when the collective names a literal axis that the binding
+    ``shard_map``'s mesh (resolvable literal ``Mesh(..., ("a", ...))``)
+    does not declare.
+SHD002
+    A thread-local registry attribute (``X = threading.local()`` at
+    module level; ``X.attr = ...`` anywhere) is published without a
+    guaranteed scoped reset. The approved shape is a ``@contextmanager``
+    whose ``try``/``finally`` restores the previous value — anything
+    else leaves the registry armed for the next (possibly unsharded)
+    engine in the process when a dispatch raises mid-flight
+    (``kernels/pool_mesh.py`` is the canonical instance).
+SHD003
+    ``NamedSharding(mesh, P(...))`` / ``pool_plane_spec(mesh, ...,
+    axis=...)`` constructed with a literal axis name absent from a mesh
+    whose axis names are resolvable in the same function (a literal
+    ``Mesh(devices, ("data", "model"))`` binding): GSPMD rejects the
+    spec at placement time, far from the typo.
+
+All three stay intra-procedural over the shared IR; unresolvable meshes
+and non-literal axis names simply end the check (the safe direction).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import callgraph as cg
+from repro.analysis import ir
+from repro.analysis.common import Finding
+
+#: named-axis collectives (jax.lax.*) that require a bound axis name
+COLLECTIVES = {
+    "psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "axis_index", "psum_scatter", "axis_size",
+}
+
+#: wrappers that bind named axes — membership in one of their regions
+#: legalizes a collective
+_AXIS_BINDING_WRAPPERS = {"shard_map", "pmap"}
+
+
+def _is_collective(mi: cg.ModuleInfo, call: ast.Call) -> Optional[str]:
+    """Collective name if ``call`` invokes a jax.lax collective."""
+    chain = cg.attr_chain(call.func)
+    if chain is None or chain[-1] not in COLLECTIVES:
+        return None
+    name = chain[-1]
+    if len(chain) == 1:
+        src = mi.from_imports.get(name)
+        if src is not None and src[0].endswith("lax"):
+            return name
+        return None
+    target = mi.module_alias_target(chain[0])
+    prefix = ".".join(([target] if target else [chain[0]]) + chain[1:-1])
+    if prefix.endswith("lax") and (prefix.startswith("jax")
+                                   or prefix == "lax"):
+        return name
+    return None
+
+
+def _collective_axes(call: ast.Call, name: str) -> Set[str]:
+    """Literal axis names the collective references (empty when the axis
+    expression is dynamic)."""
+    nodes: List[ast.AST] = []
+    if name == "axis_index":
+        if call.args:
+            nodes.append(call.args[0])
+    elif len(call.args) >= 2:
+        nodes.append(call.args[1])
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            nodes.append(kw.value)
+    out: Set[str] = set()
+    for n in nodes:
+        for el in (n.elts if isinstance(n, (ast.Tuple, ast.List))
+                   else [n]):
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    return out
+
+
+def _mesh_axes_by_name(fi: cg.FuncInfo) -> Dict[str, Set[str]]:
+    """Local ``name -> declared axis names`` for literal mesh bindings:
+    ``m = Mesh(devs, ("data", "model"))`` / ``axis_names=(...)`` /
+    ``jax.make_mesh((2, 4), ("data", "model"))``."""
+    out: Dict[str, Set[str]] = {}
+    for stmt in ast.walk(fi.node):
+        if not isinstance(stmt, ast.Assign) \
+                or not isinstance(stmt.value, ast.Call):
+            continue
+        call = stmt.value
+        tname = cg.terminal_name(call.func)
+        axes_node: Optional[ast.AST] = None
+        if tname in ("Mesh", "make_mesh") and len(call.args) >= 2:
+            axes_node = call.args[1]
+        for kw in call.keywords:
+            if kw.arg == "axis_names":
+                axes_node = kw.value
+        if axes_node is None or tname not in ("Mesh", "make_mesh"):
+            continue
+        axes: Set[str] = set()
+        if isinstance(axes_node, ast.Constant) \
+                and isinstance(axes_node.value, str):
+            axes = {axes_node.value}
+        elif isinstance(axes_node, (ast.Tuple, ast.List)):
+            for el in axes_node.elts:
+                if not (isinstance(el, ast.Constant)
+                        and isinstance(el.value, str)):
+                    axes = set()
+                    break
+                axes.add(el.value)
+        if not axes:
+            continue
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = axes
+    return out
+
+
+def run(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    findings += _check_collectives(an_ir)
+    findings += _check_tls_registries(an_ir)
+    findings += _check_axis_names(an_ir)
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# SHD001
+# --------------------------------------------------------------------------- #
+def _axis_binding_members(an_ir: "ir.IR") -> Set[cg.FuncInfo]:
+    out: Set[cg.FuncInfo] = set()
+    for region in an_ir.regions:
+        if region.root.wrapper in _AXIS_BINDING_WRAPPERS:
+            out.update(region.members)
+    return out
+
+
+def _declared_axes_for(an_ir: "ir.IR",
+                       fi: cg.FuncInfo) -> Optional[Set[str]]:
+    """Union of literal mesh axes over every shard_map site whose region
+    contains ``fi``; None when any binding mesh is unresolvable."""
+    axes: Set[str] = set()
+    for region in an_ir.regions:
+        if region.root.wrapper not in _AXIS_BINDING_WRAPPERS \
+                or fi not in region.members:
+            continue
+        site = _shard_map_site(an_ir, region)
+        if site is None:
+            return None
+        site_axes = _site_mesh_axes(an_ir, *site)
+        if site_axes is None:
+            return None
+        axes |= site_axes
+    return axes
+
+
+def _shard_map_site(an_ir: "ir.IR", region: cg.Region
+                    ) -> Optional[Tuple[cg.FuncInfo, ast.Call]]:
+    """(enclosing function, shard_map Call) of a region's root site."""
+    mi = region.root.func.module
+    for fi in mi.functions.values():
+        if not isinstance(fi.node, cg.FunctionNode):
+            continue
+        for call in an_ir.facts(fi).calls:
+            hit = an_ir.index.jax_wrapper(mi, call)
+            if hit is not None and hit[0] == "shard_map" \
+                    and call.lineno == region.root.site_line:
+                return fi, call
+    return None
+
+
+def _site_mesh_axes(an_ir: "ir.IR", fi: cg.FuncInfo,
+                    call: ast.Call) -> Optional[Set[str]]:
+    mesh_expr: Optional[ast.AST] = None
+    for kw in call.keywords:
+        if kw.arg == "mesh":
+            mesh_expr = kw.value
+    if mesh_expr is None and len(call.args) >= 2:
+        mesh_expr = call.args[1]
+    if not isinstance(mesh_expr, ast.Name):
+        return None
+    return _mesh_axes_by_name(fi).get(mesh_expr.id)
+
+
+def _check_collectives(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    bound = _axis_binding_members(an_ir)
+    seen: Set[Tuple[str, int]] = set()
+    for fi, regions in an_ir.member_regions.items():
+        mi = fi.module
+        facts = an_ir.facts(fi)
+        for call in facts.calls:
+            name = _is_collective(mi, call)
+            if name is None:
+                continue
+            if facts.in_nested(call.lineno):
+                # the call belongs to a nested def (e.g. a shard_map
+                # body) — that scope's own FuncInfo carries the check
+                continue
+            key = (mi.path, call.lineno)
+            if key in seen:
+                continue
+            if fi not in bound:
+                region = regions[0]
+                seen.add(key)
+                findings.append(Finding(
+                    mi.path, call.lineno, "SHD001",
+                    f"collective '{name}' reachable from a traced "
+                    f"region (via {region.root.wrapper} at "
+                    f"{region.root.func.module.name}:"
+                    f"{region.root.site_line}) but from no shard_map: "
+                    "there is no bound mesh axis to reduce over — move "
+                    "the collective inside the shard_map body or route "
+                    "this path through the sharded dispatcher"))
+                continue
+            declared = _declared_axes_for(an_ir, fi)
+            if declared is None:
+                continue                    # mesh not statically known
+            missing = _collective_axes(call, name) - declared
+            if missing:
+                seen.add(key)
+                findings.append(Finding(
+                    mi.path, call.lineno, "SHD001",
+                    f"collective '{name}' references axis "
+                    f"{sorted(missing)} but the binding shard_map's "
+                    f"mesh only declares {sorted(declared)}: the "
+                    "dispatch fails at trace time (unbound axis name)"))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# SHD002
+# --------------------------------------------------------------------------- #
+def _tls_names(mi: cg.ModuleInfo) -> Set[str]:
+    """Module-level names bound to ``threading.local()`` instances."""
+    out: Set[str] = set()
+    for stmt in mi.tree.body:
+        if not isinstance(stmt, ast.Assign) \
+                or not isinstance(stmt.value, ast.Call):
+            continue
+        chain = cg.attr_chain(stmt.value.func)
+        if chain is None:
+            continue
+        is_local = (chain == ["threading", "local"]
+                    and mi.module_alias_target("threading") == "threading")
+        if not is_local and len(chain) == 1:
+            src = mi.from_imports.get(chain[0])
+            is_local = (src is not None and src == ("threading", "local"))
+        if not is_local:
+            continue
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+    return out
+
+
+def _is_contextmanager(fi: cg.FuncInfo) -> bool:
+    if not isinstance(fi.node, cg.FunctionNode):
+        return False
+    for dec in fi.node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if cg.terminal_name(target) in ("contextmanager",
+                                        "asynccontextmanager"):
+            return True
+    return False
+
+
+def _line_spans(nodes: List[ast.stmt]) -> List[Tuple[int, int]]:
+    return [(n.lineno, n.end_lineno or n.lineno) for n in nodes]
+
+
+def _guarded_spans(fi: cg.FuncInfo, tls: str,
+                   attr: str) -> List[Tuple[int, int]]:
+    """Line spans in which a publication of ``tls.attr`` is reset-safe:
+    ``finally`` (and ``except``) bodies, plus — inside a contextmanager —
+    the whole function when some ``try`` holds the ``yield`` and its
+    ``finally`` restores the same attribute."""
+    spans: List[Tuple[int, int]] = []
+    cm = _is_contextmanager(fi)
+    for t in ast.walk(fi.node):
+        if not isinstance(t, ast.Try):
+            continue
+        spans += _line_spans(t.finalbody)
+        for h in t.handlers:
+            spans += _line_spans(h.body)
+        if not cm or not t.finalbody:
+            continue
+        has_yield = any(isinstance(n, (ast.Yield, ast.YieldFrom))
+                        for b in t.body for n in ast.walk(b))
+        restores = any(
+            isinstance(n, ast.Assign)
+            and any(cg.attr_chain(tg) == [tls, attr] for tg in n.targets)
+            for b in t.finalbody for n in ast.walk(b))
+        if has_yield and restores:
+            spans.append((fi.node.lineno,
+                          fi.node.end_lineno or fi.node.lineno))
+    return spans
+
+
+def _check_tls_registries(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    for mi in an_ir.modules.values():
+        tls = _tls_names(mi)
+        if not tls:
+            continue
+        for fi in mi.functions.values():
+            if not isinstance(fi.node, cg.FunctionNode):
+                continue
+            for stmt in ast.walk(fi.node):
+                if not isinstance(stmt, (ast.Assign, ast.AugAssign)):
+                    continue
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for t in targets:
+                    chain = cg.attr_chain(t)
+                    if chain is None or len(chain) != 2 \
+                            or chain[0] not in tls:
+                        continue
+                    guarded = _guarded_spans(fi, chain[0], chain[1])
+                    if any(a <= stmt.lineno <= b for a, b in guarded):
+                        continue
+                    findings.append(Finding(
+                        mi.path, stmt.lineno, "SHD002",
+                        f"thread-local registry '{chain[0]}."
+                        f"{chain[1]}' published without a guaranteed "
+                        "scoped reset: a raise mid-dispatch leaves it "
+                        "armed for the next (possibly unsharded) "
+                        "engine in the process — publish through a "
+                        "@contextmanager whose try/finally restores "
+                        "the previous value"))
+        # module-level publications are never scoped
+        for stmt in mi.tree.body:
+            if not isinstance(stmt, ast.Assign):
+                continue
+            for t in stmt.targets:
+                chain = cg.attr_chain(t)
+                if chain is not None and len(chain) == 2 \
+                        and chain[0] in tls:
+                    findings.append(Finding(
+                        mi.path, stmt.lineno, "SHD002",
+                        f"thread-local registry '{chain[0]}."
+                        f"{chain[1]}' armed at import time: module-"
+                        "level publication can never be reset by a "
+                        "scope exit"))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# SHD003
+# --------------------------------------------------------------------------- #
+def _partition_spec_axes(call: ast.Call) -> Set[str]:
+    """Literal axis names inside ``P(...)`` / ``PartitionSpec(...)``."""
+    out: Set[str] = set()
+    for a in call.args:
+        for el in (a.elts if isinstance(a, (ast.Tuple, ast.List))
+                   else [a]):
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    return out
+
+
+def _check_axis_names(an_ir: "ir.IR") -> List[Finding]:
+    findings: List[Finding] = []
+    for mi in an_ir.modules.values():
+        for fi in mi.functions.values():
+            if not isinstance(fi.node, cg.FunctionNode):
+                continue
+            meshes = _mesh_axes_by_name(fi)
+            if not meshes:
+                continue
+            for call in an_ir.facts(fi).calls:
+                tname = cg.terminal_name(call.func)
+                if tname == "NamedSharding" and len(call.args) >= 2 \
+                        and isinstance(call.args[0], ast.Name):
+                    declared = meshes.get(call.args[0].id)
+                    spec = call.args[1]
+                    if declared is None \
+                            or not isinstance(spec, ast.Call) \
+                            or cg.terminal_name(spec.func) not in (
+                                "P", "PartitionSpec"):
+                        continue
+                    missing = _partition_spec_axes(spec) - declared
+                    if missing:
+                        findings.append(Finding(
+                            mi.path, call.lineno, "SHD003",
+                            f"NamedSharding over mesh "
+                            f"'{call.args[0].id}' names axis "
+                            f"{sorted(missing)} but the mesh only "
+                            f"declares {sorted(declared)}: GSPMD "
+                            "rejects the spec at placement time"))
+                elif tname in ("pool_plane_spec", "paged_pool_mesh_spec") \
+                        and call.args \
+                        and isinstance(call.args[0], ast.Name):
+                    declared = meshes.get(call.args[0].id)
+                    if declared is None:
+                        continue
+                    for kw in call.keywords:
+                        if kw.arg == "axis" \
+                                and isinstance(kw.value, ast.Constant) \
+                                and isinstance(kw.value.value, str) \
+                                and kw.value.value not in declared:
+                            findings.append(Finding(
+                                mi.path, call.lineno, "SHD003",
+                                f"{tname}(..., axis="
+                                f"'{kw.value.value}') but mesh "
+                                f"'{call.args[0].id}' only declares "
+                                f"{sorted(declared)}: the plane spec "
+                                "can never bind"))
+    return findings

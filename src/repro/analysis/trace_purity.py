@@ -29,6 +29,7 @@ import ast
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.analysis import callgraph as cg
+from repro.analysis import ir
 from repro.analysis.common import Finding
 
 EAGER_PRIMITIVES = {"alloc_blocks", "retain_blocks", "release_blocks",
@@ -104,10 +105,11 @@ def compute_raisers(index: cg.Index) -> Set[cg.FuncInfo]:
     return raisers
 
 
-def run(index: cg.Index) -> List[Finding]:
+def run(an_ir: "ir.IR") -> List[Finding]:
+    index = an_ir.index
     raisers = compute_raisers(index)
     raiser_methods = {fi.name for fi in raisers if fi.cls is not None}
-    regions = cg.traced_regions(index)
+    regions = an_ir.regions
     findings: List[Finding] = []
     seen: Set[Tuple[str, str, int]] = set()
 

@@ -63,10 +63,17 @@ def current_pool_mesh() -> Optional[PoolMeshSpec]:
 @contextlib.contextmanager
 def use_pool_mesh(spec: Optional[PoolMeshSpec]):
     """Install ``spec`` for the duration of a jit dispatch (trace time is
-    what matters — cached executions re-enter for free)."""
+    what matters — cached executions re-enter for free).
+
+    Publication happens *inside* the ``try`` so the registry can never be
+    left armed: whatever raises after entry — including mid-dispatch
+    trace errors in the ``with`` body — unwinds through the ``finally``
+    and restores the previous value, so the next (possibly unsharded)
+    engine on this thread never inherits a stale mesh.
+    """
     prev = getattr(_tls, "spec", None)
-    _tls.spec = spec
     try:
+        _tls.spec = spec
         yield
     finally:
         _tls.spec = prev

@@ -566,6 +566,10 @@ class Engine:
         # compile-free (benchmarks report both numbers).
         self.prewarm = bool(prewarm)
         self.prewarm_prefill = bool(prewarm_prefill)
+        # the warm ladders _prewarm walked (empty on cold engines) —
+        # benchmarks surface these next to the compile-inclusive numbers
+        self.prewarmed_chunk_widths: list = []
+        self.prewarmed_prefill_buckets: list = []
         if self.prewarm and self._paged_in_model:
             self._prewarm()
 
@@ -788,6 +792,8 @@ class Engine:
             # rather than padding: padded appends can overflow the slot
             # buffer under a non-evicting policy and corrupt live slots.
             seg = tokens[:, s:e]
+            # one extra compile for the tail, by choice (see above)
+            # analysis: allow(CMP001)
             logits, state = self._decode_chunk(self.params, state=state,
                                                tokens=seg)
             lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
@@ -960,14 +966,21 @@ class Engine:
         # widths so occupancy restarts from zero each time.
         cap = max(1, self.budget // 2)
         if self.bucket_prefill:
+            # the greedy splitter emits EVERY power of two down to 1 for
+            # ragged tails (rem=13 -> 8, 4, 1), not just widths >=
+            # min_bucket — warm the full ladder or each sub-min_bucket
+            # tail width compiles inside wave 1
             top = 1 << (cap.bit_length() - 1)
-            widths, w = [], min(max(1, self.min_bucket), top)
+            widths, w = [], 1
             while w <= top:
                 widths.append(w)
                 w *= 2
         else:
             widths = [cap]
+        self.prewarmed_chunk_widths = list(widths)
         for w in widths:
+            # deliberate warm ladder: one dispatch per width the
+            # splitter can emit  # analysis: allow(CMP001)
             _, sub = self._paged_chunk(self.params, state=sub,
                                        tokens=jnp.zeros((1, w), jnp.int32))
             sub = self._lane_reset(sub)
@@ -980,6 +993,8 @@ class Engine:
                                              self.min_bucket)))
             dense, b = None, max(1, self.min_bucket)
             while b <= top_b:
+                self.prewarmed_prefill_buckets.append(b)
+                # deliberate warm ladder  # analysis: allow(CMP001)
                 _, dense = self._prefill(
                     self.params, tokens=jnp.zeros((1, b), jnp.int32),
                     n_slots=self.budget,
@@ -1080,6 +1095,8 @@ class Engine:
             else:
                 size = min(rem, cap)
             seg = jnp.asarray(suffix[off:off + size])[None]
+            # bucketing bounds the executable set to the power-of-two
+            # ladder, which _prewarm walks  # analysis: allow(CMP001)
             lseq, state = chunk_fn(self.params, state=state, tokens=seg)
             logits = lseq[:, -1]
             self._note_prefill("chunk", size, size)

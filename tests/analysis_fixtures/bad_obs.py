@@ -1,0 +1,40 @@
+"""Known-bad fixture for the observability-purity pass (OBS001-OBS002).
+
+Every flagged line carries a trailing ``# expect:`` marker; the tests
+assert exact (rule, line) set equality. Parsed only, never imported.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def traced_count(state, metrics):
+    # host instrument mutated under trace: records once at trace time,
+    # then never again on cached executions
+    metrics.tokens.inc()  # expect: OBS001
+    return state + 1
+
+
+@jax.jit
+def traced_span(x, tracer):
+    tracer.instant("decode_step")  # expect: OBS001
+    return x * 2
+
+
+def submit(tracer, rid):
+    # span begun but no end()/discard() for "queued" anywhere
+    tracer.begin(("queued", rid), t0=0.0)  # expect: OBS002
+
+
+def retire(tracer, rid):
+    # end without a begin: dead call, or the begin was dropped
+    tracer.end(("evicted", rid))  # expect: OBS002
+
+
+def balanced(tracer, rid):
+    # a properly paired span: no finding
+    tracer.begin(("running", rid))
+    try:
+        pass
+    finally:
+        tracer.end(("running", rid))

@@ -1,0 +1,62 @@
+"""Known-bad fixture for the recompile-churn pass (CMP001-CMP003).
+
+Every flagged line carries a trailing ``# expect:`` marker; the tests
+assert exact (rule, line) set equality. Parsed only, never imported.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _kernel(params, tokens):
+    return tokens.sum()
+
+
+def _sized(params, n):
+    return jnp.zeros((n,), jnp.float32)
+
+
+step = jax.jit(_kernel)
+sized = jax.jit(_sized, static_argnums=(1,))
+
+
+def stream(params, chunks):
+    # one executable per distinct chunk width: the dispatch shape is
+    # rebuilt from the loop variable every iteration
+    out = []
+    for c in chunks:
+        buf = jnp.zeros((1, c), jnp.int32)
+        out.append(step(params, buf))  # expect: CMP001
+    return out
+
+
+def ragged(params, xs, widths):
+    off = 0
+    for size in widths:
+        seg = xs[off:off + size]
+        logits = step(params, seg)  # expect: CMP001
+        off += size
+    return logits
+
+
+def static_churn(params):
+    out = None
+    for n in range(3):
+        out = sized(params, n)  # expect: CMP001
+    return out
+
+
+def unstable_kwargs(params, opts):
+    # the executable cache keys on the keyword set — a dynamically
+    # built dict recompiles when a key is added or reordered
+    return step(params, **opts)  # expect: CMP002
+
+
+@jax.jit
+def concretize(x):
+    k = int(x.sum())  # expect: CMP003
+    return jnp.zeros((k,), jnp.float32)
+
+
+@jax.jit
+def host_read(x):
+    return x.max().item()  # expect: CMP003

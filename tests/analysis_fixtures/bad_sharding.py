@@ -1,0 +1,55 @@
+"""Known-bad fixture for the sharding-discipline pass (SHD001-SHD003).
+
+Every flagged line carries a trailing ``# expect:`` marker; the tests
+assert exact (rule, line) set equality. Parsed only, never imported.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE = threading.local()
+
+_ACTIVE.spec = None  # expect: SHD002
+
+
+@jax.jit
+def unsharded_reduce(x):
+    # a collective with no shard_map anywhere on the call chain: no
+    # bound axis to reduce over
+    return jax.lax.psum(x, "model")  # expect: SHD001
+
+
+def undeclared_axis(xs, devs):
+    mesh = Mesh(devs, ("data",))
+
+    def body(x):
+        # the binding mesh declares only "data"
+        return jax.lax.pmax(x, "model")  # expect: SHD001
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data"),
+                   out_specs=P("data"))
+    return fn(xs)
+
+
+def install(spec):
+    # bare publication: a raise before the caller's cleanup leaves the
+    # registry armed for the next engine on this thread
+    _ACTIVE.spec = spec  # expect: SHD002
+
+
+def misplaced(xs, devs):
+    mesh = Mesh(devs, ("data", "model"))
+    s = NamedSharding(mesh, P("data", "tensor"))  # expect: SHD003
+    return jax.device_put(xs, s)
+
+
+def bad_plane(mesh_axes_devs, cfg):
+    mesh = Mesh(mesh_axes_devs, ("data", "model"))
+    return pool_plane_spec(mesh, cfg, axis="tensor")  # expect: SHD003
+
+
+def pool_plane_spec(mesh, cfg, axis=None):
+    return axis

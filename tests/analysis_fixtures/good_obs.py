@@ -1,0 +1,40 @@
+"""Known-good twin of ``bad_obs.py``: instruments at the eager dispatch
+site, keyed spans paired (end on retirement, discard on abort). Must
+produce zero findings from every pass.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(state, tokens):
+    return state + tokens.sum()
+
+
+def dispatch(params, state, tokens, metrics, tracer):
+    # observability wraps the dispatch, never lives inside it
+    tracer.begin(("step", id(state)))
+    out = pure_step(state, tokens)
+    metrics.tokens.inc()
+    metrics.queue_depth.set(3)
+    tracer.end(("step", id(state)))
+    return out
+
+
+def lifecycle(tracer, rid, ok):
+    tracer.begin(("queued", rid), t0=0.0)
+    tracer.begin(("running", rid))
+    if ok:
+        tracer.end(("running", rid))
+        tracer.end(("queued", rid))
+    else:
+        # abort path: discard closes the key too
+        tracer.discard(("running", rid))
+        tracer.discard(("queued", rid))
+
+
+def snapshot(metrics):
+    # reads and registrations are host-side and unflagged
+    h = metrics.histogram("latency_s")
+    h.observe(0.25)
+    return metrics

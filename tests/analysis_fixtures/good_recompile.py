@@ -1,0 +1,67 @@
+"""Known-good twin of ``bad_recompile.py``: dispatch shapes that do NOT
+churn — constant-width slices, hoisted extents, literal-key kwargs,
+shape-metadata coercion. Must produce zero findings from every pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _kernel(params, tokens):
+    return tokens.sum()
+
+
+def _sized(params, n):
+    return jnp.zeros((n,), jnp.float32)
+
+
+step = jax.jit(_kernel)
+sized = jax.jit(_sized, static_argnums=(1,))
+
+
+def decode(params, xs, steps):
+    # constant-width slices: the position varies, the shape does not
+    out = None
+    for i in range(steps):
+        tok = xs[:, i:i + 1]
+        nxt = xs[:, i + 1:i + 2]
+        out = step(params, tok)
+        out = step(params, nxt)
+    return out
+
+
+def hoisted(params, chunks):
+    # extent hoisted out of the loop: one executable total
+    width = max(chunks)
+    buf = jnp.zeros((1, width), jnp.int32)
+    out = []
+    for _ in chunks:
+        out.append(step(params, buf))
+    return out
+
+
+def carried(params, xs, steps):
+    # a jit result does not carry shape churn: its shape is the
+    # executable's fixed output shape
+    state = step(params, xs)
+    for i in range(steps):
+        state = step(params, state)
+    return state
+
+
+def stable_static(params, reps):
+    out = None
+    for _ in range(reps):
+        out = sized(params, 8)
+    return out
+
+
+def literal_kwargs(params, x):
+    return step(params, **{"tokens": x})
+
+
+@jax.jit
+def shape_math(x):
+    # static trace-time metadata: jnp.shape/np.prod never see traced data
+    n = int(np.prod(jnp.shape(x)))
+    return x.reshape((n,))

@@ -1,0 +1,70 @@
+"""Known-good twin of ``bad_sharding.py``: the same shapes done right —
+collectives inside a shard_map whose mesh declares the axis, scoped
+registry publication, axis names the mesh knows. Must produce zero
+findings from every pass.
+"""
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE = threading.local()
+
+
+def current_spec():
+    return getattr(_ACTIVE, "spec", None)
+
+
+@contextlib.contextmanager
+def use_spec(spec):
+    # the approved shape: publish inside try, restore in finally — a
+    # raise mid-dispatch can never leave the registry armed
+    prev = getattr(_ACTIVE, "spec", None)
+    try:
+        _ACTIVE.spec = spec
+        yield
+    finally:
+        _ACTIVE.spec = prev
+
+
+def declared_axis(xs, devs):
+    mesh = Mesh(devs, ("data", "model"))
+
+    def body(x):
+        part = jnp.max(x, axis=-1, keepdims=True)
+        total = jax.lax.pmax(part, "model")
+        return x - total
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data", "model"),
+                   out_specs=P("data", "model"))
+    return fn(xs)
+
+
+def dynamic_axis(xs, devs, axis_name):
+    # non-literal axis: the checker cannot prove a typo, stays silent
+    mesh = Mesh(devs, ("data",))
+
+    def body(x):
+        return jax.lax.psum(x, axis_name)
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data"),
+                   out_specs=P("data"))
+    return fn(xs)
+
+
+def well_placed(xs, devs):
+    mesh = Mesh(devs, ("data", "model"))
+    s = NamedSharding(mesh, P("data", "model"))
+    return jax.device_put(xs, s)
+
+
+def good_plane(devs, cfg):
+    mesh = Mesh(devs, ("data", "model"))
+    return pool_plane_spec(mesh, cfg, axis="model")
+
+
+def pool_plane_spec(mesh, cfg, axis=None):
+    return axis

@@ -8,6 +8,7 @@ and the tests assert set equality between markers and findings, so a pass
 that goes blind (misses a finding) fails the same as one that goes noisy
 (extra findings).
 """
+import json
 import re
 import subprocess
 import sys
@@ -42,11 +43,17 @@ def findings(path) -> set:
 # --------------------------------------------------------------------------- #
 # known-bad fixtures: exact rule IDs at exact lines, nothing more
 # --------------------------------------------------------------------------- #
-@pytest.mark.parametrize("name, rule_prefixes", [
+_BAD_FIXTURES = [
     ("bad_trace.py", {"TRC"}),
     ("bad_donation.py", {"DON"}),
     ("bad_pytree.py", {"PYT"}),
-])
+    ("bad_sharding.py", {"SHD"}),
+    ("bad_recompile.py", {"CMP"}),
+    ("bad_obs.py", {"OBS"}),
+]
+
+
+@pytest.mark.parametrize("name, rule_prefixes", _BAD_FIXTURES)
 def test_known_bad_fixture_exact_rules_and_lines(name, rule_prefixes):
     path = FIXTURES / name
     exp = expected_markers(path)
@@ -63,15 +70,18 @@ def test_known_bad_fixture_exact_rules_and_lines(name, rule_prefixes):
 
 def test_all_rule_ids_are_documented_and_exercised():
     exercised = set()
-    for name in ("bad_trace.py", "bad_donation.py", "bad_pytree.py"):
+    for name, _ in _BAD_FIXTURES:
         exercised |= {r for r, _ in expected_markers(FIXTURES / name)}
     assert exercised == set(RULES), (
         "every documented rule must have a known-bad fixture line "
         f"(documented {sorted(RULES)} vs exercised {sorted(exercised)})")
 
 
-def test_known_good_fixture_is_clean():
-    assert findings(FIXTURES / "good.py") == set()
+@pytest.mark.parametrize("name", [
+    "good.py", "good_sharding.py", "good_recompile.py", "good_obs.py",
+])
+def test_known_good_fixture_is_clean(name):
+    assert findings(FIXTURES / name) == set()
 
 
 # --------------------------------------------------------------------------- #
@@ -121,6 +131,33 @@ def test_allow_for_other_rule_does_not_suppress(tmp_path):
     assert findings(p) == {("TRC002", 8)}
 
 
+# one representative suppressible finding per new rule family: the same
+# snippet must fire bare and fall silent under a trailing allow
+_FAMILY_MATRIX = [
+    ("SHD002",
+     "import threading\n\n_TLS = threading.local()\n\n\n"
+     "def install(spec):\n"
+     "    _TLS.spec = spec  {trailing}\n", 7),
+    ("CMP002",
+     "import jax\n\nstep = jax.jit(lambda params: params)\n\n\n"
+     "def go(params, opts):\n"
+     "    return step(**opts)  {trailing}\n", 7),
+    ("OBS002",
+     "def submit(tracer, rid):\n"
+     "    tracer.begin(('queued', rid))  {trailing}\n", 2),
+]
+
+
+@pytest.mark.parametrize("rule, template, line", _FAMILY_MATRIX)
+def test_suppression_matrix_new_families(tmp_path, rule, template, line):
+    p = tmp_path / "snippet.py"
+    p.write_text(template.format(trailing=""))
+    assert findings(p) == {(rule, line)}
+    p.write_text(template.format(
+        trailing=f"# analysis: allow({rule})"))
+    assert findings(p) == set()
+
+
 # --------------------------------------------------------------------------- #
 # rules filter + CLI contract
 # --------------------------------------------------------------------------- #
@@ -147,6 +184,109 @@ def test_cli_fail_on_warn_exit_codes(tmp_path):
     # without --fail-on-warn findings are reported but the exit is clean
     soft = run(str(FIXTURES / "bad_trace.py"))
     assert soft.returncode == 0 and "TRC001" in soft.stdout
+
+
+def _cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd,
+        env={"PYTHONPATH": str(SRC.parent), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_summary_reports_family_counts():
+    n = len(expected_markers(FIXTURES / "bad_trace.py"))
+    out = _cli(str(FIXTURES / "bad_trace.py")).stdout
+    assert f"repro.analysis: {n} findings (TRC {n})" in out
+    # --rules restricts the summary too
+    k = sum(1 for r, _ in expected_markers(FIXTURES / "bad_trace.py")
+            if r == "TRC002")
+    out = _cli("--rules", "TRC002", str(FIXTURES / "bad_trace.py")).stdout
+    assert f"repro.analysis: {k} findings (TRC {k})" in out
+
+
+def test_cli_list_rules_respects_rules_filter():
+    full = _cli("--list-rules").stdout
+    assert all(rule in full for rule in RULES)
+    filtered = _cli("--list-rules", "--rules", "SHD").stdout
+    assert "SHD001" in filtered and "SHD003" in filtered
+    assert "TRC001" not in filtered and "CMP001" not in filtered
+    assert "3 rules (SHD 3)" in filtered
+
+
+def test_cli_json_format():
+    r = _cli("--format", "json", str(FIXTURES / "bad_obs.py"))
+    doc = json.loads(r.stdout)          # stdout is pure JSON
+    assert doc["tool"] == "repro.analysis"
+    assert doc["counts"] == {"OBS": 4}
+    assert {f["rule"] for f in doc["findings"]} == {"OBS001", "OBS002"}
+    assert all(f["line"] > 0 and f["path"] for f in doc["findings"])
+    # the summary moved to stderr so the document stays parseable
+    assert "repro.analysis:" in r.stderr
+
+
+def test_cli_sarif_validates_against_schema():
+    jsonschema = pytest.importorskip("jsonschema")
+    r = _cli("--format", "sarif", str(FIXTURES / "bad_sharding.py"))
+    doc = json.loads(r.stdout)
+    schema = json.loads(
+        (FIXTURES / "sarif-2.1.0-subset.schema.json").read_text())
+    jsonschema.validate(doc, schema)
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    assert run["tool"]["driver"]["name"] == "repro.analysis"
+    assert {r_["id"] for r_ in run["tool"]["driver"]["rules"]} \
+        == set(RULES)
+    got = {(res["ruleId"],
+            res["locations"][0]["physicalLocation"]["region"]["startLine"])
+           for res in run["results"]}
+    assert got == expected_markers(FIXTURES / "bad_sharding.py")
+
+
+def test_cli_sarif_rule_catalogue_respects_rules_filter():
+    r = _cli("--format", "sarif", "--rules", "OBS",
+             str(FIXTURES / "bad_obs.py"))
+    run = json.loads(r.stdout)["runs"][0]
+    assert {r_["id"] for r_ in run["tool"]["driver"]["rules"]} \
+        == {"OBS001", "OBS002"}
+    assert {res["ruleId"][:3] for res in run["results"]} == {"OBS"}
+
+
+def test_baseline_roundtrip(tmp_path):
+    bad = FIXTURES / "bad_recompile.py"
+    base = tmp_path / "analysis-baseline.json"
+    wrote = _cli("--baseline", str(base), "--write-baseline", str(bad))
+    assert wrote.returncode == 0 and base.exists()
+    data = json.loads(base.read_text())
+    assert data["tool"] == "repro.analysis"
+    assert len(data["fingerprints"]) == len(expected_markers(bad))
+    # with the baseline applied the same tree gates clean
+    gated = _cli("--fail-on-warn", "--baseline", str(base), str(bad))
+    assert gated.returncode == 0
+    assert "repro.analysis: 0 findings" in gated.stdout
+    # a NEW finding (same rule, new line text) is not masked
+    snippet = tmp_path / "fresh.py"
+    snippet.write_text(
+        "import jax\nimport jax.numpy as jnp\n\n"
+        "step = jax.jit(lambda params, t: t)\n\n\n"
+        "def go(params, chunks):\n"
+        "    for c in chunks:\n"
+        "        out = step(params, jnp.zeros((1, c)))\n"
+        "    return out\n")
+    fresh = _cli("--fail-on-warn", "--baseline", str(base), str(snippet))
+    assert fresh.returncode == 1 and "CMP001" in fresh.stdout
+
+
+def test_baseline_fingerprint_survives_line_drift(tmp_path):
+    src = (FIXTURES / "bad_obs.py").read_text()
+    moved = tmp_path / "moved.py"
+    moved.write_text(src)
+    base = tmp_path / "base.json"
+    _cli("--baseline", str(base), "--write-baseline", str(moved))
+    # prepend a comment block: every finding shifts lines but keeps its
+    # (rule, line-text) fingerprint
+    moved.write_text("# drift\n# drift\n" + src)
+    gated = _cli("--fail-on-warn", "--baseline", str(base), str(moved))
+    assert gated.returncode == 0, gated.stdout
 
 
 # --------------------------------------------------------------------------- #

@@ -99,6 +99,26 @@ def test_pool_mesh_registry_is_scoped_shard_dispatch():
     assert not PoolMeshSpec(mesh=None).sharded
 
 
+def test_pool_mesh_registry_resets_when_dispatch_raises():
+    """A raise mid-dispatch (trace error, OOM, user abort) must unwind
+    the registry: the next engine on this thread — possibly unsharded —
+    would otherwise trace against a stale mesh (SHD002's scenario)."""
+    spec = PoolMeshSpec(mesh=None, kv_axis="model")
+    with pytest.raises(RuntimeError, match="mid-dispatch"):
+        with use_pool_mesh(spec):
+            assert current_pool_mesh() is spec
+            raise RuntimeError("mid-dispatch")
+    assert current_pool_mesh() is None
+    # nested: the inner raise restores the *outer* spec, not None
+    outer = PoolMeshSpec(mesh=None, slot_axis="model")
+    with use_pool_mesh(outer):
+        with pytest.raises(RuntimeError):
+            with use_pool_mesh(spec):
+                raise RuntimeError("inner")
+        assert current_pool_mesh() is outer
+    assert current_pool_mesh() is None
+
+
 # --------------------------------------------------------------------- #
 # Engine construction-time validation
 # --------------------------------------------------------------------- #
